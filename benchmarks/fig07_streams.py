@@ -1,0 +1,23 @@
+"""Paper Fig. 7 — bandwidth vs number of concurrent data streams.
+
+The paper sweeps 3..20 simultaneously-read arrays and finds the peak at
+11 streams (prefetch-engine occupancy). The TPU analogue is concurrent
+HBM->VMEM DMA streams = concurrent BlockSpec operands; we sweep the same
+k with the nstream pattern.
+"""
+from repro.core import Driver, DriverConfig, nstream
+
+from .common import csv_line, emit
+
+
+def run(quick: bool = True) -> list[str]:
+    out = []
+    ks = [1, 2, 3, 5, 7, 11, 15, 20] if quick else list(range(1, 21))
+    n = 1 << 14
+    for k in ks:
+        d = Driver(lambda env, k=k: nstream(k),
+                   DriverConfig(template="independent", programs=4,
+                                ntimes=8, reps=2))
+        rec = d.run([n])[0]
+        out.append(csv_line(f"fig07/streams{k}/n{n}", rec))
+    return emit(out)

@@ -1,0 +1,22 @@
+"""Paper Fig. 15 — Jacobi 3D (7-pt), unified vs independent layouts."""
+from repro.core import Driver, DriverConfig, jacobi3d
+
+from .common import csv_line, emit
+
+
+def run(quick: bool = True) -> list[str]:
+    out = []
+    grids3 = [10, 18] if quick else [10, 18, 34, 66]
+    variants = [
+        ("unified", DriverConfig(template="unified", programs=4,
+                                 ntimes=4, reps=2, validate_n=10)),
+        ("independent", DriverConfig(template="independent", programs=4,
+                                     ntimes=4, reps=2, validate_n=10)),
+    ]
+    for name, cfg in variants:
+        d = Driver(lambda env: jacobi3d(), cfg)
+        d.validate()
+        for n in grids3:
+            rec = d.run([n])[0]
+            out.append(csv_line(f"fig15/{name}/n{n}", rec))
+    return emit(out)

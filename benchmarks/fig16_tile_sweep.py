@@ -1,0 +1,39 @@
+"""Paper Fig. 16 — spatial tile-size sweep for Jacobi 3D.
+
+The paper sweeps 2D (partial) blocking tiles 16..64 and finds no win on
+large-cache CPUs. The TPU adaptation sweeps the (bj, bk) output-tile
+shape of the blocked Pallas kernel AND compares the xyz-blocked kernel
+against the streaming (partial-block) kernel, whose halo traffic model is
+derived in kernels/stencil.py. Derived column = achieved GB/s (CPU
+interpret numbers; the structural result — streaming >= xyz at equal
+tiles, driven by halo re-reads — is substrate-independent).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.measure import time_fn
+from repro.kernels import ops
+
+from .common import emit
+
+
+def run(quick: bool = True) -> list[str]:
+    out = []
+    n = 34 if quick else 66
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, n, n), jnp.float32)
+    interior = (n - 2) ** 3
+    bytes_moved = 2 * interior * 4
+    tiles = [8, 16, 32] if quick else [8, 16, 32, 64]
+    for bj in tiles:
+        for bk in tiles:
+            if (n - 2) % bj or (n - 2) % bk:
+                continue
+            t = time_fn(lambda bj=bj, bk=bk: ops.jacobi3d_streaming(
+                x, block=(bj, bk)), reps=2)
+            out.append(f"fig16/stream/b{bj}x{bk},{t.seconds*1e6:.2f},"
+                       f"{bytes_moved/t.seconds/1e9:.3f}GB/s")
+            t2 = time_fn(lambda bj=bj, bk=bk: ops.jacobi3d(
+                x, block=(8, bj, bk)), reps=2)
+            out.append(f"fig16/xyz/b8x{bj}x{bk},{t2.seconds*1e6:.2f},"
+                       f"{bytes_moved/t2.seconds/1e9:.3f}GB/s")
+    return emit(out)

@@ -1,0 +1,53 @@
+"""Inject the final dry-run + roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.inject_tables
+"""
+from __future__ import annotations
+
+import collections
+import pathlib
+
+from . import roofline as rl
+from .summarize import dryrun_table, load
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def roofline_summary(rows) -> str:
+    dom = collections.Counter(r["dominant"] for r in rows)
+    worst = sorted(rows, key=lambda r: -max(
+        r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]))[:5]
+    comp_bound = [r for r in rows if r["dominant"] == "compute"]
+    lines = [
+        f"**Summary over {len(rows)} compiled cells**: dominant term — "
+        + ", ".join(f"{k}: {v}" for k, v in dom.most_common()) + ".",
+        "",
+        f"Compute-bound cells (the roofline goal): {len(comp_bound)} — "
+        + ", ".join(sorted({r['arch'] + '/' + r['shape']
+                            for r in comp_bound})[:12]) + ".",
+        "",
+        "Heaviest remaining cells (dominant-term seconds):",
+    ]
+    for r in worst:
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        lines.append(
+            f"* {r['arch']}/{r['shape']}/{r['mesh']}: {t:.2f}s "
+            f"{r['dominant']} (compute {r['t_compute_s']:.2f}s) — {r['hint']}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    cells = load("experiments/dryrun")
+    rows = rl.load_all()
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table(cells))
+    md = md.replace("<!-- ROOFLINE_TABLE -->", rl.markdown_table())
+    md = md.replace("<!-- ROOFLINE_SUMMARY -->", roofline_summary(rows))
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated:", len(cells), "cells,", len(rows),
+          "roofline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Analytic FLOP/byte models per (arch x shape) — the roofline numerators.
+
+``cost_analysis()`` counts while-loop (scan) bodies once, so compiled
+numbers undercount layer-stacked work; these closed-form counts are the
+whole-step ground truth the roofline uses (the HLO-derived values are
+reported alongside as a cross-check; see launch/hlo_analysis.py for the
+trip-corrected collective counts).
+
+Conventions: matmul flops = 2*m*n*k; backward = 2x forward; attention
+counts q@k and p@v (causal factor 1/2 applied; the implementation
+currently computes masked full scores, so an `impl_factor` of 2 on the
+attention term is reported separately as MODEL/HLO waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ArchConfig, Shape
+
+__all__ = ["step_flops", "active_params", "StepCost"]
+
+
+@dataclasses.dataclass
+class StepCost:
+    flops: float               # whole-step model flops (global, fwd[+bwd])
+    weight_bytes: float        # param bytes read per step (global)
+    act_bytes: float           # activation/cache bytes moved (global, approx)
+
+    @property
+    def total_bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Params touched per token (MoE: shared + top_k routed only)."""
+    from repro.runtime.sharding import param_count
+
+    total = param_count(cfg)
+    if not cfg.moe:
+        return float(total)
+    moe = cfg.moe
+    expert_p = 3 * cfg.d_model * moe.d_ff_expert
+    n_moe_layers = cfg.n_layers - moe.first_k_dense
+    routed_total = n_moe_layers * moe.n_routed * expert_p
+    routed_active = n_moe_layers * moe.top_k * expert_p
+    return float(total - routed_total + routed_active)
+
+
+def _attn_flops(cfg: ArchConfig, B: int, Sq: int, Skv: int,
+                causal: bool) -> float:
+    """q@k + p@v flops for one layer (global, forward)."""
+    if cfg.mla:
+        hd_qk = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        hd_v = cfg.mla.v_head_dim
+    else:
+        hd_qk = hd_v = cfg.head_dim
+    eff = 0.5 if (causal and Sq == Skv) else 1.0
+    return 2.0 * B * Sq * Skv * cfg.n_heads * (hd_qk + hd_v) * eff
+
+
+def _layer_seq_flops(cfg: ArchConfig, B: int, Sq: int, Skv: int,
+                     causal: bool) -> float:
+    """Per-layer attention-like sequence-mixing flops (global, forward)."""
+    if cfg.ssm is not None and cfg.family == "ssm":
+        # mLSTM chunked: intra-chunk (Sq*chunk) + state path
+        ch = cfg.ssm.chunk if Sq > 1 else 1
+        N = cfg.ssm.head_dim
+        H = cfg.n_heads
+        return 2.0 * B * Sq * ch * H * N + 4.0 * B * Sq * H * N * N / max(ch, 1)
+    if cfg.ssm is not None and cfg.family == "hybrid":
+        ch = cfg.ssm.chunk if Sq > 1 else 1
+        d_in = cfg.ssm.expand * cfg.d_model
+        N = cfg.ssm.d_state
+        intra = 2.0 * B * Sq * ch * (d_in + 2 * N)
+        return intra
+    win = cfg.window
+    if win and cfg.global_every:
+        # gemma3: 5/6 layers windowed, 1/6 global — average
+        loc = _attn_flops(cfg, B, Sq, min(Skv, win), causal=False)
+        glo = _attn_flops(cfg, B, Sq, Skv, causal)
+        k = cfg.global_every
+        return ((k - 1) * loc + glo) / k
+    if win and cfg.family == "hybrid":
+        return _attn_flops(cfg, B, Sq, min(Skv, win), causal=False)
+    return _attn_flops(cfg, B, Sq, Skv, causal)
+
+
+def step_flops(cfg: ArchConfig, shape: Shape) -> StepCost:
+    B, S = shape.global_batch, shape.seq_len
+    n_active = active_params(cfg)
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_mat = n_active - emb              # matmul-participating params
+
+    if shape.kind == "train":
+        tokens = B * S
+        dense = 6.0 * n_mat * tokens + 6.0 * tokens * cfg.d_model * cfg.vocab_size
+        attn = 3.0 * cfg.n_layers * _layer_seq_flops(cfg, B, S, S, True)
+        flops = dense + attn
+        weight_bytes = 2.0 * n_active * 3  # fwd + bwd reread + optimizer
+        act_bytes = tokens * cfg.d_model * 2.0 * cfg.n_layers * 4
+        return StepCost(flops, weight_bytes, act_bytes)
+
+    if shape.kind == "prefill":
+        tokens = B * S
+        dense = 2.0 * n_mat * tokens
+        attn = cfg.n_layers * _layer_seq_flops(cfg, B, S, S, True)
+        flops = dense + attn + 2.0 * B * cfg.d_model * cfg.vocab_size
+        cache_entry = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                       if cfg.mla else 2 * cfg.n_kv_heads * cfg.head_dim)
+        act_bytes = tokens * (cfg.d_model * 2.0 * cfg.n_layers
+                              + cache_entry * 2.0 * cfg.n_layers)
+        return StepCost(flops, 2.0 * n_active, act_bytes)
+
+    # decode: one token per sequence against a cache of length S
+    tokens = B
+    dense = 2.0 * n_mat * tokens + 2.0 * B * cfg.d_model * cfg.vocab_size
+    attn = cfg.n_layers * _layer_seq_flops(cfg, B, 1, S, False)
+    flops = dense + attn
+    cache_entry = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                   if cfg.mla else 2 * cfg.n_kv_heads * cfg.head_dim)
+    if cfg.ssm is not None and cfg.family == "ssm":
+        cache_bytes = 4.0 * B * cfg.n_layers * cfg.n_heads * cfg.ssm.head_dim ** 2
+    elif cfg.ssm is not None:
+        d_in = cfg.ssm.expand * cfg.d_model
+        H = d_in // cfg.ssm.head_dim
+        n_attn = cfg.n_layers // max(cfg.hybrid_attn_every, 1)
+        cache_bytes = (4.0 * B * cfg.n_layers * H * cfg.ssm.d_state
+                       * cfg.ssm.head_dim
+                       + 2.0 * B * min(S, cfg.window or S) * n_attn
+                       * 2 * cfg.n_kv_heads * cfg.head_dim)
+    else:
+        skv = S
+        if cfg.window and cfg.global_every:
+            k = cfg.global_every
+            skv = ((k - 1) * min(S, cfg.window) + S) / k
+        cache_bytes = B * skv * cache_entry * 2.0 * cfg.n_layers
+    # decode reads all active weights + the whole cache once per token
+    return StepCost(flops, 2.0 * n_active, cache_bytes)

@@ -1,0 +1,55 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05,fig16]
+
+Prints ``name,us_per_call,derived`` CSV (the paper's machine-parsable
+output contract). The roofline module additionally refreshes
+experiments/roofline.csv from the dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig05_barriers",
+    "fig06_dataspaces",
+    "fig07_streams",
+    "fig09_interleave",
+    "fig10_counters",
+    "fig12_jacobi1d",
+    "fig14_jacobi2d",
+    "fig15_jacobi3d",
+    "fig16_tile_sweep",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if only and name not in only and name.split("_")[0] not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=not args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(f"benchmark modules failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Build the EXPERIMENTS.md §Dry-run table + comparisons vs the v0 baseline.
+
+    PYTHONPATH=src python -m benchmarks.summarize [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def load(dirname: str) -> dict[tuple, dict]:
+    out = {}
+    for f in sorted((ROOT / dirname).glob("*.json")):
+        d = json.loads(f.read_text())
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(cells: dict) -> str:
+    md = ["| arch | shape | mesh | status | live GiB | fits 16G | "
+          "collective GB/step | HLO flops/dev | mb |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), d in sorted(cells.items()):
+        if "skipped" in d:
+            md.append(f"| {a} | {s} | {m} | SKIP (full-attn 512k) | – | – | – | – | – |")
+            continue
+        if "error" in d:
+            md.append(f"| {a} | {s} | {m} | **FAIL** | – | – | – | – | – |")
+            continue
+        mem = d["memory"]
+        md.append(
+            f"| {a} | {s} | {m} | OK | {fmt_gib(mem['live_bytes'])} | "
+            f"{'yes' if mem['fits_16g'] else 'NO'} | "
+            f"{d['collectives']['total_bytes']/1e9:.1f} | "
+            f"{d['cost']['flops']:.2e} | {d.get('microbatches','–')} |"
+        )
+    return "\n".join(md)
+
+
+def compare(before: dict, after: dict) -> str:
+    md = ["| cell | live GiB before→after | collective GB before→after |",
+          "|---|---|---|"]
+    for key in sorted(after):
+        b, a = before.get(key), after[key]
+        if not b or "memory" not in b or "memory" not in a:
+            continue
+        lb, la = b["memory"]["live_bytes"], a["memory"]["live_bytes"]
+        cb, ca = (b["collectives"]["total_bytes"],
+                  a["collectives"]["total_bytes"])
+        if abs(lb - la) / max(lb, 1) < 0.05 and abs(cb - ca) / max(cb, 1) < 0.05:
+            continue
+        md.append(
+            f"| {key[0]}/{key[1]}/{key[2]} | {fmt_gib(lb)}→{fmt_gib(la)} | "
+            f"{cb/1e9:.1f}→{ca/1e9:.1f} |"
+        )
+    return "\n".join(md)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--baseline", default="experiments/dryrun_v0_baseline")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print("## Dry-run table\n")
+    print(dryrun_table(cells))
+    base_dir = ROOT / args.baseline
+    if base_dir.exists():
+        print("\n## Changes vs v0 baseline\n")
+        print(compare(load(args.baseline), cells))
+    ok = sum(1 for d in cells.values()
+             if "skipped" not in d and "error" not in d)
+    fit = sum(1 for d in cells.values()
+              if d.get("memory", {}).get("fits_16g"))
+    skip = sum(1 for d in cells.values() if "skipped" in d)
+    fail = sum(1 for d in cells.values() if "error" in d)
+    print(f"\ncells: {len(cells)} | ok: {ok} | skip: {skip} | fail: {fail} "
+          f"| fits-16GiB: {fit}/{ok}")
+
+
+if __name__ == "__main__":
+    main()

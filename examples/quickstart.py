@@ -1,0 +1,47 @@
+"""AdaptMemBench quickstart: define a pattern, pick a driver template,
+measure it across working sets, and test an optimization — the paper's
+whole workflow in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    Driver, DriverConfig, Variant, identity, sweep, triad,
+)
+
+# 1. A pattern specification (the paper's header + ISCC files).
+#    triad() is built in; see repro/core/pattern.py for how to write one.
+pattern = lambda env: triad()  # noqa: E731
+
+# 2. A driver template: independent data spaces, 4 parallel programs
+#    (paper Listing 2), fused repetition loop (the `nowait` analogue).
+config = DriverConfig(template="independent", programs=4, ntimes=16, reps=3)
+driver = Driver(pattern, config)
+
+# 3. Validation against the serial oracle (the <kernel>_val.in stage).
+driver.validate()
+print("validation: OK")
+
+# 4. Measure across working sets (bytes per stream crosses cache levels).
+print("\nworking-set sweep:")
+print("n,level,GB/s,us_per_sweep")
+for rec in driver.run([1 << 10, 1 << 13, 1 << 16, 1 << 19]):
+    print(f"{rec.n},{rec.level},{rec.gbs:.3f},{rec.seconds*1e6:.1f}")
+
+# 5. Test an optimization: the paper's interleave-by-2 schedule (Fig. 9)
+#    is one line — fork the schedule, sweep both, keep the winner.
+result = sweep(
+    pattern,
+    [Variant("naive", config),
+     Variant("interleave2",
+             DriverConfig(template="independent", programs=4, ntimes=16,
+                          reps=3, schedule=identity().interleave("i", 2)))],
+    [1 << 13],
+)
+print("\noptimization sweep:")
+print(result.table())
+print(f"\nbest variant: {result.best[0]} "
+      f"({result.best[1].gbs:.3f} GB/s)")

@@ -1,0 +1,61 @@
+"""Stencil tiling study (paper §III-B) through the framework: generate
+Jacobi-3D benchmark drivers for several tiling schedules via the
+polyhedral engine, validate each against the serial oracle, and measure —
+then run the dedicated Pallas kernels (blocked vs streaming) and report
+the halo-traffic model that explains the result.
+
+    PYTHONPATH=src python examples/stencil_tiling.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import Driver, DriverConfig, identity, jacobi3d  # noqa: E402
+from repro.core.measure import time_fn  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+N = 34  # grid (interior 32^3); the paper uses up to 256^3 on a Xeon
+
+print(f"Jacobi 3D, grid {N}^3 — schedule variants via the polyhedral engine")
+print("variant,GB/s,us_per_sweep")
+variants = {
+    "naive": identity(),
+    "xyz_16": identity().tile("i", 16).tile("j", 16).tile("k", 16),
+    "partial_16x16": identity().tile("j", 16).tile("k", 16),
+    "partial_8x32": identity().tile("j", 8).tile("k", 32),
+}
+for name, sch in variants.items():
+    gb = [b for b in ("i_T", "j_T", "k_T") if b in [
+        f"{d}_T" for d in ("i", "j", "k")]]
+    grid_bands = tuple(b for b in ("i_T", "j_T", "k_T")
+                       if any(t.dim + "_T" == b
+                              for t in sch.transforms if hasattr(t, "size")))
+    cfg = DriverConfig(template="unified", programs=1, ntimes=2, reps=2,
+                       backend="pallas" if grid_bands else "jax",
+                       schedule=sch, grid_bands=grid_bands or None,
+                       validate_n=34)  # interior 32: divisible by all tiles
+    d = Driver(lambda env: jacobi3d(), cfg)
+    d.validate()
+    rec = d.run([N])[0]
+    print(f"{name},{rec.gbs:.3f},{rec.seconds*1e6:.1f}")
+
+print("\ndedicated Pallas kernels (blocked vs streaming):")
+x = jax.random.normal(jax.random.PRNGKey(0), (N, N, N), jnp.float32)
+bytes_moved = 2 * (N - 2) ** 3 * 4
+for name, fn in {
+    "xyz_blocked_8x8x16": lambda: ops.jacobi3d(x, block=(8, 8, 16)),
+    "streaming_8x16": lambda: ops.jacobi3d_streaming(x, block=(8, 16)),
+    "streaming_16x32": lambda: ops.jacobi3d_streaming(x, block=(16, 32)),
+}.items():
+    t = time_fn(fn, reps=3)
+    print(f"{name},{bytes_moved/t.seconds/1e9:.3f}GB/s,{t.seconds*1e6:.1f}us")
+
+print("""
+halo-traffic model (why streaming wins on TPU, DESIGN.md §2):
+  xyz blocking  reads (1+2/b)^3 x minimal bytes  (~42% extra at b=16)
+  streaming     reads (1+2/bj)(1+2/bk) x minimal (the i dim is exact)
+The paper's negative result for spatial tiling on large-cache CPUs maps
+to: on TPU, pick the layout that keeps the streamed dim un-tiled.""")

@@ -1,0 +1,92 @@
+"""End-to-end training driver: a ~100M-param LM trained for a few hundred
+steps on CPU with the full production stack — sharded-ready step
+functions, AdamW + cosine schedule, gradient compression, async
+checkpointing, and the fault-tolerant loop (with an injected transient
+fault to show the retry path).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--dim 256]
+
+(The same code path scales to the pod configs — see launch/train.py and
+the dry-run artifacts; this example keeps shapes CPU-friendly.)
+"""
+import argparse
+import dataclasses
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config import Shape, get_config  # noqa: E402
+from repro.data.pipeline import Loader, SyntheticSource  # noqa: E402
+from repro.launch.steps import make_train_step  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.optim import adamw, cosine_schedule, error_feedback  # noqa: E402
+from repro.runtime.fault_tolerance import (  # noqa: E402
+    FTConfig, FaultTolerantLoop,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    # a ~100M-param InternLM2-family config (vocab dominates at this scale)
+    cfg = dataclasses.replace(
+        get_config("internlm2-1.8b"),
+        name="internlm2-100m", n_layers=args.layers, d_model=args.dim,
+        n_heads=max(4, args.dim // 64), n_kv_heads=max(2, args.dim // 128),
+        d_ff=args.dim * 4, head_dim=0, vocab_size=92544 // 2,
+    )
+    cfg = dataclasses.replace(cfg, head_dim=cfg.d_model // cfg.n_heads)
+
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    import numpy as np
+    n = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M  "
+          f"({cfg.n_layers}L d{cfg.d_model})")
+
+    opt = adamw(cosine_schedule(3e-4, warmup=20, total=args.steps),
+                weight_decay=0.01)
+    if args.compress:
+        opt = error_feedback(opt)
+    step = jax.jit(make_train_step(cfg, None, opt), donate_argnums=0)
+    state = {"params": params, "opt": opt.init(params)}
+
+    src = SyntheticSource(cfg.vocab_size, args.batch, args.seq, seed=11)
+    loader = Loader(src, None)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    faults = {args.steps // 2: "transient"}  # show the retry path once
+    loop = FaultTolerantLoop(
+        step, state, FTConfig(ckpt_dir, ckpt_every=100),
+        failure_hook=lambda s: faults.get(s))
+
+    t0 = time.time()
+    out = loop.run(loader, args.steps)
+    loader.close()
+    losses = [float(m["loss"]) for m in out["metrics"]]
+    dt = time.time() - t0
+    print(f"steps={len(losses)}  wall={dt:.1f}s "
+          f"({dt/len(losses)*1e3:.0f} ms/step)")
+    for i in range(0, len(losses), max(1, len(losses) // 10)):
+        print(f"  step {i:4d}  loss {losses[i]:.4f}")
+    print(f"  step {len(losses)-1:4d}  loss {losses[-1]:.4f}")
+    print(f"events: {out['events']}")
+    assert losses[-1] < losses[0], "loss did not improve"
+    print("OK: loss improved "
+          f"{losses[0]:.3f} -> {losses[-1]:.3f}; ckpts in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

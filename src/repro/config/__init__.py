@@ -1,0 +1,7 @@
+from .base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, Shape, SHAPES
+from .registry import get_config, list_archs, register
+
+__all__ = [
+    "ArchConfig", "MLAConfig", "MoEConfig", "SSMConfig", "Shape", "SHAPES",
+    "get_config", "list_archs", "register",
+]

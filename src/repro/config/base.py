@@ -1,0 +1,160 @@
+"""Architecture / run configuration system.
+
+One frozen dataclass describes every supported architecture; per-arch
+modules in ``repro.configs`` instantiate it with the published numbers.
+``reduced()`` produces the CPU-smoke-test version of the same family
+(same block structure, tiny dims). ``Shape`` describes the assigned
+input-shape cells (train / prefill / decode / long-context-decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["MLAConfig", "MoEConfig", "SSMConfig", "ArchConfig", "Shape", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2/Kimi-K2 family)."""
+
+    q_lora_rank: int = 0          # 0 = no q compression (DSv2-Lite)
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int = 64
+    n_shared: int = 2
+    top_k: int = 6
+    d_ff_expert: int = 1408
+    first_k_dense: int = 1        # leading dense layers (DS family)
+    capacity_factor: float = 1.25
+    router_scale: float = 1.0     # routed_scaling_factor
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba2"          # mamba2 | xlstm
+    d_state: int = 64
+    head_dim: int = 64            # SSM head size (d_inner // head_dim heads)
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256              # SSD / chunked-parallel block length
+    slstm_every: int = 0          # xlstm: every k-th block is an sLSTM
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    act: str = "silu"             # silu | gelu
+    rope_theta: float = 1e4
+    rmsnorm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # local/global attention (gemma3): window size + pattern period
+    window: int = 0               # 0 = full attention everywhere
+    global_every: int = 0         # e.g. 6 -> layers 5,11,... are global
+    # MoE / MLA
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    # SSM / hybrid
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 0    # zamba2: shared attn block every k blocks
+    # modality frontends (stubs; input_specs() provides embeddings)
+    frontend: Optional[str] = None  # audio | vision
+    n_codebooks: int = 4          # audio: EnCodec codebooks
+    vision_tokens: int = 1024     # vlm: patch-embedding count in specs
+    # scan the layer stack (memory-efficient compile); hybrids scan groups
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k? (sliding-window / SSM / hybrid)."""
+        if self.ssm is not None:
+            return True
+        return self.window > 0
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are decoder-style
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw: dict = dict(
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, 4),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+            scan_layers=self.scan_layers,
+        )
+        if self.moe:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_routed=8, n_shared=min(self.moe.n_shared, 1),
+                top_k=2, d_ff_expert=32,
+            )
+        if self.mla:
+            kw["mla"] = MLAConfig(
+                q_lora_rank=(32 if self.mla.q_lora_rank else 0),
+                kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                v_head_dim=16,
+            )
+        if self.ssm:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=16,
+            )
+        if self.window:
+            kw["window"] = 8
+        if self.global_every:
+            # keep >=2 full local/global groups + a tail for coverage
+            kw["global_every"] = 3
+            kw["n_layers"] = 7
+        if self.frontend == "vision":
+            kw["vision_tokens"] = 8
+        if self.hybrid_attn_every:
+            kw["hybrid_attn_every"] = 2
+            kw["n_layers"] = 4
+        if self.ssm and self.ssm.slstm_every:
+            kw["ssm"] = dataclasses.replace(kw["ssm"], slstm_every=2)
+            kw["n_layers"] = 4
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}

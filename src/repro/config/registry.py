@@ -1,0 +1,48 @@
+"""Registry mapping --arch ids to ArchConfig constructors."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from .base import ArchConfig
+
+__all__ = ["register", "get_config", "list_archs"]
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+
+# module name (repro.configs.<mod>) per arch id
+_ARCH_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gemma3-27b": "gemma3_27b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "mistral-large-123b": "mistral_large_123b",
+    "musicgen-large": "musicgen_large",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+}
+
+
+def register(arch_id: str):
+    def deco(fn: Callable[[], ArchConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _REGISTRY:
+        mod = _ARCH_MODULES.get(arch_id)
+        if mod is None:
+            raise KeyError(
+                f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}"
+            )
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCH_MODULES)

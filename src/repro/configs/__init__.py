@@ -1,0 +1,6 @@
+"""Per-architecture configs (one module per assigned architecture).
+
+Every module registers its arch id with repro.config.registry and exposes
+``config()``. Numbers follow the assignment table (public literature);
+deviations are commented inline and in DESIGN.md §Arch-applicability.
+"""

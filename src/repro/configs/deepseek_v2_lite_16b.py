@@ -1,0 +1,37 @@
+"""DeepSeek-V2-Lite (15.7B total / 2.4B active) — arXiv:2405.04434.
+
+MLA attention (kv_lora_rank=512, no q compression in the Lite variant),
+MoE with 2 shared + 64 routed experts top-6 per the assignment table
+(the HF checkpoint uses 64 routed; d_ff_expert=1408), first layer dense.
+"""
+from repro.config import ArchConfig, MLAConfig, MoEConfig, register
+
+
+@register("deepseek-v2-lite-16b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=10944,                  # dense-layer FFN width
+        vocab_size=102400,
+        head_dim=128,
+        rope_theta=1e4,
+        mla=MLAConfig(
+            q_lora_rank=0,           # V2-Lite: full-rank q
+            kv_lora_rank=512,
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            n_routed=64,
+            n_shared=2,
+            top_k=6,
+            d_ff_expert=1408,
+            first_k_dense=1,
+        ),
+    )

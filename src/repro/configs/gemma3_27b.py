@@ -1,0 +1,27 @@
+"""Gemma 3 27B — 5:1 local(1024-window):global attention, 128k context.
+
+62 layers, d_model=5376, 32 heads / 16 KV heads, huge 262k vocab.
+long_500k RUNS for this arch: 5/6 of layers are sliding-window
+(sub-quadratic); the periodic global layers attend over the full cache.
+"""
+from repro.config import ArchConfig, register
+
+
+@register("gemma3-27b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-27b",
+        family="dense",
+        n_layers=62,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        d_ff=21504,
+        vocab_size=262144,
+        head_dim=128,
+        act="geglu",  # GeGLU (gated)
+        rope_theta=1e6,              # global layers; local use 1e4 (dual base)
+        window=1024,
+        global_every=6,              # layers 5, 11, ... are global
+        tie_embeddings=True,
+    )

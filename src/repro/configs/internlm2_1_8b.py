@@ -1,0 +1,17 @@
+"""InternLM2-1.8B — arXiv:2403.17297. Plain GQA decoder, SwiGLU."""
+from repro.config import ArchConfig, register
+
+
+@register("internlm2-1.8b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internlm2-1.8b",
+        family="dense",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=92544,
+        rope_theta=1e6,
+    )

@@ -1,0 +1,37 @@
+"""Kimi K2 (1T total / 32B active) — Kimi K2 tech report (paper table).
+
+DeepSeek-V3-style MLA + MoE scaled to 384 routed experts top-8, one
+shared expert, 61 layers at d_model=7168. The assignment marks this
+paper-table config [unverified]; we implement the published table.
+"""
+from repro.config import ArchConfig, MLAConfig, MoEConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,                # assignment: GQA kv=8 (MLA cache below)
+        d_ff=18432,                  # dense-layer FFN width (DSv3 family)
+        vocab_size=163840,
+        head_dim=128,
+        rope_theta=5e4,
+        mla=MLAConfig(
+            q_lora_rank=1536,
+            kv_lora_rank=512,
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            n_routed=384,
+            n_shared=1,
+            top_k=8,
+            d_ff_expert=2048,
+            first_k_dense=1,
+        ),
+    )

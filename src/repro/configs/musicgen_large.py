@@ -1,0 +1,26 @@
+"""MusicGen-Large — arXiv:2306.05284. Decoder-only over EnCodec tokens.
+
+The transformer backbone only: 48L d2048, full attention, GELU. The
+EnCodec frontend is a stub — input_specs() provides precomputed
+4-codebook frame embeddings (delay-pattern summed), and the LM head
+predicts each codebook's 2048-way vocabulary (we model one codebook head,
+vocab=2048, matching the assignment's backbone spec).
+"""
+from repro.config import ArchConfig, register
+
+
+@register("musicgen-large")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        act="gelu",
+        frontend="audio",
+        n_codebooks=4,
+    )

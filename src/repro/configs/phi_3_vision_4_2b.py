@@ -1,0 +1,25 @@
+"""Phi-3-Vision (4.2B) — hf:microsoft/Phi-3-vision-128k-instruct.
+
+phi3-mini backbone (32L d3072 GQA-32, SwiGLU, 128k RoPE-scaled) + CLIP
+ViT-L/14 frontend. The vision tower is a STUB: input_specs() provides
+``vision_tokens`` precomputed patch embeddings that are concatenated
+before the text tokens, exactly as the projector output would be.
+"""
+from repro.config import ArchConfig, register
+
+
+@register("phi-3-vision-4.2b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        rope_theta=1e4,
+        frontend="vision",
+        vision_tokens=1024,
+    )

@@ -1,0 +1,18 @@
+"""StarCoder2-15B — arXiv:2402.19173. GQA kv=4, RoPE, GELU MLP."""
+from repro.config import ArchConfig, register
+
+
+@register("starcoder2-15b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2-15b",
+        family="dense",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        act="gelu",
+        rope_theta=1e5,
+    )

@@ -1,0 +1,32 @@
+"""xLSTM-1.3B — arXiv:2405.04517. sLSTM + mLSTM blocks, attention-free.
+
+48 blocks at d_model=2048 with 4 heads. Block mix: every 8th block is an
+sLSTM (scalar memory, sequential scan); the rest are mLSTM (matrix
+memory, chunked-parallel). d_ff=0 in the assignment: the up/down
+projections live inside the (m/s)LSTM blocks (expand=2), no separate MLP.
+long_500k RUNS (recurrent state is O(1) in sequence length).
+"""
+from repro.config import ArchConfig, SSMConfig, register
+
+
+@register("xlstm-1.3b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-1.3b",
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        ssm=SSMConfig(
+            kind="xlstm",
+            d_state=0,               # mLSTM state = (heads, hd, hd)
+            head_dim=512,            # 2048 / 4 heads
+            expand=2,
+            conv_width=4,
+            chunk=256,
+            slstm_every=8,
+        ),
+    )

@@ -1,0 +1,32 @@
+"""Zamba2-1.2B — arXiv:2411.15242. Mamba2 backbone + shared attn blocks.
+
+38 Mamba2 blocks at d_model=2048, one *shared* (weight-tied) attention+MLP
+block applied every 6 mamba blocks (per-application LoRA deltas omitted;
+noted in DESIGN.md). ssm_state=64. long_500k RUNS (O(1) mamba state; the
+shared attention uses the assignment's GQA over a bounded window cache).
+"""
+from repro.config import ArchConfig, SSMConfig, register
+
+
+@register("zamba2-1.2b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        n_layers=38,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32000,
+        ssm=SSMConfig(
+            kind="mamba2",
+            d_state=64,
+            head_dim=64,
+            expand=2,
+            conv_width=4,
+            chunk=128,  # SSD block: Q^2 f32 intra-chunk buffers x64 heads must fit
+        ),
+        hybrid_attn_every=6,
+        window=4096,                 # shared-attn KV window for long decode
+    )

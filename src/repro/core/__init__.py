@@ -1,0 +1,43 @@
+"""repro.core — AdaptMemBench's contribution as a composable JAX library.
+
+Layers (each maps to a component of the paper's Figure 1):
+
+    domain / schedule   polyhedral-lite iteration sets + transformations
+    pattern             pattern specifications (header + ISCC analogue)
+    codegen             ISCC codegen analogue: -> vectorized JAX / Pallas
+    drivers             unified / independent / measured driver templates
+    measure             timing, bandwidth accounting, counter surrogates
+    autotune            schedule-variant sweeps (optimization testbed)
+"""
+from .domain import Affine, Dim, IterDomain, domain
+from .schedule import Schedule, identity
+from .pattern import (
+    Access,
+    DataSpace,
+    PatternSpec,
+    Statement,
+    jacobi1d,
+    jacobi2d,
+    jacobi3d,
+    nstream,
+    stream_copy,
+    stream_scale,
+    stream_sum,
+    triad,
+)
+from .codegen import lower_jax, lower_pallas, serial_oracle
+from .drivers import Driver, DriverConfig, independent_view, unified_program_schedule
+from .measure import Record, classify_level, hlo_counters, tile_traffic, time_fn
+from .autotune import SweepResult, Variant, sweep
+
+__all__ = [
+    "Affine", "Dim", "IterDomain", "domain",
+    "Schedule", "identity",
+    "Access", "DataSpace", "PatternSpec", "Statement",
+    "triad", "stream_copy", "stream_scale", "stream_sum", "nstream",
+    "jacobi1d", "jacobi2d", "jacobi3d",
+    "lower_jax", "lower_pallas", "serial_oracle",
+    "Driver", "DriverConfig", "independent_view", "unified_program_schedule",
+    "Record", "classify_level", "hlo_counters", "tile_traffic", "time_fn",
+    "SweepResult", "Variant", "sweep",
+]

@@ -1,0 +1,55 @@
+"""Schedule-variant sweeps — the "testbed for potential optimizations".
+
+The paper's workflow: express a kernel once, then fork schedule variants
+(tile sizes, interleave factors, data-space layouts) and measure each.
+``sweep`` automates that loop and returns the argmax; the launcher's perf
+pass uses it to pick Pallas block shapes for the model kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from .drivers import Driver, DriverConfig
+from .measure import Record
+from .pattern import PatternSpec
+from .schedule import Schedule
+
+__all__ = ["Variant", "SweepResult", "sweep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    config: DriverConfig
+
+
+@dataclasses.dataclass
+class SweepResult:
+    records: list[tuple[str, Record]]            # (variant name, record)
+    best: tuple[str, Record]
+
+    def table(self) -> str:
+        lines = ["variant,n,GB/s,us_per_call"]
+        for name, r in self.records:
+            lines.append(f"{name},{r.n},{r.gbs:.3f},{r.seconds*1e6:.2f}")
+        return "\n".join(lines)
+
+
+def sweep(
+    pattern_factory: Callable[[Mapping[str, int]], PatternSpec],
+    variants: Sequence[Variant],
+    working_sets: Sequence[int],
+    *, validate: bool = True,
+    key: Callable[[Record], float] = lambda r: r.gbs,
+) -> SweepResult:
+    """Measure every variant over every working set; best = max ``key``."""
+    records: list[tuple[str, Record]] = []
+    for v in variants:
+        d = Driver(pattern_factory, v.config)
+        if validate and v.config.validate_n:
+            d.validate()
+        for rec in d.run(working_sets):
+            records.append((v.name, rec))
+    best = max(records, key=lambda nr: key(nr[1]))
+    return SweepResult(records, best)

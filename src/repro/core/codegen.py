@@ -1,0 +1,419 @@
+"""Code generation: lower (PatternSpec, Schedule) to executable JAX.
+
+This is the analogue of ISCC's ``codegen`` call, retargeted at two
+backends:
+
+``lower_jax``
+    Vectorized jax.numpy. Instances whose affine maps use **one band per
+    domain dim** (identity, interchange, reverse, interleave, unroll — all
+    of the paper's triad-family experiments) lower to static strided-slice
+    reads + ``.at[...].set`` writes, which XLA fuses into a single
+    streaming loop — the moral equivalent of the paper's generated C.
+    General maps (tiling, skew) lower to a gather/scatter form used for
+    validation and small working sets.
+
+``lower_pallas``
+    A Pallas kernel per schedule. Loop bands become the ``grid``; vector
+    bands become the block. Refs are *unblocked* (whole array) and the
+    kernel issues explicit dynamic slices — on TPU this corresponds to the
+    HBM->VMEM manual-DMA style used for halo'd stencils. Blocked-
+    ``BlockSpec`` showcase kernels live in ``repro.kernels``. Executed
+    with ``interpret=True`` on this CPU container.
+
+``serial_oracle``
+    Pure-numpy point-by-point execution in generated-code order. The
+    ground truth every backend is validated against (the paper's
+    ``<kernel>_val.in`` stage).
+
+Traversal-direction note: slices generated from the same band are paired
+elementwise across reads and the write, so negative-coefficient maps
+(reverse) need no flips — pairing by band value is automatically
+consistent *provided all accesses agree on coefficient sign per band*,
+which holds for every Schedule-generated nest (transforms rewrite all
+instances uniformly). Hand-built accesses that mix signs fall back to the
+gather path (checked).
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .domain import Affine
+from .pattern import Access, PatternSpec
+from .schedule import LoweredInstance, LoweredNest, Schedule
+
+__all__ = [
+    "serial_oracle",
+    "lower_jax",
+    "lower_pallas",
+    "resolve_access",
+]
+
+_GATHER_POINT_CAP = 8_000_000  # refuse to embed bigger index constants
+
+
+# ---------------------------------------------------------------------------
+# Access resolution: Access (affine in iterator names) -> per-dim (row, const)
+# over *bands*, by composing with a LoweredInstance.
+# ---------------------------------------------------------------------------
+
+
+def resolve_access(
+    acc: Access, nest: LoweredNest, inst: LoweredInstance,
+    iter_names: tuple[str, ...], env: Mapping[str, int],
+) -> list[tuple[tuple[int, ...], int]]:
+    """Compose an access's affine index with an instance's band map.
+
+    Returns, per array dim, ``(coeff_per_band, const)`` such that
+    ``array_index = coeff . bands + const``.
+    """
+    out = []
+    pos = {n: i for i, n in enumerate(iter_names)}
+    for ix in acc.resolved():
+        ix = Affine.of(ix.subs(env))  # fold parameters like n
+        row = [0] * nest.n_bands
+        const = ix.const
+        for sym, c in ix.coeffs:
+            if sym not in pos:
+                raise KeyError(f"access symbol {sym!r} is not an iterator or param")
+            d = pos[sym]
+            const += c * inst.c[d]
+            for b in range(nest.n_bands):
+                row[b] += c * inst.A[d][b]
+        out.append((tuple(row), const))
+    return out
+
+
+def _signs_consistent(plans) -> bool:
+    """All accesses in each instance agree on coeff sign per band."""
+    for racc, wacc in plans:
+        sign: dict[int, int] = {}
+        for rows in list(racc) + [wacc]:
+            for row, _ in rows:
+                for b, c in enumerate(row):
+                    if c == 0:
+                        continue
+                    s = 1 if c > 0 else -1
+                    if sign.setdefault(b, s) != s:
+                        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Serial oracle
+# ---------------------------------------------------------------------------
+
+
+def serial_oracle(
+    pattern: PatternSpec, nest: LoweredNest, arrays: dict[str, np.ndarray],
+    env: Mapping[str, int], ntimes: int = 1,
+) -> dict[str, np.ndarray]:
+    """Execute the scheduled nest point-by-point in numpy. Copies inputs."""
+    arrays = {k: np.array(v) for k, v in arrays.items()}
+    names = pattern.domain.names
+    stmt = pattern.statement
+    for _ in range(ntimes):
+        for point in nest.executed_points():
+            scope = dict(zip(names, point))
+            scope.update(env)
+            vals = []
+            for acc in stmt.reads:
+                idx = tuple(Affine.of(ix).eval(scope) for ix in acc.index)
+                vals.append(np.asarray(arrays[acc.space][idx]))
+            res = stmt.combine(vals, dict(env))
+            widx = tuple(Affine.of(ix).eval(scope) for ix in stmt.write.index)
+            arrays[stmt.write.space][widx] = res
+    return arrays
+
+
+# ---------------------------------------------------------------------------
+# Vectorized JAX backend
+# ---------------------------------------------------------------------------
+
+
+def _single_band_per_dim(nest: LoweredNest, inst: LoweredInstance) -> bool:
+    """True if each domain dim reads exactly one band and each band feeds
+    at most one dim — the strided-slice fast path precondition."""
+    used: dict[int, int] = {}
+    for d in range(nest.rank):
+        nz = [b for b, c in enumerate(inst.A[d]) if c != 0]
+        if len(nz) != 1:
+            return False
+        b = nz[0]
+        if b in used:
+            return False
+        used[b] = d
+    return True
+
+
+def _slice_for(row: tuple[int, ...], const: int,
+               extents: tuple[int, ...]) -> tuple[slice, int]:
+    """Static strided slice covering ``{row.b + const : b in band box}``.
+
+    ``row`` must have at most one nonzero coeff. The slice is always
+    ascending-index; see the traversal-direction note in the module doc.
+    Returns (slice, band_index) with band_index=-1 for constant indices.
+    """
+    nz = [(b, c) for b, c in enumerate(row) if c != 0]
+    if not nz:
+        return slice(const, const + 1), -1
+    (b, c), = nz
+    e = extents[b]
+    if c > 0:
+        return slice(const, const + c * (e - 1) + 1, c), b
+    lo = const + c * (e - 1)
+    return slice(lo, const + 1, -c), b
+
+
+def _axis_perm(src_bands: list[int], dst_bands: list[int]):
+    """Permutation taking value axes (ordered by src_bands) to dst order,
+    or None if already aligned / not a permutation (broadcast case)."""
+    if src_bands == dst_bands:
+        return None
+    if sorted(src_bands) != sorted(dst_bands):
+        return None
+    return tuple(src_bands.index(b) for b in dst_bands)
+
+
+def lower_jax(
+    pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
+    *, force_gather: bool = False,
+) -> Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]:
+    """Build ``step(arrays) -> arrays`` executing one sweep of the pattern."""
+    nest = schedule.lower(pattern.domain, env)
+    stmt = pattern.statement
+    iter_names = pattern.domain.names
+    guarded = nest.needs_guard()
+
+    plans = []
+    for inst in nest.instances:
+        racc = [resolve_access(a, nest, inst, iter_names, env) for a in stmt.reads]
+        wacc = resolve_access(stmt.write, nest, inst, iter_names, env)
+        plans.append((racc, wacc))
+
+    fast = (
+        not force_gather
+        and not guarded
+        and all(_single_band_per_dim(nest, i) for i in nest.instances)
+        and _signs_consistent(plans)
+    )
+
+    if fast:
+        def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+            arrays = dict(arrays)
+            for racc, wacc in plans:
+                w_sl, w_bands = [], []
+                for row, const in wacc:
+                    sl, b = _slice_for(row, const, nest.band_extents)
+                    w_sl.append(sl)
+                    w_bands.append(b)
+                vals = []
+                for acc, rr in zip(stmt.reads, racc):
+                    sls, bands_order = [], []
+                    for row, const in rr:
+                        sl, b = _slice_for(row, const, nest.band_extents)
+                        sls.append(sl)
+                        bands_order.append(b)
+                    v = arrays[acc.space][tuple(sls)]
+                    perm = _axis_perm(bands_order, w_bands)
+                    if perm is not None:
+                        v = jnp.transpose(v, perm)
+                    vals.append(v)
+                res = stmt.combine(vals, dict(env))
+                tgt = arrays[stmt.write.space]
+                arrays[stmt.write.space] = tgt.at[tuple(w_sl)].set(
+                    jnp.asarray(res).astype(tgt.dtype)
+                )
+            return arrays
+
+        return step
+
+    # -- gather/scatter general path ---------------------------------------
+    n_pts = int(np.prod(nest.band_extents)) if nest.band_extents else 1
+    if n_pts > _GATHER_POINT_CAP:
+        raise ValueError(
+            f"gather path would embed {n_pts} index points; use lower_pallas"
+        )
+    grids = np.indices(nest.band_extents).reshape(nest.n_bands, -1)
+    gather_plans = []
+    for inst in nest.instances:
+        iters = (
+            np.array(inst.A, dtype=np.int64) @ grids
+            + np.array(inst.c, dtype=np.int64)[:, None]
+        )  # (rank, P)
+        mask = np.ones(iters.shape[1], dtype=bool)
+        for d in range(nest.rank):
+            mask &= (iters[d] >= nest.domain_lo[d]) & (iters[d] < nest.domain_hi[d])
+        scope: dict[str, np.ndarray] = {
+            n: iters[d] for d, n in enumerate(iter_names)
+        }
+        scope.update({k: np.int64(v) for k, v in env.items()})
+
+        def resolve_idx(acc: Access):
+            return tuple(
+                np.asarray(_affine_np(Affine.of(ix), scope), dtype=np.int32)
+                for ix in acc.index
+            )
+
+        gather_plans.append(
+            ([resolve_idx(a) for a in stmt.reads], resolve_idx(stmt.write), mask)
+        )
+
+    def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        arrays = dict(arrays)
+        for ridx, widx, mask in gather_plans:
+            # OOB reads clamp (jit default); their lanes are dropped on write
+            vals = [
+                arrays[acc.space][idx]
+                for acc, idx in zip(stmt.reads, ridx)
+            ]
+            res = stmt.combine(vals, dict(env))
+            tgt = arrays[stmt.write.space]
+            if not mask.all():
+                widx = tuple(np.where(mask, ix, -1) for ix in widx)
+            arrays[stmt.write.space] = tgt.at[widx].set(
+                jnp.asarray(res).astype(tgt.dtype), mode="drop"
+            )
+        return arrays
+
+    return step
+
+
+def _affine_np(a: Affine, scope: Mapping[str, np.ndarray]) -> np.ndarray:
+    acc = np.int64(a.const)
+    for sym, c in a.coeffs:
+        acc = acc + c * scope[sym]
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend (manual-DMA style; blocked showcase kernels in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def lower_pallas(
+    pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
+    *, interpret: bool = True, grid_bands: tuple[str, ...] | None = None,
+) -> Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]:
+    """Lower to ``pl.pallas_call``.
+
+    Bands are split into *grid bands* (pallas grid) and *vector bands*
+    (in-kernel slice extents). By default the innermost unit-stride band
+    of each domain dim is the vector band; ``grid_bands`` forces named
+    bands into the grid (used by the tile-sweep benchmarks so tile loops
+    become grid steps, exactly like the generated ISCC tile loops).
+    The output space is aliased to its input so un-iterated elements
+    (stencil borders) keep their initial values, matching the oracle.
+    """
+    nest = schedule.lower(pattern.domain, env)
+    if nest.needs_guard():
+        raise NotImplementedError(
+            "guarded schedules on the pallas backend: pick divisible tile "
+            "sizes (the drivers choose divisible working sets)"
+        )
+    stmt = pattern.statement
+    iter_names = pattern.domain.names
+    rank = nest.rank
+
+    inst0 = nest.instances[0]
+    vec_band_for_dim: list[int] = []
+    for d in range(rank):
+        cands = [b for b, c in enumerate(inst0.A[d]) if abs(c) == 1]
+        if not cands:
+            raise ValueError(f"dim {d} has no unit-stride band; cannot vectorize")
+        vec_band_for_dim.append(max(cands))
+    vec_bands = sorted(set(vec_band_for_dim))
+    if grid_bands is not None:
+        vec_bands = [b for b in vec_bands if nest.band_names[b] not in grid_bands]
+    gbs = [b for b in range(nest.n_bands) if b not in vec_bands]
+    for inst in nest.instances:
+        for d in range(rank):
+            for b in vec_bands:
+                if inst.A[d][b] not in (-1, 0, 1):
+                    raise ValueError("vector band with non-unit stride")
+
+    grid = tuple(nest.band_extents[b] for b in gbs) or (1,)
+    vec_extents = {b: nest.band_extents[b] for b in vec_bands}
+
+    acc_plans = []
+    for inst in nest.instances:
+        racc = [resolve_access(a, nest, inst, iter_names, env) for a in stmt.reads]
+        wacc = resolve_access(stmt.write, nest, inst, iter_names, env)
+        acc_plans.append((racc, wacc))
+    if not _signs_consistent(acc_plans):
+        raise ValueError("mixed coefficient signs per band; not vectorizable")
+
+    space_order = [s.name for s in pattern.spaces]
+    out_name = stmt.write.space
+    out_pos = space_order.index(out_name)
+    shapes = {s.name: s.concrete_shape(env) for s in pattern.spaces}
+    dtypes = {s.name: s.dtype for s in pattern.spaces}
+    env_dict = dict(env)
+
+    def kernel(*refs):
+        in_refs = {nm: r for nm, r in zip(space_order, refs[:len(space_order)])}
+        out_ref = refs[len(space_order)]
+        gvals = [pl.program_id(i) for i in range(len(gbs))] if gbs else []
+
+        def base_of(rows_const):
+            """(base index at vector-band==0/origin, vector band per dim)."""
+            base, vb = [], []
+            for row, const in rows_const:
+                off = const
+                for gi, b in enumerate(gbs):
+                    off = off + row[b] * gvals[gi]
+                bsel, bstep = -1, 1
+                for b in vec_bands:
+                    if row[b] != 0:
+                        bsel, bstep = b, row[b]
+                if bsel >= 0 and bstep == -1:
+                    # ascending-index window: [off - (e-1), off]
+                    off = off - (vec_extents[bsel] - 1)
+                base.append(off)
+                vb.append(bsel)
+            return base, vb
+
+        for racc, wacc in acc_plans:
+            wbase, wvb = base_of(wacc)
+            vals = []
+            for acc, rows in zip(stmt.reads, racc):
+                base, vb = base_of(rows)
+                idx = tuple(
+                    pl.ds(b0, vec_extents[bsel] if bsel >= 0 else 1)
+                    for b0, bsel in zip(base, vb)
+                )
+                v = in_refs[acc.space][idx]
+                perm = _axis_perm(vb, wvb)
+                if perm is not None:
+                    v = jnp.transpose(v, perm)
+                vals.append(v)
+            res = stmt.combine(vals, env_dict)
+            want = tuple(1 if b < 0 else vec_extents[b] for b in wvb)
+            res = jnp.asarray(res).astype(out_ref.dtype)
+            if res.shape != want:
+                res = jnp.broadcast_to(res, want)
+            widx = tuple(
+                pl.ds(b0, vec_extents[bsel] if bsel >= 0 else 1)
+                for b0, bsel in zip(wbase, wvb)
+            )
+            out_ref[widx] = res
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(shapes[out_name], dtypes[out_name]),
+        input_output_aliases={out_pos: 0},
+        interpret=interpret,
+    )
+
+    def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        arrays = dict(arrays)
+        arrays[out_name] = call(*[arrays[nm] for nm in space_order])
+        return arrays
+
+    return step

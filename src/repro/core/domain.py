@@ -1,0 +1,205 @@
+"""Affine iteration domains — the Presburger-lite layer.
+
+AdaptMemBench expresses kernel iteration spaces as integer sets in ISCC
+(``[n] -> { S[i] : 1 <= i < n-1 }``) and generates loop nests from them.
+This module is the JAX-native analogue: rectangular integer domains whose
+bounds are affine expressions of symbolic *parameters* (the polyhedral
+"context"). Parameters are resolved to concrete integers before lowering,
+because XLA requires static shapes — this mirrors how the paper's drivers
+instantiate ``n`` per working-set size before compiling a variant.
+
+Scope note (documented deviation from full ISL): domains here are boxes
+with affine bounds per dimension (inner bounds may reference outer
+iterators with unit coefficients — enough for triangular/skewed spaces).
+The paper itself only exercises rectangular domains (triad, Jacobi 1/2/3D)
+plus tiling relations; everything in the paper's case studies is exactly
+representable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Affine",
+    "Dim",
+    "IterDomain",
+    "domain",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    """An affine expression ``const + sum(coeffs[s] * s)`` over symbols.
+
+    Symbols are strings naming either parameters ("n") or outer iterators
+    ("i"). Immutable and hashable so schedules can be compared/cached.
+    """
+
+    const: int = 0
+    coeffs: tuple[tuple[str, int], ...] = ()
+
+    @staticmethod
+    def of(value: "Affine | int | str") -> "Affine":
+        if isinstance(value, Affine):
+            return value
+        if isinstance(value, (int, np.integer)):
+            return Affine(const=int(value))
+        if isinstance(value, str):
+            return Affine(coeffs=((value, 1),))
+        raise TypeError(f"cannot coerce {value!r} to Affine")
+
+    def _terms(self) -> dict[str, int]:
+        return dict(self.coeffs)
+
+    def __add__(self, other: "Affine | int | str") -> "Affine":
+        other = Affine.of(other)
+        terms = self._terms()
+        for sym, c in other.coeffs:
+            terms[sym] = terms.get(sym, 0) + c
+        terms = {s: c for s, c in terms.items() if c != 0}
+        return Affine(self.const + other.const, tuple(sorted(terms.items())))
+
+    __radd__ = __add__
+
+    def __sub__(self, other: "Affine | int | str") -> "Affine":
+        return self + (Affine.of(other) * -1)
+
+    def __mul__(self, k: int) -> "Affine":
+        return Affine(self.const * k, tuple((s, c * k) for s, c in self.coeffs))
+
+    __rmul__ = __mul__
+
+    def subs(self, env: Mapping[str, int]) -> "Affine | int":
+        """Substitute symbols; returns an int if fully resolved."""
+        const = self.const
+        remaining: dict[str, int] = {}
+        for sym, c in self.coeffs:
+            if sym in env:
+                const += c * int(env[sym])
+            else:
+                remaining[sym] = remaining.get(sym, 0) + c
+        if not remaining:
+            return const
+        return Affine(const, tuple(sorted(remaining.items())))
+
+    def eval(self, env: Mapping[str, int]) -> int:
+        out = self.subs(env)
+        if isinstance(out, Affine):
+            missing = [s for s, _ in out.coeffs]
+            raise KeyError(f"unbound symbols {missing} in {self!r}")
+        return out
+
+    @property
+    def symbols(self) -> tuple[str, ...]:
+        return tuple(s for s, _ in self.coeffs)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        parts = [str(self.const)] if self.const or not self.coeffs else []
+        parts += [f"{c}*{s}" if c != 1 else s for s, c in self.coeffs]
+        return " + ".join(parts) or "0"
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    """One iteration dimension: ``lo <= it < hi`` (half-open, step 1)."""
+
+    name: str
+    lo: Affine
+    hi: Affine
+
+    @staticmethod
+    def of(name: str, lo, hi) -> "Dim":
+        return Dim(name, Affine.of(lo), Affine.of(hi))
+
+    def extent(self, env: Mapping[str, int]) -> int:
+        return max(0, self.hi.eval(env) - self.lo.eval(env))
+
+
+@dataclasses.dataclass(frozen=True)
+class IterDomain:
+    """An ordered product of :class:`Dim` — the iteration set of one statement.
+
+    Order is the *lexicographic execution order* of the untransformed nest,
+    exactly as ISCC's ``codegen`` would scan the set.
+    """
+
+    dims: tuple[Dim, ...]
+
+    def __post_init__(self) -> None:
+        names = [d.name for d in self.dims]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate iterator names: {names}")
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(d.name for d in self.dims)
+
+    @property
+    def rank(self) -> int:
+        return len(self.dims)
+
+    def dim(self, name: str) -> Dim:
+        for d in self.dims:
+            if d.name == name:
+                return d
+        raise KeyError(name)
+
+    def extents(self, env: Mapping[str, int]) -> tuple[int, ...]:
+        """Extents for rectangular domains (no iterator-dependent bounds)."""
+        out = []
+        for d in self.dims:
+            lo, hi = d.lo.subs(env), d.hi.subs(env)
+            if isinstance(lo, Affine) or isinstance(hi, Affine):
+                raise ValueError(
+                    f"dim {d.name} has iterator-dependent bounds; not rectangular"
+                )
+            out.append(max(0, hi - lo))
+        return tuple(out)
+
+    def size(self, env: Mapping[str, int]) -> int:
+        return int(np.prod(self.extents(env))) if self.dims else 1
+
+    def is_rectangular(self, env: Mapping[str, int]) -> bool:
+        try:
+            self.extents(env)
+            return True
+        except ValueError:
+            return False
+
+    def points(self, env: Mapping[str, int]) -> Iterable[tuple[int, ...]]:
+        """Enumerate points in lexicographic order.
+
+        Supports inner bounds referencing outer iterators (triangular
+        spaces). Used by tests and the serial oracle; never on hot paths.
+        """
+        def rec(prefix: dict[str, int], i: int):
+            if i == len(self.dims):
+                yield tuple(prefix[d.name] for d in self.dims)
+                return
+            d = self.dims[i]
+            scope = {**env, **prefix}
+            lo, hi = d.lo.eval(scope), d.hi.eval(scope)
+            for v in range(lo, hi):
+                prefix[d.name] = v
+                yield from rec(prefix, i + 1)
+            prefix.pop(d.name, None)
+
+        yield from rec({}, 0)
+
+    def point_count(self, env: Mapping[str, int]) -> int:
+        if self.is_rectangular(env):
+            return self.size(env)
+        return sum(1 for _ in self.points(env))
+
+
+def domain(*dims: tuple) -> IterDomain:
+    """Sugar: ``domain(("i", 1, "n" - 1)) -> IterDomain``.
+
+    Bounds may be ints, parameter names, or :class:`Affine` expressions,
+    e.g. ``domain(("i", 0, "n"), ("j", 0, Affine.of("n") - 1))``.
+    """
+    return IterDomain(tuple(Dim.of(name, lo, hi) for name, lo, hi in dims))

@@ -1,0 +1,308 @@
+"""Benchmark driver templates — the kernel-independent layer.
+
+The paper ships three driver templates; each has a direct analogue here:
+
+* **Unified data spaces** (Listing 1): threads share one array through
+  OpenMP work-sharing. Here: one array per data space; parallel "programs"
+  are carved out of the iteration domain by tiling its outermost dim into
+  ``programs`` contiguous chunks (exactly ``schedule(static, n/t)``). The
+  chunks share native tiles at their seams — the false-sharing analogue.
+
+* **Independent data spaces** (Listing 2): each thread owns a disjoint
+  array. Here: every space gains a leading ``programs`` axis whose rows
+  are optionally padded to the native tile (``pad`` elements), and the
+  statement is rewritten to index through the program id — the exact
+  transformation the paper performs in the memory-mapping macros
+  (``A[t_id*8][i]``).
+
+* **PAPI measurement** (template 3): ``measured=True`` attaches
+  ``hlo_counters`` + analytic ``tile_traffic`` to every record.
+
+A driver owns the repetition loop. ``sync_every_rep=False`` fuses all
+``ntimes`` sweeps into one compiled ``lax.fori_loop`` — the ``nowait``
+analogue (no host round-trip / no dispatch barrier between sweeps);
+``True`` dispatches one sweep per call and fences, reproducing the
+per-iteration barrier of Listing 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .codegen import lower_jax, lower_pallas, serial_oracle
+from .domain import Affine, Dim, IterDomain
+from .measure import (
+    Record,
+    classify_level,
+    hlo_counters,
+    tile_traffic,
+    time_fn,
+)
+from .pattern import Access, DataSpace, PatternSpec, Statement
+from .schedule import Schedule, identity
+
+__all__ = [
+    "DriverConfig",
+    "Driver",
+    "independent_view",
+    "unified_program_schedule",
+]
+
+
+# ---------------------------------------------------------------------------
+# Template transformations
+# ---------------------------------------------------------------------------
+
+
+def independent_view(pattern: PatternSpec, programs: int, pad: int = 0) -> PatternSpec:
+    """Rewrite a pattern to the *independent data spaces* form.
+
+    Every space of shape ``(n, ...)`` becomes ``(programs, n/programs + pad,
+    ...)`` (the caller passes the *per-program* ``n`` in env — mirroring the
+    paper's ``int N = n/t``); a new outermost iterator ``p`` runs over
+    programs and all accesses are prefixed with it. ``pad`` is the paper's
+    padding factor (8 doubles -> one 64B line; here pad to the 1024-element
+    native tile with ``pad=tile-remainder`` or any nonzero slack).
+    """
+    p = "p"
+    if p in pattern.domain.names:
+        raise ValueError("pattern already has a 'p' iterator")
+
+    def pad_shape(shape):
+        first = Affine.of(shape[0]) + pad
+        return (Affine.of(programs), first) + tuple(shape[1:])
+
+    def pad_init(init):
+        if not callable(init):
+            return init
+        # per-row init: drop the program grid, apply the original to the rest
+        return lambda pgrid, *grids: init(*grids)
+
+    spaces = tuple(
+        dataclasses.replace(s, shape=pad_shape(s.shape), init=pad_init(s.init))
+        for s in pattern.spaces
+    )
+
+    def prefix(acc: Access) -> Access:
+        return Access(acc.space, (p,) + tuple(acc.index))
+
+    stmt = Statement(
+        reads=tuple(prefix(a) for a in pattern.statement.reads),
+        write=prefix(pattern.statement.write),
+        combine=pattern.statement.combine,
+    )
+    dom = IterDomain((Dim.of(p, 0, programs),) + pattern.domain.dims)
+    return dataclasses.replace(
+        pattern,
+        name=f"{pattern.name}.indep{programs}" + (f".pad{pad}" if pad else ""),
+        spaces=spaces,
+        statement=stmt,
+        domain=dom,
+    )
+
+
+def unified_program_schedule(
+    pattern: PatternSpec, programs: int, env: Mapping[str, int],
+    base: Schedule | None = None,
+) -> Schedule:
+    """Tile the outermost domain dim into ``programs`` chunks — the
+    ``schedule(static, n/t)`` work-sharing split of the unified template."""
+    sch = base or identity()
+    if programs == 1:
+        return sch  # no work-sharing split needed
+    d0 = pattern.domain.dims[0]
+    extent = d0.extent(env)
+    if extent % programs != 0:
+        raise ValueError(
+            f"unified template needs programs | extent ({programs} vs {extent})"
+        )
+    return sch.tile(d0.name, extent // programs, outer="prog", inner=d0.name)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    template: str = "unified"       # unified | independent
+    programs: int = 8               # "threads"
+    pad: int = 0                    # independent-template row padding (elems)
+    backend: str = "jax"            # jax | pallas
+    schedule: Schedule | None = None  # extra transforms (applied to the kernel dims)
+    ntimes: int = 50                # sweeps per measurement
+    sync_every_rep: bool = False    # True = per-sweep barrier (Listing 1)
+    reps: int = 5                   # timing repetitions (median)
+    measured: bool = False          # attach counter surrogates (template 3)
+    grid_bands: tuple[str, ...] | None = None  # pallas grid override
+    validate_n: int | None = 64     # oracle-check size (None = skip)
+
+
+class Driver:
+    """Combine a PatternSpec with a driver template and measure it.
+
+    ``pattern_factory(env)`` lets stream-count-style sweeps rebuild the
+    pattern per point; for fixed patterns pass ``lambda env: pat``.
+    """
+
+    def __init__(self, pattern_factory: Callable[[Mapping[str, int]], PatternSpec],
+                 config: DriverConfig):
+        self.factory = pattern_factory
+        self.cfg = config
+
+    # -- construction -------------------------------------------------------
+
+    def _materialize(self, env: Mapping[str, int]):
+        cfg = self.cfg
+        base = self.factory(env)
+        sch = cfg.schedule or identity()
+        if cfg.template == "independent":
+            pat = independent_view(base, cfg.programs, cfg.pad)
+            # per-program env: the caller's n is global; rows get n/programs
+            env = dict(env)
+            for k in ("n",):
+                if k in env and base.domain.dims[0].hi.symbols == (k,):
+                    pass
+            grid_bands = ("p",) + tuple(cfg.grid_bands or ())
+        elif cfg.template == "unified":
+            pat = base
+            sch = unified_program_schedule(base, cfg.programs, env, sch)
+            grid_bands = ("prog",) + tuple(cfg.grid_bands or ())
+        else:
+            raise ValueError(cfg.template)
+
+        if cfg.backend == "jax":
+            step = lower_jax(pat, sch, env)
+        elif cfg.backend == "pallas":
+            step = lower_pallas(pat, sch, env, grid_bands=grid_bands)
+        else:
+            raise ValueError(cfg.backend)
+        return pat, sch, env, step
+
+    def build(self, env: Mapping[str, int]):
+        """Returns (pattern, schedule, run_fn, arrays0). ``run_fn(arrays)``
+        executes ``ntimes`` sweeps under the configured barrier regime."""
+        cfg = self.cfg
+        pat, sch, env, step = self._materialize(env)
+        arrays0 = {k: jnp.asarray(v) for k, v in pat.allocate(env).items()}
+        names = sorted(arrays0)
+
+        def step_t(tup):
+            d = dict(zip(names, tup))
+            d = step(d)
+            return tuple(d[k] for k in names)
+
+        if cfg.sync_every_rep:
+            one = jax.jit(step_t)
+
+            def run(tup):
+                for _ in range(cfg.ntimes):
+                    tup = one(tup)
+                    jax.block_until_ready(tup)
+                return tup
+
+            lowerable = one
+        else:
+            @jax.jit
+            def run(tup):
+                return jax.lax.fori_loop(
+                    0, cfg.ntimes, lambda _, t: step_t(t), tup
+                )
+
+            lowerable = run
+
+        return pat, sch, env, run, lowerable, tuple(arrays0[k] for k in names), names
+
+    # -- validation (the <kernel>_val.in stage) ------------------------------
+
+    def validate(self, env: Mapping[str, int] | None = None) -> None:
+        cfg = self.cfg
+        n = cfg.validate_n or 64
+        env = dict(env or {"n": n})
+        pat, sch, env2, step = self._materialize(env)
+        arrays = pat.allocate(env2)
+        nest = sch.lower(pat.domain, env2)
+        want = serial_oracle(pat, nest, arrays, env2, ntimes=2)
+        got = {k: jnp.asarray(v) for k, v in arrays.items()}
+        for _ in range(2):
+            got = step(got)
+        for k in want:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), want[k], rtol=1e-5, atol=1e-5,
+                err_msg=f"space {k} diverged under {sch.name}/{cfg.template}",
+            )
+
+    # -- measurement ---------------------------------------------------------
+
+    def run(self, working_sets: Sequence[int],
+            env_extra: Mapping[str, int] | None = None) -> list[Record]:
+        cfg = self.cfg
+        records = []
+        for n in working_sets:
+            env = {"n": int(n), **(env_extra or {})}
+            pat, sch, env, run, lowerable, tup, names = self.build(env)
+            timing = time_fn(run, tup, reps=cfg.reps)
+            pts = pat.domain.point_count(env)
+            bpp = pat.bytes_per_point()
+            total_bytes = bpp * pts * cfg.ntimes
+            ws_bytes = sum(
+                int(np.prod(s.concrete_shape(env)))
+                * np.dtype(s.dtype).itemsize
+                for s in pat.spaces
+            )
+            rec = Record(
+                pattern=pat.name,
+                template=cfg.template,
+                schedule=sch.name,
+                backend=cfg.backend,
+                n=int(n),
+                working_set_bytes=ws_bytes,
+                programs=cfg.programs,
+                ntimes=cfg.ntimes,
+                seconds=timing.seconds,
+                gbs=total_bytes / timing.seconds / 1e9,
+                gflops=pat.flops_per_point * pts * cfg.ntimes
+                / timing.seconds / 1e9,
+                level=classify_level(ws_bytes),
+                extra={"barrier": cfg.sync_every_rep},
+            )
+            if cfg.measured:
+                rec.extra.update(hlo_counters(lowerable, tup))
+                rec.extra.update(self._traffic(pat, env).as_dict())
+            records.append(rec)
+        return records
+
+    def _traffic(self, pat: PatternSpec, env: Mapping[str, int]):
+        """Analytic tile traffic for the current template split (1D)."""
+        cfg = self.cfg
+        written = pat.statement.write.space
+        slices: list[dict[str, tuple[int, int]]] = []
+        if cfg.template == "independent":
+            # rows are (n + pad) apart in the flat layout
+            row = Affine.of(pat.space(written).shape[1]).eval(env)
+            per = pat.domain.dims[1].extent(env)
+            lo0 = pat.domain.dims[1].lo.eval(env)
+            for p in range(cfg.programs):
+                flat0 = p * row + lo0
+                slices.append(
+                    {s.name: (flat0, flat0 + per) for s in pat.spaces}
+                )
+        else:
+            d0 = pat.domain.dims[0]
+            lo, ext = d0.lo.eval(env), d0.extent(env)
+            chunk = ext // cfg.programs
+            for p in range(cfg.programs):
+                a = lo + p * chunk
+                slices.append({s.name: (a, a + chunk) for s in pat.spaces})
+        return tile_traffic(
+            spaces={s.name: s.concrete_shape(env) for s in pat.spaces},
+            program_slices=slices,
+            written=written,
+            itemsize=np.dtype(pat.space(written).dtype).itemsize,
+        )

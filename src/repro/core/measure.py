@@ -1,0 +1,181 @@
+"""Measurement: timing, bandwidth accounting, and counter surrogates.
+
+The paper's drivers wrap every kernel with (a) a repetition loop, (b)
+timers, and (c) PAPI counters. On this target:
+
+* timing — ``time_fn`` with ``block_until_ready`` fencing; medians over
+  repeats. On the CPU container these are CPU numbers and records say so.
+* achieved bandwidth — derived from the pattern's access list (bytes per
+  iteration point x points x ntimes / seconds), the same accounting STREAM
+  and the paper use (write-allocate traffic excluded, as in STREAM).
+* counters — two surrogates for PAPI:
+    - ``hlo_counters``: FLOPs / bytes-accessed from
+      ``compiled.cost_analysis()`` (what the XLA:TPU compiler claims);
+    - ``tile_traffic``: an analytic model of (8,128)-native-tile fetches
+      and writebacks per program, the analogue of L1 line fills and
+      requests-for-exclusive-access. It is exact for the affine patterns
+      here, which is the point: the paper uses counters to *detect* false
+      sharing; we can *prove* tile sharing from the schedule and report it
+      in the same shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+import jax
+
+__all__ = [
+    "TimingResult",
+    "time_fn",
+    "hlo_counters",
+    "TileTraffic",
+    "tile_traffic",
+    "NATIVE_TILE",
+    "Record",
+]
+
+# TPU v5e native tile for f32 operands: 8 sublanes x 128 lanes.
+NATIVE_TILE = (8, 128)
+NATIVE_TILE_BYTES = NATIVE_TILE[0] * NATIVE_TILE[1] * 4
+
+
+@dataclasses.dataclass
+class TimingResult:
+    seconds: float          # median per-call wall time
+    reps: int
+    all_seconds: tuple[float, ...]
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> TimingResult:
+    """Median wall time of ``fn(*args)`` with device fencing."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return TimingResult(times[len(times) // 2], reps, tuple(times))
+
+
+def hlo_counters(jitted, *args) -> dict[str, float]:
+    """FLOPs and bytes-accessed as claimed by the compiled executable."""
+    try:
+        compiled = jitted.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return {
+            "hlo_flops": float(ca.get("flops", float("nan"))),
+            "hlo_bytes": float(
+                sum(v for k, v in ca.items() if k.startswith("bytes accessed"))
+            ),
+        }
+    except Exception as e:  # pragma: no cover - backend-specific
+        return {"hlo_flops": float("nan"), "hlo_bytes": float("nan"),
+                "hlo_error": str(e)}
+
+
+# ---------------------------------------------------------------------------
+# Analytic native-tile traffic (the PAPI surrogate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TileTraffic:
+    """Per-sweep tile-granular traffic, split the way PAPI splits it.
+
+    fetches            — tiles loaded across all programs (≈ L1 line fills)
+    writebacks         — tiles written across all programs
+    shared_write_tiles — tiles written by >1 program (the false-sharing
+                         signal: each extra writer forces a read-modify-
+                         write of a tile another program owns; on CPU this
+                         is the request-for-exclusive-access storm)
+    """
+
+    fetches: int
+    writebacks: int
+    shared_write_tiles: int
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _touched_tiles(lo: int, hi: int, tile_elems: int) -> set[int]:
+    if hi <= lo:
+        return set()
+    return set(range(lo // tile_elems, (hi - 1) // tile_elems + 1))
+
+
+def tile_traffic(
+    *, spaces: Mapping[str, tuple[int, ...]],
+    program_slices: Sequence[Mapping[str, tuple[int, int]]],
+    written: str, itemsize: int = 4,
+) -> TileTraffic:
+    """Tile traffic for 1D-per-program slices (the paper's SMP studies).
+
+    ``program_slices[p][space] = (lo, hi)`` is program p's contiguous
+    element range in the *flattened* space. Tiles are NATIVE_TILE_BYTES
+    blocks of the flat layout — the exact analogue of 64B cache lines.
+    """
+    tile_elems = NATIVE_TILE_BYTES // itemsize
+    fetches = 0
+    writebacks = 0
+    writers: dict[tuple[str, int], int] = {}
+    for sl in program_slices:
+        for space, (lo, hi) in sl.items():
+            tiles = _touched_tiles(lo, hi, tile_elems)
+            fetches += len(tiles)
+            if space == written:
+                writebacks += len(tiles)
+                for t in tiles:
+                    writers[(space, t)] = writers.get((space, t), 0) + 1
+    shared = sum(1 for v in writers.values() if v > 1)
+    return TileTraffic(fetches, writebacks, shared)
+
+
+# ---------------------------------------------------------------------------
+# Output records (machine parsable + human readable, per the paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Record:
+    pattern: str
+    template: str
+    schedule: str
+    backend: str
+    n: int
+    working_set_bytes: int
+    programs: int
+    ntimes: int
+    seconds: float
+    gbs: float
+    gflops: float
+    level: str = ""            # which memory level the working set sits in
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def csv(self) -> str:
+        us = self.seconds * 1e6
+        return (
+            f"{self.pattern}/{self.template}/{self.schedule}/{self.backend},"
+            f"{us:.2f},{self.gbs:.3f}"
+        )
+
+    def json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+def classify_level(working_set_bytes: int) -> str:
+    """Bucket a working set by the v5e hierarchy (per-core view)."""
+    if working_set_bytes <= 96 * 2 ** 10:          # fits VREG+small VMEM slice
+        return "vreg"
+    if working_set_bytes <= 64 * 2 ** 20:          # VMEM-resident half budget
+        return "vmem"
+    return "hbm"

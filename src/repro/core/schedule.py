@@ -1,0 +1,354 @@
+"""Schedule relations — the transformation layer of the polyhedral-lite engine.
+
+In AdaptMemBench, optimization variants are produced by applying relations
+to the iteration domain in ISCC (``{[i,j] -> [j,i]}`` for interchange,
+block-decompositions for tiling, split+fuse for the paper's interleaving).
+Here a :class:`Schedule` is an explicit chain of such relations. Lowering a
+schedule against a domain and a parameter environment yields a
+:class:`LoweredNest`:
+
+    bands        — the generated loop nest, outermost first; each band is a
+                   counter ``0 <= b < extent`` (extent is concrete: params
+                   are resolved, as the drivers instantiate one variant per
+                   working-set size);
+    instances    — one or more statement instances per innermost body (the
+                   paper's interleaving fuses several); each instance maps
+                   band counters to domain iterators affinely:
+                   ``iter = A @ bands + c``.
+
+The mapping to Pallas is direct: *grid bands* become ``pallas_call`` grid
+dimensions and the affine instance maps become ``BlockSpec.index_map``
+functions; *vector bands* become the block shape. See codegen.py.
+
+Legality: transforms here are bijections on the iteration set (interchange,
+reverse, tiling, interleave/unroll with divisibility, skew), so the
+multiset of executed points is preserved — property-tested in
+tests/test_schedule.py. Dependence legality (whether reordering is *valid*
+for a given statement) is the user's responsibility, exactly as in ISCC;
+drivers.validate() catches violations numerically, mirroring the paper's
+<kernel>_val.in stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .domain import Affine, IterDomain
+
+__all__ = [
+    "Schedule",
+    "LoweredNest",
+    "LoweredInstance",
+    "identity",
+]
+
+
+# ---------------------------------------------------------------------------
+# Lowered (concrete) form
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredInstance:
+    """iter[d] = sum_b A[d, b] * band[b] + c[d] for each domain dim d."""
+
+    A: tuple[tuple[int, ...], ...]  # (rank_domain, n_bands)
+    c: tuple[int, ...]  # (rank_domain,)
+
+    def apply(self, bands: Sequence[int]) -> tuple[int, ...]:
+        return tuple(
+            int(np.dot(row, bands)) + off for row, off in zip(self.A, self.c)
+        )
+
+    def apply_np(self, band_grids: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Vectorized map over broadcastable band index arrays."""
+        out = []
+        for row, off in zip(self.A, self.c):
+            acc = None
+            for coeff, g in zip(row, band_grids):
+                if coeff == 0:
+                    continue
+                term = coeff * g
+                acc = term if acc is None else acc + term
+            base = np.asarray(off) if acc is None else acc + off
+            out.append(base)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredNest:
+    band_names: tuple[str, ...]
+    band_extents: tuple[int, ...]
+    instances: tuple[LoweredInstance, ...]
+    domain_lo: tuple[int, ...]
+    domain_hi: tuple[int, ...]
+
+    @property
+    def n_bands(self) -> int:
+        return len(self.band_names)
+
+    @property
+    def rank(self) -> int:
+        return len(self.domain_lo)
+
+    def in_bounds(self, point: Sequence[int]) -> bool:
+        return all(
+            lo <= p < hi for p, lo, hi in zip(point, self.domain_lo, self.domain_hi)
+        )
+
+    def needs_guard(self) -> bool:
+        """True if some instance can map a band point outside the domain.
+
+        Checked by interval arithmetic over the band box — conservative and
+        exact for affine maps over boxes.
+        """
+        for inst in self.instances:
+            for d in range(self.rank):
+                lo = hi = inst.c[d]
+                for b, coeff in enumerate(inst.A[d]):
+                    if coeff == 0:
+                        continue
+                    span = coeff * (self.band_extents[b] - 1)
+                    lo += min(0, span)
+                    hi += max(0, span)
+                if lo < self.domain_lo[d] or hi >= self.domain_hi[d]:
+                    return True
+        return False
+
+    def executed_points(self):
+        """Serial enumeration in generated-code order (tests/oracle only)."""
+        def rec(i: int, vals: list[int]):
+            if i == self.n_bands:
+                for inst in self.instances:
+                    p = inst.apply(vals)
+                    if self.in_bounds(p):
+                        yield p
+                return
+            for v in range(self.band_extents[i]):
+                vals.append(v)
+                yield from rec(i + 1, vals)
+                vals.pop()
+
+        yield from rec(0, [])
+
+
+# ---------------------------------------------------------------------------
+# Transform records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Interchange:
+    a: str
+    b: str
+
+
+@dataclasses.dataclass(frozen=True)
+class _Tile:
+    dim: str
+    size: int
+    # names for the generated bands; default <dim>_T (outer) / <dim>_t (inner)
+    outer: str | None = None
+    inner: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _Interleave:
+    """The paper's triad optimization: split ``dim`` into ``factor``
+    equal blocks and *fuse* them into one body — instance k touches
+    ``lo + k*(E/factor) + b``. Requires extent % factor == 0."""
+
+    dim: str
+    factor: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _Unroll:
+    """Cyclic split-and-fuse: instance k touches ``lo + factor*b + k``."""
+
+    dim: str
+    factor: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _Reverse:
+    dim: str
+
+
+@dataclasses.dataclass(frozen=True)
+class _Skew:
+    target: str
+    source: str
+    factor: int
+
+
+_Transform = _Interchange | _Tile | _Interleave | _Unroll | _Reverse | _Skew
+
+
+# ---------------------------------------------------------------------------
+# Schedule builder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """An immutable chain of schedule relations. Fluent builders return new
+    schedules, so variants fork cheaply::
+
+        s = identity().tile("i", 32).interchange("i_T", "j_T")
+    """
+
+    transforms: tuple[_Transform, ...] = ()
+    name: str = "identity"
+
+    def _push(self, t: _Transform, tag: str) -> "Schedule":
+        nm = tag if self.name == "identity" else f"{self.name}.{tag}"
+        return Schedule(self.transforms + (t,), nm)
+
+    def interchange(self, a: str, b: str) -> "Schedule":
+        return self._push(_Interchange(a, b), f"interchange({a},{b})")
+
+    def tile(self, dim: str, size: int, outer: str | None = None,
+             inner: str | None = None) -> "Schedule":
+        if size < 1:
+            raise ValueError("tile size must be >= 1")
+        return self._push(_Tile(dim, size, outer, inner), f"tile({dim},{size})")
+
+    def interleave(self, dim: str, factor: int) -> "Schedule":
+        if factor < 1:
+            raise ValueError("interleave factor must be >= 1")
+        return self._push(_Interleave(dim, factor), f"interleave({dim},{factor})")
+
+    def unroll(self, dim: str, factor: int) -> "Schedule":
+        if factor < 1:
+            raise ValueError("unroll factor must be >= 1")
+        return self._push(_Unroll(dim, factor), f"unroll({dim},{factor})")
+
+    def reverse(self, dim: str) -> "Schedule":
+        return self._push(_Reverse(dim), f"reverse({dim})")
+
+    def skew(self, target: str, source: str, factor: int) -> "Schedule":
+        return self._push(_Skew(target, source, factor), f"skew({target},{source},{factor})")
+
+    # -- lowering ----------------------------------------------------------
+
+    def lower(self, dom: IterDomain, env: Mapping[str, int]) -> LoweredNest:
+        """Resolve parameters and apply the transform chain.
+
+        Internal state during lowering: a list of bands
+        ``(name, extent:int)`` and a list of instances, each a dict
+        ``dim_name -> (coeffs: dict[band_name, int], const: int)``.
+        """
+        lo = tuple(d.lo.eval(env) for d in dom.dims)
+        hi = tuple(d.hi.eval(env) for d in dom.dims)
+
+        bands: list[tuple[str, int]] = []
+        inst0: dict[str, tuple[dict[str, int], int]] = {}
+        for d, l, h in zip(dom.dims, lo, hi):
+            bands.append((d.name, max(0, h - l)))
+            inst0[d.name] = ({d.name: 1}, l)
+        instances = [inst0]
+
+        def band_index(name: str) -> int:
+            for i, (n, _) in enumerate(bands):
+                if n == name:
+                    return i
+            raise KeyError(f"no band named {name!r}; have {[n for n, _ in bands]}")
+
+        for t in self.transforms:
+            if isinstance(t, _Interchange):
+                ia, ib = band_index(t.a), band_index(t.b)
+                bands[ia], bands[ib] = bands[ib], bands[ia]
+
+            elif isinstance(t, _Tile):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                n_outer = -(-extent // t.size)  # ceil
+                outer = t.outer or f"{name}_T"
+                inner = t.inner or f"{name}_t"
+                bands[i : i + 1] = [(outer, n_outer), (inner, t.size)]
+                for inst in instances:
+                    for dim, (coeffs, const) in inst.items():
+                        c = coeffs.pop(name, 0)
+                        if c:
+                            coeffs[outer] = coeffs.get(outer, 0) + c * t.size
+                            coeffs[inner] = coeffs.get(inner, 0) + c
+
+            elif isinstance(t, (_Interleave, _Unroll)):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                f = t.factor
+                if extent % f != 0:
+                    raise ValueError(
+                        f"{type(t).__name__.lstrip('_').lower()}({name},{f}): "
+                        f"extent {extent} not divisible"
+                    )
+                new_extent = extent // f
+                bands[i] = (name, new_extent)
+                new_instances = []
+                for inst in instances:
+                    for k in range(f):
+                        clone: dict[str, tuple[dict[str, int], int]] = {}
+                        for dim, (coeffs, const) in inst.items():
+                            c = coeffs.get(name, 0)
+                            cf = dict(coeffs)
+                            if c:
+                                if isinstance(t, _Interleave):
+                                    # i -> k*(E/f) + b  (blocked split)
+                                    const2 = const + c * k * new_extent
+                                else:
+                                    # i -> f*b + k      (cyclic split)
+                                    cf[name] = c * f
+                                    const2 = const + c * k
+                            else:
+                                const2 = const
+                            clone[dim] = (cf, const2)
+                        new_instances.append(clone)
+                instances = new_instances
+
+            elif isinstance(t, _Reverse):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                for inst in instances:
+                    for dim, (coeffs, const) in inst.items():
+                        c = coeffs.get(name, 0)
+                        if c:
+                            coeffs[name] = -c
+                            inst[dim] = (coeffs, const + c * (extent - 1))
+
+            elif isinstance(t, _Skew):
+                band_index(t.source)  # existence check
+                for inst in instances:
+                    coeffs, const = inst[t.target] if t.target in inst else (None, None)
+                    if coeffs is None:
+                        raise KeyError(f"skew target {t.target!r} is not a domain dim")
+                    coeffs[t.source] = coeffs.get(t.source, 0) + t.factor
+            else:  # pragma: no cover
+                raise TypeError(t)
+
+        band_names = tuple(n for n, _ in bands)
+        band_extents = tuple(e for _, e in bands)
+        pos = {n: i for i, n in enumerate(band_names)}
+        lowered = []
+        for inst in instances:
+            A = []
+            c = []
+            for d in dom.dims:
+                coeffs, const = inst[d.name]
+                row = [0] * len(bands)
+                for bn, cf in coeffs.items():
+                    if bn in pos:
+                        row[pos[bn]] = cf
+                    elif cf != 0:
+                        raise AssertionError(f"dangling band {bn}")
+                A.append(tuple(row))
+                c.append(const)
+            lowered.append(LoweredInstance(tuple(A), tuple(c)))
+
+        return LoweredNest(band_names, band_extents, tuple(lowered), lo, hi)
+
+
+def identity() -> Schedule:
+    return Schedule()

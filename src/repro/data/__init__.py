@@ -1,0 +1,1 @@
+from .pipeline import Loader, MemmapSource, SyntheticSource, make_batch_fn

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function computes the same mathematical result as its Pallas
+counterpart with plain vectorized jax.numpy — no grids, no blocks. Tests
+sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "triad_ref",
+    "nstream_ref",
+    "jacobi1d_ref",
+    "jacobi2d_ref",
+    "jacobi2d9_ref",
+    "jacobi3d_ref",
+]
+
+
+def triad_ref(b: jnp.ndarray, c: jnp.ndarray, scalar: float = 3.0) -> jnp.ndarray:
+    return b + scalar * c
+
+
+def nstream_ref(streams, scalar: float = 3.0) -> jnp.ndarray:
+    """A = scalar*S0 + S1 + ... + Sk-1 (matches core.pattern.nstream)."""
+    acc = streams[0] * scalar
+    for s in streams[1:]:
+        acc = acc + s
+    return acc
+
+
+def jacobi1d_ref(b: jnp.ndarray) -> jnp.ndarray:
+    third = np.float32(1.0 / 3.0)
+    interior = (b[:-2] + b[1:-1] + b[2:]) * third
+    return b.at[1:-1].set(interior.astype(b.dtype))
+
+
+def jacobi2d_ref(b: jnp.ndarray) -> jnp.ndarray:
+    fifth = np.float32(1.0 / 5.0)
+    interior = (
+        b[:-2, 1:-1] + b[2:, 1:-1] + b[1:-1, :-2] + b[1:-1, 2:] + b[1:-1, 1:-1]
+    ) * fifth
+    return b.at[1:-1, 1:-1].set(interior.astype(b.dtype))
+
+
+def jacobi2d9_ref(b: jnp.ndarray) -> jnp.ndarray:
+    ninth = np.float32(1.0 / 9.0)
+    acc = None
+    for di in (0, 1, 2):
+        for dj in (0, 1, 2):
+            sl = b[di:b.shape[0] - 2 + di, dj:b.shape[1] - 2 + dj]
+            acc = sl if acc is None else acc + sl
+    return b.at[1:-1, 1:-1].set((acc * ninth).astype(b.dtype))
+
+
+def jacobi3d_ref(b: jnp.ndarray) -> jnp.ndarray:
+    seventh = np.float32(1.0 / 7.0)
+    interior = (
+        b[:-2, 1:-1, 1:-1] + b[2:, 1:-1, 1:-1]
+        + b[1:-1, :-2, 1:-1] + b[1:-1, 2:, 1:-1]
+        + b[1:-1, 1:-1, :-2] + b[1:-1, 1:-1, 2:]
+        + b[1:-1, 1:-1, 1:-1]
+    ) * seventh
+    return b.at[1:-1, 1:-1, 1:-1].set(interior.astype(b.dtype))

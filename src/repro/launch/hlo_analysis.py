@@ -1,0 +1,179 @@
+"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+
+``cost_analysis()`` reports FLOPs/bytes with while-loop (scan) bodies
+counted ONCE, and it does not expose collective traffic at all. This
+module parses ``compiled.as_text()`` to
+
+1. find every collective op (all-gather / all-reduce / reduce-scatter /
+   all-to-all / collective-permute) with its result shape and replica
+   group size,
+2. estimate each while loop's trip count (from the constant compared
+   against the induction variable in the loop condition computation),
+3. multiply per-computation counts by the loop-nesting trip product,
+
+yielding whole-step per-device collective bytes. Byte cost per op follows
+ring-algorithm accounting:
+
+    all-reduce       2 (k-1)/k x result bytes
+    all-gather         (k-1)/k x result bytes
+    reduce-scatter     (k-1)   x result bytes   (operand = k x result)
+    all-to-all         (k-1)/k x result bytes
+    collective-permute           result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "analyze_collectives", "parse_computations",
+           "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+)
+_CALLS_RE = re.compile(
+    r"(?:calls=|condition=|body=|to_apply=)%?([\w.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> dict[str, str]:
+    """Split HLO text into named computations (entry included)."""
+    comps: dict[str, str] = {}
+    cur_name, buf, depth = None, [], 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)[^{]*\{", stripped)
+            if m and stripped.endswith("{"):
+                cur_name = m.group(1)
+                buf = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(buf)
+            cur_name = None
+        else:
+            buf.append(line)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: largest integer constant in the loop condition."""
+    consts = [int(c) for c in _CONST_CMP_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    comps = parse_computations(hlo)
+
+    # while condition/body pairs and trip counts
+    trip: dict[str, int] = {}
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, loop_body = m.group(1), m.group(2)
+            t = _trip_count(comps.get(cond, ""))
+            trip[loop_body] = max(trip.get(loop_body, 1), t)
+            trip[cond] = max(trip.get(cond, 1), t)
+
+    # call multiplicity: entry has multiplier 1; called computations inherit
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.startswith("main"):
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        mult[name] += m
+        body = comps[name]
+        for cm in _CALLS_RE.finditer(body):
+            callee = cm.group(1)
+            if callee == name:
+                continue
+            visit(callee, m * trip.get(callee, 1), seen + (name,))
+
+    if entry:
+        visit(entry, 1.0, ())
+
+    by_kind: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    for name, body in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for cm in _COLL_RE.finditer(body):
+            shape_txt, kind = cm.group(1), cm.group(2)
+            nbytes = _shape_bytes(shape_txt)
+            line_end = body.find("\n", cm.end())
+            line = body[cm.start():line_end if line_end > 0 else None]
+            k = _group_size(line)
+            if kind == "all-reduce":
+                eff = 2.0 * (k - 1) / k * nbytes
+            elif kind == "all-gather":
+                eff = (k - 1) / k * nbytes
+            elif kind == "reduce-scatter":
+                eff = (k - 1) * nbytes
+            elif kind == "all-to-all":
+                eff = (k - 1) / k * nbytes
+            else:  # collective-permute
+                eff = float(nbytes)
+            by_kind[kind] += m * eff
+            count[kind] += int(m)
+    return CollectiveStats(dict(by_kind), dict(count))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 2

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+axis crosses DCN; data/model are intra-pod ICI.
+
+``make_production_mesh`` is a function (never module-level state) so that
+importing this module touches no jax device machinery — only the dry-run
+entrypoint sets the 512-device host-platform flag.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Runnable serving driver: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+
+Implements the full serving path the decode dry-run shapes lower:
+allocate cache -> prefill the prompt batch -> iterated one-token greedy
+decode. Reports per-phase wall time and tokens/s (CPU numbers on this
+container; the step functions are identical on a pod).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    B, P, G = args.batch, args.prompt_len, args.gen
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+
+    prefill = jax.jit(make_prefill_step(cfg, None), donate_argnums=(1,))
+    decode = jax.jit(make_serve_step(cfg, None), donate_argnums=(1,))
+
+    cache = lm.init_cache(cfg, B, P + G)
+    batch: dict = {}
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = jax.random.normal(
+            key, (B, P, cfg.d_model), jnp.bfloat16)
+        batch["cond"] = jax.random.normal(key, (B, 64, cfg.d_model),
+                                          jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    t0 = time.time()
+    tok, cache = prefill(params, cache, batch)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+    print(f"prefill: {B}x{P} tokens in {t_prefill:.3f}s "
+          f"({B*P/t_prefill:.0f} tok/s)")
+
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(G - 1):
+        if cfg.frontend == "audio":
+            step_in = {"frame_embeds": jnp.take(params["emb"], tok[:, -1:],
+                                                axis=0),
+                       "cond": batch["cond"]}
+        else:
+            step_in = {"tokens": tok}
+        tok, cache = decode(params, cache, step_in)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"decode: {G-1} steps x {B} seqs in {t_dec:.3f}s "
+          f"({B*(G-1)/max(t_dec,1e-9):.0f} tok/s)")
+    print(f"sample generated ids (seq 0): {gen[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Step factories: train_step / prefill_step / serve_step per (arch, shape).
+
+``train_step`` supports gradient accumulation (scan over microbatches) —
+required to fit the 1T/123B configs in the 16 GiB v5e budget — with the
+DP gradient all-reduce deferred to the accumulated gradient (one reduction
+per step; XLA schedules it as async all-reduce-start/done overlapping the
+optimizer). ``serve_step`` is one-token greedy decode against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, Shape
+from repro.models import lm
+from repro.models.moe import Parallelism
+from repro.optim import Optimizer
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "input_specs",
+    "microbatches_for",
+]
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: Shape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Batch inputs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"labels": sds((B, S), I32)}
+        if cfg.frontend == "audio":
+            batch["frame_embeds"] = sds((B, S, cfg.d_model), BF16)
+            batch["cond"] = sds((B, 64, cfg.d_model), BF16)
+        elif cfg.frontend == "vision":
+            vt = cfg.vision_tokens
+            batch["tokens"] = sds((B, S - vt), I32)
+            batch["vision_embeds"] = sds((B, vt, cfg.d_model), BF16)
+        else:
+            batch["tokens"] = sds((B, S), I32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frame_embeds": sds((B, S, cfg.d_model), BF16),
+                    "cond": sds((B, 64, cfg.d_model), BF16)}
+        if cfg.frontend == "vision":
+            vt = cfg.vision_tokens
+            return {"tokens": sds((B, S - vt), I32),
+                    "vision_embeds": sds((B, vt, cfg.d_model), BF16)}
+        return {"tokens": sds((B, S), I32)}
+    # decode: one new token against a cache of length S
+    if cfg.frontend == "audio":
+        return {"frame_embeds": sds((B, 1, cfg.d_model), BF16),
+                "cond": sds((B, 64, cfg.d_model), BF16)}
+    return {"tokens": sds((B, 1), I32)}
+
+
+def microbatches_for(cfg: ArchConfig, shape: Shape,
+                     par: Parallelism | None = None) -> int:
+    """Gradient-accumulation factor targeting ~4 GiB of layer-boundary
+    remat residuals per device: tokens_dev x d_model x 2B x L / mb <= 4e9.
+    Clamped so every DP shard keeps >= 1 sample per microbatch."""
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    if par is not None:
+        from repro.runtime.sharding import batch_axes_for
+        for a in batch_axes_for(par, shape.global_batch):
+            dp *= par.mesh.shape[a]
+    tokens_dev = shape.tokens / dp
+    resid = tokens_dev * cfg.d_model * 2 * cfg.n_layers
+    need = resid / 2.5e9
+    mb = 1
+    max_mb = max(1, shape.global_batch // dp)
+    while mb < need and mb * 2 <= max_mb and shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, par: Parallelism | None, opt: Optimizer,
+                    *, num_microbatches: int = 1, remat: bool = True,
+                    accum_dtype=jnp.float32,
+                    grad_shardings=None) -> Callable:
+    """``grad_shardings`` (params-shaped NamedSharding tree) pins the
+    gradient accumulator to the *param* sharding inside the microbatch
+    scan — ZeRO-2 semantics: each microbatch's DP reduction lowers to a
+    reduce-scatter onto the shard instead of a full all-reduce of a
+    replicated carry (2x fewer bytes, params-sized instead of
+    replicated-sized carry memory)."""
+
+    def pin(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, par=par, remat=remat)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        if num_microbatches == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+            grads = pin(grads)
+        else:
+            k = num_microbatches
+
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                tot, g = carry
+                li, gi = jax.value_and_grad(loss)(params, mb)
+                gi = pin(gi)  # shard the raw microbatch grad immediately:
+                # without this, GSPMD materializes it replicated before the
+                # add (params-sized x dp_replication of temp)
+                g = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g, gi
+                )
+                return (tot + li, pin(g)), None
+
+            g0 = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            ))
+            (l, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), g0), micro
+            )
+            l = l / k
+            grads = jax.tree.map(lambda g: (g / k).astype(jnp.float32), grads)
+        new_params, opt_state = opt.update(grads, state["opt"], params)
+        inner = opt_state.get("inner", opt_state)  # compression wrapper
+        metrics = {"loss": l, "step": inner.get("step", 0)}
+        return {"params": new_params, "opt": opt_state}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig, par: Parallelism | None) -> Callable:
+    def prefill_step(params: dict, cache: dict, batch: dict
+                     ) -> tuple[jnp.ndarray, dict]:
+        hidden, new_cache, _ = lm.apply(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("frame_embeds"),
+            prefix_embeds=batch.get("vision_embeds"),
+            cond=batch.get("cond"),
+            cache=cache, par=par, remat=False,
+        )
+        # next-token ids for the last position only (greedy)
+        last = hidden[:, -1:]
+        logits = last @ lm.unembed_table(params, cfg).T
+        return jnp.argmax(logits, axis=-1).astype(I32), new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, par: Parallelism | None) -> Callable:
+    def serve_step(params: dict, cache: dict, batch: dict
+                   ) -> tuple[jnp.ndarray, dict]:
+        hidden, new_cache, _ = lm.apply(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("frame_embeds"),
+            cond=batch.get("cond"),
+            cache=cache, par=par, remat=False,
+        )
+        logits = hidden @ lm.unembed_table(params, cfg).T
+        return jnp.argmax(logits, axis=-1).astype(I32), new_cache
+
+    return serve_step

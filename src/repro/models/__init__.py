@@ -1,0 +1,4 @@
+from . import attention, layers, lm, moe, ssm  # noqa: F401
+from .moe import Parallelism
+
+__all__ = ["attention", "layers", "lm", "moe", "ssm", "Parallelism"]

@@ -1,0 +1,131 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings, loss.
+
+Conventions used across the model zoo:
+
+* params are nested dicts of jnp arrays; weights live in bf16 (the v5e
+  compute dtype), math that needs range runs in f32 and casts back;
+* every constructor comes in (init, apply) pairs; layer stacks are built
+  by vmapping init over a leading layer axis and scanning apply;
+* logical sharding is attached *by name* via runtime.sharding rules — no
+  sharding code in the layers themselves.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "init_linear",
+    "init_embed",
+    "mlp_init",
+    "mlp_apply",
+    "cross_entropy_loss",
+]
+
+Dtype = jnp.dtype
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def init_linear(key, d_in: int, d_out: int, *, scale: float | None = None,
+                dtype=DEFAULT_DTYPE) -> jnp.ndarray:
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, *, dtype=DEFAULT_DTYPE) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == cos.ndim + 1:  # head axis present: (..., S, H, D)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, act: str, *, dtype=DEFAULT_DTYPE) -> dict:
+    """act: "silu" (SwiGLU) | "geglu" (gated GELU, gemma) | "gelu" (plain)."""
+    ks = jax.random.split(key, 3)
+    p = {"w_out": init_linear(ks[2], f, d, dtype=dtype)}
+    if act in ("silu", "geglu"):  # gated: gate + up projections
+        p["w_gate"] = init_linear(ks[0], d, f, dtype=dtype)
+        p["w_in"] = init_linear(ks[1], d, f, dtype=dtype)
+    else:  # plain GELU MLP
+        p["w_in"] = init_linear(ks[1], d, f, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = jax.nn.gelu(x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence so (B,S,V) logits never materialize)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(
+    x: jnp.ndarray,            # (B, S, d) final hidden states
+    emb: jnp.ndarray,          # (V, d) unembedding (tied or separate)
+    labels: jnp.ndarray,       # (B, S) int32; -1 = masked
+    *, chunks: int = 8,
+) -> jnp.ndarray:
+    """Mean masked token cross entropy, computed in S/chunks slabs."""
+    B, S, d = x.shape
+    chunks = min(chunks, S)
+    while S % chunks:
+        chunks -= 1
+    C = S // chunks
+    xc = x.reshape(B, chunks, C, d).swapaxes(0, 1)          # (chunks,B,C,d)
+    lc = labels.reshape(B, chunks, C).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xs, ls = inp
+        logits = (xs @ emb.T).astype(jnp.float32)           # (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - ll) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

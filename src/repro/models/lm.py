@@ -1,0 +1,723 @@
+"""Decoder-LM assembly for all 10 assigned architectures.
+
+A single ``init``/``apply`` pair covers the zoo; family differences are
+config-driven:
+
+* dense / audio / vlm — uniform GQA+MLP blocks, scanned over layers.
+  gemma3's 5:1 local:global pattern is a per-layer (window, rope_theta)
+  array scanned alongside the params. musicgen adds per-layer
+  cross-attention to the (stub) conditioning sequence. phi-3-vision
+  consumes stub patch embeddings concatenated before the text tokens.
+* moe — ``first_k_dense`` dense blocks (unrolled) + scanned MLA+MoE blocks.
+* ssm (xlstm) — groups of (slstm_every-1) mLSTM + 1 sLSTM, scanned over
+  groups.
+* hybrid (zamba2) — groups of ``hybrid_attn_every`` Mamba2 blocks + one
+  *shared* (weight-tied) attention block, scanned over groups; trailing
+  mamba blocks unrolled.
+
+Caches are pytrees with leading layer axes, scanned in lockstep with the
+params during decode. ``apply`` is mode-agnostic: ``cache=None`` is
+train/score, a fresh cache is prefill, a filled cache is decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig
+from .attention import gqa_apply, gqa_init, mla_apply, mla_init
+from .layers import (
+    DEFAULT_DTYPE,
+    cross_entropy_loss,
+    init_embed,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from .moe import Parallelism, moe_apply, moe_init
+from .ssm import (
+    mamba2_apply,
+    mamba2_init,
+    mlstm_apply,
+    mlstm_init,
+    slstm_apply,
+    slstm_init,
+)
+
+__all__ = ["init_params", "apply", "init_cache", "Parallelism", "loss_fn"]
+
+AUX_COEF = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(n: int, fn, key):
+    """vmap an init over a leading layer axis."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _constrain(x, par: Parallelism | None, spec: P):
+    if par is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(par.mesh, spec))
+
+
+def _pin_layer(lp, par: Parallelism | None):
+    """Constrain one layer's param slice to its partition spec inside the
+    layer scan. The constraint's transpose pins the per-layer *gradient*
+    slices too, which keeps the scan-transpose's stacked grads sharded
+    (without it GSPMD materializes them DP-replicated: params-sized x
+    dp_size temporaries — the dominant train-memory term at 123B+)."""
+    if par is None:
+        return lp
+    from repro.runtime.sharding import param_specs  # lazy: no cycle
+
+    specs = param_specs(lp, par)
+    return jax.tree.map(
+        lambda a, s: jax.lax.with_sharding_constraint(
+            a, NamedSharding(par.mesh, s)),
+        lp, specs,
+    )
+
+
+def _norm_gamma(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def _gemma_layer_meta(cfg: ArchConfig):
+    """Per-layer (window, theta) arrays for the local/global pattern."""
+    wins, thetas = [], []
+    for l in range(cfg.n_layers):
+        is_global = cfg.global_every and ((l + 1) % cfg.global_every == 0)
+        wins.append(0 if is_global else cfg.window)
+        thetas.append(cfg.rope_theta if is_global else 1e4)
+    return (jnp.array(wins, jnp.int32), jnp.array(thetas, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig, *, dtype=DEFAULT_DTYPE) -> dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {"emb": init_embed(keys[0], cfg.vocab_size, d, dtype=dtype),
+                         "ln_f": _norm_gamma(d)}
+    if not cfg.tie_embeddings:
+        p["unemb"] = init_embed(keys[1], cfg.vocab_size, d, dtype=dtype)
+
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "vlm"):
+        def block(k):
+            ks = jax.random.split(k, 4)
+            blk = {
+                "ln1": _norm_gamma(d), "ln2": _norm_gamma(d),
+                "attn": gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, dtype=dtype),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype=dtype),
+            }
+            if fam == "audio":
+                blk["ln_x"] = _norm_gamma(d)
+                blk["xattn"] = gqa_init(ks[2], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.head_dim, dtype=dtype)
+            return blk
+
+        p["layers"] = _stack_init(cfg.n_layers, block, keys[2])
+
+    elif fam == "moe":
+        def dense_block(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "ln1": _norm_gamma(d), "ln2": _norm_gamma(d),
+                "attn": mla_init(ks[0], d, cfg.n_heads, cfg.mla, dtype=dtype),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype=dtype),
+            }
+
+        def moe_block(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "ln1": _norm_gamma(d), "ln2": _norm_gamma(d),
+                "attn": mla_init(ks[0], d, cfg.n_heads, cfg.mla, dtype=dtype),
+                "moe": moe_init(ks[1], d, cfg.moe, dtype=dtype),
+            }
+
+        nd = cfg.moe.first_k_dense
+        p["dense_layers"] = [
+            dense_block(k) for k in jax.random.split(keys[2], nd)
+        ]
+        p["layers"] = _stack_init(cfg.n_layers - nd, moe_block, keys[3])
+
+    elif fam == "ssm":  # xlstm
+        ssm = cfg.ssm
+        per = ssm.slstm_every or cfg.n_layers + 1
+        n_groups = max(1, cfg.n_layers // per)
+        n_m = per - 1 if ssm.slstm_every else cfg.n_layers
+
+        def group(k):
+            ks = jax.random.split(k, n_m + 1)
+            g = {
+                "mlstm": jax.vmap(
+                    lambda kk: {
+                        "ln": _norm_gamma(d),
+                        "blk": mlstm_init(kk, d, cfg.n_heads,
+                                          ssm.head_dim, dtype=dtype),
+                    }
+                )(jnp.stack(ks[:n_m])),
+            }
+            if ssm.slstm_every:
+                g["slstm"] = {"ln": _norm_gamma(d),
+                              "blk": slstm_init(ks[-1], d, cfg.n_heads,
+                                                dtype=dtype)}
+            return g
+
+        p["groups"] = _stack_init(n_groups, group, keys[2])
+
+    elif fam == "hybrid":  # zamba2
+        ssm = cfg.ssm
+        per = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_groups * per
+
+        def mamba_block(k):
+            return {"ln": _norm_gamma(d),
+                    "blk": mamba2_init(k, d, ssm, dtype=dtype)}
+
+        def group(k):
+            ks = jax.random.split(k, per)
+            return {"mamba": jax.vmap(mamba_block)(jnp.stack(ks))}
+
+        p["groups"] = _stack_init(n_groups, group, keys[2])
+        if n_tail:
+            p["tail"] = _stack_init(n_tail, mamba_block, keys[3])
+        ks = jax.random.split(keys[4], 2)
+        p["shared_attn"] = {
+            "ln1": _norm_gamma(d), "ln2": _norm_gamma(d),
+            "attn": gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim, dtype=dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype=dtype),
+        }
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               *, dtype=DEFAULT_DTYPE) -> dict:
+    """Allocate decode caches (leading layer axes match the param stacks).
+
+    Local/sliding-window attention layers (gemma3's 5-in-6, zamba2's
+    shared block) get *ring* caches bounded at the window size — the
+    memory-pattern optimization from EXPERIMENTS.md §Perf: a 32k-context
+    gemma3 decode cache shrinks ~25x vs uniform full-length stacks.
+    """
+    from .attention import RING_EMPTY_POS
+
+    d, fam = cfg.d_model, cfg.family
+    z = jnp.zeros
+    kvhd = (cfg.n_kv_heads, cfg.head_dim)
+    if fam in ("dense", "audio", "vlm"):
+        L = cfg.n_layers
+        if cfg.global_every and cfg.window:
+            # grouped layout: (per-1) local ring layers + 1 global per group
+            per = cfg.global_every
+            G = L // per
+            n_tail = L - G * per
+            W = min(max_len, cfg.window + 1)
+            c = {
+                "local_k": z((G, per - 1, batch, W) + kvhd, dtype),
+                "local_v": z((G, per - 1, batch, W) + kvhd, dtype),
+                "local_pos": jnp.full((G, per - 1, W), RING_EMPTY_POS,
+                                      jnp.int32),
+                "k": z((G, batch, max_len) + kvhd, dtype),
+                "v": z((G, batch, max_len) + kvhd, dtype),
+                "len": jnp.zeros((), jnp.int32),
+            }
+            if n_tail:
+                c["tail_k"] = z((n_tail, batch, W) + kvhd, dtype)
+                c["tail_v"] = z((n_tail, batch, W) + kvhd, dtype)
+                c["tail_pos"] = jnp.full((n_tail, W), RING_EMPTY_POS,
+                                         jnp.int32)
+            return c
+        return {
+            "k": z((L, batch, max_len) + kvhd, dtype),
+            "v": z((L, batch, max_len) + kvhd, dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if fam == "moe":
+        L = cfg.n_layers
+        mla = cfg.mla
+        return {
+            "ckv": z((L, batch, max_len, mla.kv_lora_rank), dtype),
+            "krope": z((L, batch, max_len, mla.qk_rope_head_dim), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if fam == "ssm":
+        ssm = cfg.ssm
+        per = ssm.slstm_every or cfg.n_layers + 1
+        n_groups = max(1, cfg.n_layers // per)
+        n_m = per - 1 if ssm.slstm_every else cfg.n_layers
+        H, Dh = cfg.n_heads, ssm.head_dim
+        c = {
+            "mlstm": z((n_groups, n_m, batch, H, Dh, Dh + 1), jnp.float32),
+        }
+        if ssm.slstm_every:
+            c["slstm"] = tuple(
+                z((n_groups, batch, d), jnp.float32) for _ in range(3)
+            )
+        c["len"] = jnp.zeros((), jnp.int32)
+        return c
+    if fam == "hybrid":
+        ssm = cfg.ssm
+        per = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_groups * per
+        d_in = ssm.expand * d
+        H = d_in // ssm.head_dim
+        conv_ch = d_in + 2 * ssm.d_state
+        attn_len = min(max_len, cfg.window) if cfg.window else max_len
+
+        def mamba_cache(lead):
+            return {
+                "state": z(lead + (batch, H, ssm.d_state, ssm.head_dim),
+                           jnp.float32),
+                "conv": z(lead + (batch, ssm.conv_width - 1, conv_ch), dtype),
+            }
+
+        W = min(max_len, cfg.window + 1) if cfg.window else max_len
+        c = {
+            "groups": mamba_cache((n_groups, per)),
+            "attn_k": z((n_groups, batch, W, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+            "attn_v": z((n_groups, batch, W, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+            "attn_pos": jnp.full((n_groups, W), RING_EMPTY_POS, jnp.int32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        if n_tail:
+            c["tail"] = mamba_cache((n_tail,))
+        return c
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def apply(
+    params: dict,
+    cfg: ArchConfig,
+    *,
+    tokens: jnp.ndarray | None = None,       # (B, S) int32
+    embeds: jnp.ndarray | None = None,       # (B, S, d) — frontends
+    prefix_embeds: jnp.ndarray | None = None,  # vlm patch embeddings
+    cond: jnp.ndarray | None = None,         # audio conditioning (B, Tc, d)
+    positions: jnp.ndarray | None = None,
+    cache: dict | None = None,
+    par: Parallelism | None = None,
+    remat: bool = True,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    """Run the backbone. Returns (hidden (B,S,d), new_cache, aux_loss)."""
+    d = cfg.d_model
+    if embeds is None:
+        if par is not None and par.vocab_axis in par.batch_axes:
+            # keep token ids off the vocab axis so the vocab-sharded table
+            # is gathered per-shard, not replicated (see loss_fn note)
+            ba = tuple(a for a in par.batch_axes if a != par.vocab_axis)
+            tokens = _constrain(tokens, par, P(ba if ba else None, None))
+        embeds = jnp.take(params["emb"], tokens, axis=0)
+        if cfg.family == "dense" and cfg.tie_embeddings:
+            embeds = embeds * jnp.asarray(np.sqrt(d), embeds.dtype)
+    if prefix_embeds is not None:
+        embeds = jnp.concatenate([prefix_embeds.astype(embeds.dtype), embeds],
+                                 axis=1)
+    B, S, _ = embeds.shape
+    if positions is None:
+        start = cache["len"] if cache is not None else 0
+        positions = start + jnp.arange(S)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    bspec = P((par.act_axes or None) if par else None, None, None)
+    x = _constrain(embeds, par, bspec)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    new_cache = None
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if (remat and cache is None) else fn
+
+    if fam in ("dense", "audio", "vlm"):
+        wins, thetas = (
+            _gemma_layer_meta(cfg) if cfg.global_every
+            else (jnp.zeros((cfg.n_layers,), jnp.int32) + cfg.window,
+                  jnp.full((cfg.n_layers,), cfg.rope_theta, jnp.float32))
+        )
+
+        def block(x, lp, lc, win, theta, *, ring=False):
+            h, a_cache = gqa_apply(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.rmsnorm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions,
+                rope_theta=theta, window=win,
+                cache=None if lc is None else {**lc, "len": cache["len"]},
+                ring=ring,
+            )
+            x = _constrain(x + h, par, bspec)
+            if fam == "audio":
+                # cross-attention to the conditioning sequence (stub T5 enc)
+                xh, _ = gqa_apply(
+                    lp["xattn"], rms_norm(x, lp["ln_x"], cfg.rmsnorm_eps),
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, positions=positions,
+                    causal=False, kv_seq=cond,
+                )
+                x = _constrain(x + xh, par, bspec)
+            m = mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.rmsnorm_eps),
+                          cfg.act)
+            x = _constrain(x + m, par, bspec)
+            return x, a_cache
+
+        block = maybe_remat(block)
+        if cache is not None and cfg.global_every and cfg.window:
+            # ---- serve path, gemma3 grouped local/global caches --------
+            per = cfg.global_every
+            G = cfg.n_layers // per
+            n_tail = cfg.n_layers - G * per
+            main_p = jax.tree.map(
+                lambda a: a[:G * per].reshape((G, per) + a.shape[1:]),
+                params["layers"])
+            tail_p = (jax.tree.map(lambda a: a[G * per:], params["layers"])
+                      if n_tail else None)
+
+            def group_body(carry, inp):
+                x, gk, gv = carry
+                gp, lk, lv, lpos, g = inp
+                new_lk, new_lv, new_lpos = [], [], []
+                for i in range(per - 1):  # local ring layers
+                    lp = jax.tree.map(lambda a: a[i], gp)
+                    lc = {"k": lk[i], "v": lv[i], "pos": lpos[i]}
+                    x, nc = block(x, lp, lc, cfg.window, 1e4, ring=True)
+                    new_lk.append(nc["k"])
+                    new_lv.append(nc["v"])
+                    new_lpos.append(nc["pos"])
+                # global layer (last in group) — full-length carried cache
+                lp = jax.tree.map(lambda a: a[per - 1], gp)
+                ck = jax.lax.dynamic_index_in_dim(gk, g, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(gv, g, 0, keepdims=False)
+                x, nc = block(x, lp, {"k": ck, "v": cv}, 0, cfg.rope_theta)
+                gk = jax.lax.dynamic_update_index_in_dim(gk, nc["k"], g, 0)
+                gv = jax.lax.dynamic_update_index_in_dim(gv, nc["v"], g, 0)
+                ys = (jnp.stack(new_lk), jnp.stack(new_lv),
+                      jnp.stack(new_lpos))
+                return (x, gk, gv), ys
+
+            (x, gk, gv), (nlk, nlv, nlpos) = jax.lax.scan(
+                group_body, (x, cache["k"], cache["v"]),
+                (main_p, cache["local_k"], cache["local_v"],
+                 cache["local_pos"], jnp.arange(G)),
+            )
+            new_cache = dict(cache)
+            new_cache.update({"k": gk, "v": gv, "local_k": nlk,
+                              "local_v": nlv, "local_pos": nlpos,
+                              "len": cache["len"] + S})
+            if n_tail:
+                tks, tvs, tps = [], [], []
+                for t in range(n_tail):
+                    lp = jax.tree.map(lambda a: a[t], tail_p)
+                    lc = {"k": cache["tail_k"][t], "v": cache["tail_v"][t],
+                          "pos": cache["tail_pos"][t]}
+                    x, nc = block(x, lp, lc, cfg.window, 1e4, ring=True)
+                    tks.append(nc["k"])
+                    tvs.append(nc["v"])
+                    tps.append(nc["pos"])
+                new_cache["tail_k"] = jnp.stack(tks)
+                new_cache["tail_v"] = jnp.stack(tvs)
+                new_cache["tail_pos"] = jnp.stack(tps)
+        elif cache is not None:
+            # ---- serve path, uniform layers: carry the stacked cache so
+            # the while loop updates it in place (no xs/ys double buffer)
+            def scan_body(carry, inp):
+                x, ck, cv = carry
+                lp, win, theta, l = inp
+                lc = {
+                    "k": jax.lax.dynamic_index_in_dim(ck, l, 0, False),
+                    "v": jax.lax.dynamic_index_in_dim(cv, l, 0, False),
+                }
+                x, nc = block(x, lp, lc, win, theta)
+                ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], l, 0)
+                cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], l, 0)
+                return (x, ck, cv), None
+
+            (x, ck, cv), _ = jax.lax.scan(
+                scan_body, (x, cache["k"], cache["v"]),
+                (params["layers"], wins, thetas, jnp.arange(cfg.n_layers)),
+            )
+            new_cache = dict(cache)
+            new_cache.update({"k": ck, "v": cv, "len": cache["len"] + S})
+        else:
+            # ---- train/score path: plain scan over rematted layers ------
+            def scan_body(x, inp):
+                lp, win, theta = inp
+                x, _ = block(x, lp, None, win, theta)
+                return x, None
+
+            x, _ = jax.lax.scan(scan_body, x,
+                                (params["layers"], wins, thetas))
+
+    elif fam == "moe":
+        nd = cfg.moe.first_k_dense
+
+        def mla_block(x, lp, lc, moe_layer: bool):
+            h, a_cache = mla_apply(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.rmsnorm_eps),
+                n_heads=cfg.n_heads, mla=cfg.mla, positions=positions,
+                rope_theta=cfg.rope_theta,
+                cache=None if lc is None else
+                {"ckv": lc["ckv"], "krope": lc["krope"], "len": cache["len"]},
+            )
+            x = _constrain(x + h, par, bspec)
+            xn = rms_norm(x, lp["ln2"], cfg.rmsnorm_eps)
+            if moe_layer:
+                m, aux = moe_apply(lp["moe"], xn, cfg.moe, par=par,
+                                   act=cfg.act)
+            else:
+                m, aux = mlp_apply(lp["mlp"], xn, cfg.act), 0.0
+            x = _constrain(x + m, par, bspec)
+            new_lc = (None if a_cache is None else
+                      {"ckv": a_cache["ckv"], "krope": a_cache["krope"]})
+            return x, new_lc, aux
+
+        mla_block_r = maybe_remat(partial(mla_block, moe_layer=True))
+        ckv_buf = cache["ckv"] if cache is not None else None
+        krope_buf = cache["krope"] if cache is not None else None
+        for l in range(nd):
+            lc = (None if cache is None else
+                  {"ckv": ckv_buf[l], "krope": krope_buf[l]})
+            x, new_lc, aux = mla_block(x, params["dense_layers"][l], lc,
+                                       moe_layer=False)
+            if cache is not None:
+                ckv_buf = ckv_buf.at[l].set(new_lc["ckv"])
+                krope_buf = krope_buf.at[l].set(new_lc["krope"])
+
+        if cache is not None:
+            # carry the stacked cache buffers: in-place while-loop updates
+            def scan_body(carry, inp):
+                x, aux_t, cb, kb = carry
+                lp, l = inp
+                lc = {
+                    "ckv": jax.lax.dynamic_index_in_dim(cb, l, 0, False),
+                    "krope": jax.lax.dynamic_index_in_dim(kb, l, 0, False),
+                }
+                x, new_lc, aux = mla_block_r(x, lp, lc)
+                cb = jax.lax.dynamic_update_index_in_dim(
+                    cb, new_lc["ckv"], l, 0)
+                kb = jax.lax.dynamic_update_index_in_dim(
+                    kb, new_lc["krope"], l, 0)
+                return (x, aux_t + aux, cb, kb), None
+
+            (x, aux_total, ckv_buf, krope_buf), _ = jax.lax.scan(
+                scan_body, (x, aux_total, ckv_buf, krope_buf),
+                (params["layers"], nd + jnp.arange(cfg.n_layers - nd)),
+            )
+            new_cache = dict(cache)
+            new_cache.update({"ckv": ckv_buf, "krope": krope_buf,
+                              "len": cache["len"] + S})
+        else:
+            def scan_body(carry, lp):
+                x, aux_t = carry
+                x, _, aux = mla_block_r(x, lp, None)
+                return (x, aux_t + aux), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["layers"]
+            )
+
+    elif fam == "ssm":
+        ssm = cfg.ssm
+        n_m = (ssm.slstm_every - 1) if ssm.slstm_every else cfg.n_layers
+
+        def group_body(x, gp, gc):
+            new_m, new_s = [], None
+            for i in range(n_m):
+                lp = jax.tree.map(lambda a: a[i], gp["mlstm"])
+                lc = (None if gc is None else {"state": gc["mlstm"][i]})
+                h, nc = mlstm_apply(
+                    lp["blk"], rms_norm(x, lp["ln"], cfg.rmsnorm_eps),
+                    n_heads=cfg.n_heads, head_dim=ssm.head_dim,
+                    chunk=ssm.chunk, cache=lc,
+                )
+                x = _constrain(x + h, par, bspec)
+                if nc is not None:
+                    new_m.append(nc["state"])
+            if ssm.slstm_every:
+                sp = gp["slstm"]
+                lc = (None if gc is None else {"hcn": gc["slstm"]})
+                h, nc = slstm_apply(
+                    sp["blk"], rms_norm(x, sp["ln"], cfg.rmsnorm_eps),
+                    n_heads=cfg.n_heads, cache=lc,
+                )
+                x = _constrain(x + h, par, bspec)
+                if nc is not None:
+                    new_s = nc["hcn"]
+            ngc = None
+            if gc is not None:
+                ngc = {"mlstm": jnp.stack(new_m)}
+                if new_s is not None:
+                    ngc["slstm"] = new_s
+            return x, ngc
+
+        group_body = maybe_remat(group_body)
+        gcs = None
+        if cache is not None:
+            gcs = {"mlstm": cache["mlstm"]}
+            if ssm.slstm_every:
+                gcs["slstm"] = cache["slstm"]
+
+        def scan_body(x, inp):
+            gp, gc = inp
+            return group_body(x, gp, gc)
+
+        x, new_gcs = jax.lax.scan(scan_body, x, (params["groups"], gcs))
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["mlstm"] = new_gcs["mlstm"]
+            if ssm.slstm_every:
+                new_cache["slstm"] = new_gcs["slstm"]
+            new_cache["len"] = cache["len"] + S
+
+    elif fam == "hybrid":
+        ssm = cfg.ssm
+        per = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_groups * per
+        sa = params["shared_attn"]
+
+        def mamba_one(x, lp, lc):
+            h, nc = mamba2_apply(
+                lp["blk"], rms_norm(x, lp["ln"], cfg.rmsnorm_eps), ssm,
+                cache=lc,
+            )
+            return _constrain(x + h, par, bspec), nc
+
+        def group_body(x, gp, gc):
+            new_mc = []
+            for i in range(per):
+                lp = jax.tree.map(lambda a: a[i], gp["mamba"])
+                lc = (None if gc is None else
+                      jax.tree.map(lambda a: a[i], gc["mamba"]))
+                x, nc = mamba_one(x, lp, lc)
+                if nc is not None:
+                    new_mc.append(nc)
+            # shared attention block (weight-tied across groups); the KV
+            # cache is a window-bounded ring (cfg.window)
+            a_lc = None
+            if gc is not None:
+                a_lc = {"k": gc["attn_k"], "v": gc["attn_v"],
+                        "pos": gc["attn_pos"], "len": cache["len"]}
+            h, a_cache = gqa_apply(
+                sa["attn"], rms_norm(x, sa["ln1"], cfg.rmsnorm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions,
+                rope_theta=cfg.rope_theta, window=cfg.window,
+                cache=a_lc, ring=gc is not None,
+            )
+            x = _constrain(x + h, par, bspec)
+            m = mlp_apply(sa["mlp"], rms_norm(x, sa["ln2"], cfg.rmsnorm_eps),
+                          cfg.act)
+            x = _constrain(x + m, par, bspec)
+            ngc = None
+            if gc is not None:
+                ngc = {
+                    "mamba": jax.tree.map(
+                        lambda *a: jnp.stack(a), *new_mc
+                    ),
+                    "attn_k": a_cache["k"], "attn_v": a_cache["v"],
+                    "attn_pos": a_cache["pos"],
+                }
+            return x, ngc
+
+        group_body = maybe_remat(group_body)
+        gcs = None
+        if cache is not None:
+            gcs = {"mamba": cache["groups"], "attn_k": cache["attn_k"],
+                   "attn_v": cache["attn_v"], "attn_pos": cache["attn_pos"]}
+
+        def scan_body(x, inp):
+            gp, gc = inp
+            return group_body(x, gp, gc)
+
+        x, new_gcs = jax.lax.scan(scan_body, x, (params["groups"], gcs))
+        new_tail = []
+        if n_tail:
+            for i in range(n_tail):
+                lp = jax.tree.map(lambda a: a[i], params["tail"])
+                lc = (None if cache is None else
+                      jax.tree.map(lambda a: a[i], cache["tail"]))
+                x, nc = mamba_one(x, lp, lc)
+                if nc is not None:
+                    new_tail.append(nc)
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["groups"] = new_gcs["mamba"]
+            new_cache["attn_k"] = new_gcs["attn_k"]
+            new_cache["attn_v"] = new_gcs["attn_v"]
+            new_cache["attn_pos"] = new_gcs["attn_pos"]
+            if n_tail:
+                new_cache["tail"] = jax.tree.map(
+                    lambda *a: jnp.stack(a), *new_tail
+                )
+            new_cache["len"] = cache["len"] + S
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["ln_f"], cfg.rmsnorm_eps)
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def unembed_table(params: dict, cfg: ArchConfig) -> jnp.ndarray:
+    return params["emb"] if cfg.tie_embeddings else params["unemb"]
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict,
+            par: Parallelism | None = None, remat: bool = True) -> jnp.ndarray:
+    """Causal-LM loss over a batch dict (see launch.dryrun.input_specs)."""
+    hidden, _, aux = apply(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("frame_embeds"),
+        prefix_embeds=batch.get("vision_embeds"),
+        cond=batch.get("cond"),
+        par=par, remat=remat,
+    )
+    labels = batch["labels"]
+    if par is not None and par.vocab_axis in par.batch_axes:
+        # vocab-parallel loss (Megatron-style): tokens must not be sharded
+        # over the vocab axis, or every device gathers the whole embedding
+        # table (and its f32 gradient) — reshard batch off that axis here.
+        ba = tuple(a for a in par.batch_axes if a != par.vocab_axis)
+        hidden = _constrain(hidden, par, P(ba if ba else None, None, None))
+        labels = _constrain(labels, par, P(ba if ba else None, None))
+    loss = cross_entropy_loss(hidden, unembed_table(params, cfg), labels)
+    return loss + AUX_COEF * aux

@@ -1,0 +1,330 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+One chunked linear-recurrence core serves both families::
+
+    S_t = exp(log_a_t) * S_{t-1} + exp(log_b_t) * k_t v_t^T     (per head)
+    y_t = q_t . S_t
+
+* Mamba2: q=C, k=B (shared across heads), v=x, log_a=A*dt, log_b=log(dt).
+* mLSTM:  q,k,v projections; log_a=logsigmoid(f), log_b=i (exp input
+  gate); the normalizer n_t is carried as an extra value column (v
+  augmented with ones), so y = (num . q) / max(den . q, 1).
+
+The chunked form (intra-chunk quadratic + inter-chunk state scan) is the
+TPU-native formulation: matmul-heavy, O(S) memory, parallel over chunks —
+the paper's "adapt the access pattern to the memory hierarchy" applied to
+recurrences. Decode is the O(1) state update.
+
+sLSTM has genuine recurrent weight matrices (h_{t-1} feeds the gates), so
+it cannot be chunk-parallelized; it runs as a lax.scan over time — slow
+but faithful, and only 1-in-8 xLSTM blocks use it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import DEFAULT_DTYPE, init_linear
+
+__all__ = [
+    "chunked_linear_attention",
+    "linear_attention_step",
+    "mamba2_init", "mamba2_apply", "mamba2_step",
+    "mlstm_init", "mlstm_apply", "mlstm_step",
+    "slstm_init", "slstm_apply",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked linear recurrence
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray,       # (B,S,H,N)
+    k: jnp.ndarray,       # (B,S,H,N)
+    v: jnp.ndarray,       # (B,S,H,D)
+    log_a: jnp.ndarray,   # (B,S,H)
+    log_b: jnp.ndarray,   # (B,S,H)
+    *, chunk: int = 256,
+    initial_state: jnp.ndarray | None = None,  # (B,H,N,D)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,D), final_state (B,H,N,D)). f32 internal math."""
+    B, S, H, N = q.shape
+    D = v.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, nc, chunk, H, N)
+    kc = k.astype(f32).reshape(B, nc, chunk, H, N)
+    vc = v.astype(f32).reshape(B, nc, chunk, H, D)
+    la = log_a.astype(f32).reshape(B, nc, chunk, H)
+    lb = log_b.astype(f32).reshape(B, nc, chunk, H)
+
+    ca = jnp.cumsum(la, axis=2)                   # inclusive cumsum
+    total = ca[:, :, -1]                          # (B,nc,H)
+
+    # intra-chunk: scores[i,j] = q_i.k_j * exp(ca_i - ca_j + lb_j), i>=j
+    gain = ca[:, :, :, None, :] - ca[:, :, None, :, :] + lb[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gain = jnp.where(causal[None, None, :, :, None], gain, -jnp.inf)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", qc, kc) * jnp.exp(gain)
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", scores, vc)
+
+    # per-chunk boundary states: S_c = sum_j exp(total - ca_j + lb_j) k_j v_j^T
+    w = jnp.exp(total[:, :, None, :] - ca + lb)   # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjhn,bcjhd->bchnd", w, kc, vc)
+
+    # inter-chunk scan
+    s0 = (jnp.zeros((B, H, N, D), f32) if initial_state is None
+          else initial_state.astype(f32))
+    decay = jnp.exp(total)                        # (B,nc,H)
+
+    def body(s_prev, inp):
+        s_chunk, dec = inp                        # (B,H,N,D), (B,H)
+        s_new = dec[:, :, None, None] * s_prev + s_chunk
+        return s_new, s_prev
+
+    _, s_prevs = jax.lax.scan(
+        body, s0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(decay, 1, 0)),
+    )
+    final = body(s_prevs[-1],
+                 (S_c[:, -1], decay[:, -1]))[0]
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)         # (B,nc,H,N,D)
+
+    y_inter = jnp.einsum(
+        "bcihn,bchnd->bcihd", qc * jnp.exp(ca)[..., None], s_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, D)
+    return y.astype(q.dtype), final
+
+
+def linear_attention_step(
+    state: jnp.ndarray,   # (B,H,N,D)
+    q: jnp.ndarray,       # (B,H,N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,       # (B,H,D)
+    log_a: jnp.ndarray,   # (B,H)
+    log_b: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (y (B,H,D), new_state)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    b = jnp.exp(log_b.astype(f32))[..., None, None]
+    outer = k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :]
+    new = a * state.astype(f32) + b * outer
+    y = jnp.einsum("bhn,bhnd->bhd", q.astype(f32), new)
+    return y.astype(q.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, d: int, ssm, *, dtype=DEFAULT_DTYPE) -> dict:
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    N = ssm.d_state
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z | x | B | C | dt]
+    d_proj = 2 * d_in + 2 * N + H
+    conv_ch = d_in + 2 * N
+    return {
+        "w_in": init_linear(ks[0], d, d_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": init_linear(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _split_mamba(p, x, ssm, d_in, H, N):
+    proj = x @ p["w_in"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv over (B,S,C) with taps (W,C).
+
+    state (B, W-1, C) holds the trailing inputs from the previous call;
+    returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    y = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(y), up[:, -(W - 1):]
+
+
+def mamba2_apply(p: dict, x: jnp.ndarray, ssm, *,
+                 cache: dict | None = None) -> tuple[jnp.ndarray, dict | None]:
+    """x: (B,S,d). cache={'state': (B,H,N,hd), 'conv': (B,W-1,C)} for decode."""
+    B, S, d = x.shape
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    N = ssm.d_state
+    z, xs, Bm, Cm, dt = _split_mamba(p, x, ssm, d_in, H, N)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], None if cache is None else cache["conv"]
+    )
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    log_a = dtf * A                                 # (B,S,H)
+    log_b = jnp.log(dtf + 1e-9)
+
+    xh = xs.reshape(B, S, H, ssm.head_dim)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    kk = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+
+    init = None if cache is None else cache["state"]
+    if S == 1 and cache is not None:
+        y1, new_state = linear_attention_step(
+            init, q[:, 0], kk[:, 0], xh[:, 0], log_a[:, 0], log_b[:, 0]
+        )
+        y = y1[:, None]
+    else:
+        y, new_state = chunked_linear_attention(
+            q, kk, xh, log_a, log_b, chunk=ssm.chunk, initial_state=init
+        )
+    y = (y.astype(jnp.float32)
+         + xh.astype(jnp.float32) * p["D"][None, None, :, None]).astype(x.dtype)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "conv": conv_state}
+    return out, new_cache
+
+
+def mamba2_step(p, x1, ssm, cache):
+    """Convenience: single-token decode. x1: (B,1,d)."""
+    return mamba2_apply(p, x1, ssm, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d: int, n_heads: int, head_dim: int,
+               *, dtype=DEFAULT_DTYPE) -> dict:
+    ks = jax.random.split(key, 6)
+    hh = n_heads * head_dim
+    return {
+        "w_q": init_linear(ks[0], d, hh, dtype=dtype),
+        "w_k": init_linear(ks[1], d, hh, dtype=dtype),
+        "w_v": init_linear(ks[2], d, hh, dtype=dtype),
+        "w_if": init_linear(ks[3], d, 2 * n_heads, dtype=dtype),  # i,f gates
+        "w_o": init_linear(ks[4], hh, d, dtype=dtype),
+        "w_og": init_linear(ks[5], d, hh, dtype=dtype),           # output gate
+    }
+
+
+def mlstm_apply(p: dict, x: jnp.ndarray, *, n_heads: int, head_dim: int,
+                chunk: int = 256,
+                cache: dict | None = None) -> tuple[jnp.ndarray, dict | None]:
+    B, S, d = x.shape
+    H, Dh = n_heads, head_dim
+    q = (x @ p["w_q"]).reshape(B, S, H, Dh) / float(np.sqrt(Dh))
+    k = (x @ p["w_k"]).reshape(B, S, H, Dh) / float(np.sqrt(Dh))
+    v = (x @ p["w_v"]).reshape(B, S, H, Dh)
+    gates = (x @ p["w_if"]).astype(jnp.float32).reshape(B, S, H, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 1])
+    log_i = -jax.nn.softplus(-gates[..., 0]) - 2.0  # bounded exp input gate
+
+    # carry the normalizer as an extra value column
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1
+    )
+    init = None if cache is None else cache["state"]
+    if S == 1 and cache is not None:
+        y1, new_state = linear_attention_step(
+            init, q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], log_i[:, 0]
+        )
+        y = y1[:, None]
+    else:
+        y, new_state = chunked_linear_attention(
+            q, k, v_aug, log_f, log_i, chunk=chunk, initial_state=init
+        )
+    num, den = y[..., :Dh], y[..., Dh:]
+    yn = num / jnp.maximum(jnp.abs(den), 1.0)
+    yn = yn.reshape(B, S, H * Dh) * jax.nn.silu(x @ p["w_og"])
+    out = yn @ p["w_o"]
+    new_cache = None if cache is None else {"state": new_state}
+    return out, new_cache
+
+
+def mlstm_step(p, x1, *, n_heads, head_dim, cache):
+    return mlstm_apply(p, x1, n_heads=n_heads, head_dim=head_dim, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory recurrent block; sequential over time)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d: int, n_heads: int, *, dtype=DEFAULT_DTYPE) -> dict:
+    dh = d // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": init_linear(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrent weights, one (dh, 4dh) block per head
+        "r_h": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh), jnp.float32)
+                / np.sqrt(dh)).astype(dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "w_o": init_linear(ks[2], d, d, dtype=dtype),
+    }
+
+
+def slstm_apply(p: dict, x: jnp.ndarray, *, n_heads: int,
+                cache: dict | None = None) -> tuple[jnp.ndarray, dict | None]:
+    """Sequential scan over time; state = (h, c, n) each (B, d)."""
+    B, S, d = x.shape
+    H = n_heads
+    dh = d // H
+    wx = (x @ p["w_x"]).astype(jnp.float32) + p["bias"]     # (B,S,4d)
+
+    def step(carry, wx_t):
+        h, c, n = carry                                     # (B,d) f32
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hdk->bhk", hh,
+                         p["r_h"].astype(jnp.float32)).reshape(B, 4 * d)
+        zifo = wx_t + rec
+        z, i, f, o = jnp.split(zifo, 4, axis=-1)
+        z = jnp.tanh(z)
+        i = jnp.exp(jnp.minimum(i, 10.0))
+        f = jax.nn.sigmoid(f)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (h, c, n), h
+
+    if cache is None:
+        h0 = jnp.zeros((B, d), jnp.float32)
+        carry = (h0, h0, h0)
+    else:
+        carry = cache["hcn"]
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) @ p["w_o"]
+    new_cache = None if cache is None else {"hcn": carry}
+    return y, new_cache

@@ -1,0 +1,7 @@
+from .adamw import Optimizer, adafactor, adamw, clip_by_global_norm, cosine_schedule
+from .compression import dequantize_int8, error_feedback, quantize_int8
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "cosine_schedule", "clip_by_global_norm",
+    "quantize_int8", "dequantize_int8", "error_feedback",
+]

@@ -1,0 +1,150 @@
+"""Optimizers: AdamW and a factored-second-moment variant (for the 1T run).
+
+Self-contained optax-style (init/update) transforms — no external deps.
+Moments are dtype-configurable: bf16 moments halve optimizer HBM, which
+together with the factored variant is what lets kimi-k2 train_4k fit the
+16 GiB v5e budget (see EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Optimizer", "adamw", "adafactor", "cosine_schedule", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(np.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw(lr: float | Callable = 3e-4, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype=jnp.float32, grad_clip: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return newp, mf.astype(moment_dtype), vf.astype(moment_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        newp = jax.tree.map(lambda t3: t3[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t3: t3[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree.map(lambda t3: t3[2], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float | Callable = 1e-3, *, b1: float = 0.9,
+              decay: float = 0.99, eps: float = 1e-30,
+              weight_decay: float = 0.0, moment_dtype=jnp.bfloat16,
+              grad_clip: float = 1.0) -> Optimizer:
+    """First moment in ``moment_dtype``; second moment row/col factored for
+    rank>=2 leaves (O(n+m) instead of O(n*m)), full for vectors."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def v_init(p):
+        if p.ndim >= 2:
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype),
+                              params),
+            "v": jax.tree.map(v_init, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                row = decay * v["row"] + (1 - decay) * g2.mean(-1)
+                col = decay * v["col"] + (1 - decay) * g2.mean(-2)
+                denom = (row[..., None] * col[..., None, :]
+                         / jnp.maximum(row.mean(-1)[..., None, None], eps))
+                newv = {"row": row, "col": col}
+            else:
+                full = decay * v["full"] + (1 - decay) * g2
+                denom = full
+                newv = {"full": full}
+            u = gf / jnp.sqrt(denom + eps)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * u
+            upd_ = mf + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype)
+            return newp, mf.astype(moment_dtype), newv
+
+        flat, tdef = jax.tree_util.tree_flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        mflat = tdef.flatten_up_to(state["m"])
+        vflat = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+        newp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        newm = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        newv = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return newp, {"m": newm, "v": newv, "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,62 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-scale quantization applied to the gradients at the DP
+reduction boundary, with an error-feedback accumulator so the quantization
+bias does not accumulate across steps (Seide et al. / EF-SGD). On a real
+pod the compressed tensor is what crosses the ICI/DCN links (4x fewer
+bytes on the all-reduce); in this single-controller reproduction the
+transform wraps the optimizer so semantics and tests are identical.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+__all__ = ["quantize_int8", "dequantize_int8", "error_feedback"]
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def error_feedback(opt: Optimizer, *, enabled: bool = True) -> Optimizer:
+    """Wrap an optimizer: grads are int8-quantized with error feedback."""
+    if not enabled:
+        return opt
+
+    def init(params):
+        return {
+            "inner": opt.init(params),
+            "err": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+        }
+
+    def update(grads, state, params):
+        def comp(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = quantize_int8(corrected)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), corrected - deq
+
+        out = jax.tree.map(comp, grads, state["err"])
+        cg = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        ne = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        newp, inner = opt.update(cg, state["inner"], params)
+        return newp, {"inner": inner, "err": ne}
+
+    return Optimizer(init, update)

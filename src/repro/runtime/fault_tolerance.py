@@ -1,0 +1,139 @@
+"""Fault-tolerant training runtime: retries, watchdog, elastic resize.
+
+Single-controller reproduction of the fleet behaviors; the policies are
+real, the failure *sources* are injectable so tests exercise them
+deterministically:
+
+* **step retry with backoff** — transient executor failures re-run the
+  step from the last good state (params are only committed after a step
+  completes, so a mid-step failure is side-effect-free — functional
+  updates are what make this sound);
+* **watchdog / straggler mitigation** — a step exceeding
+  ``straggler_factor`` x the trailing-median step time is recorded and,
+  past ``max_slow_steps``, triggers the elastic path (on a real fleet:
+  re-slice without the slow host; here: resize event);
+* **elastic resize** — on a (simulated) device loss the loop rebuilds a
+  smaller mesh, re-shards the last checkpoint onto it (see
+  checkpoint.restore) and continues; batch is re-sharded by the new
+  data-axis size;
+* **checkpoint cadence** — async saves every ``ckpt_every`` steps +
+  always before a resize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.checkpoint import Checkpointer, latest_step, restore
+
+__all__ = ["FTConfig", "FaultTolerantLoop", "TransientError"]
+
+
+class TransientError(RuntimeError):
+    """Raised by injected failure hooks; real-world analogue: a failed
+    collective / preempted worker surfacing as an executor error."""
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    straggler_factor: float = 3.0
+    max_slow_steps: int = 5
+    keep: int = 3
+
+
+class FaultTolerantLoop:
+    """Wraps ``step_fn(state, batch) -> (state, metrics)``.
+
+    ``failure_hook(step) -> None | "transient" | "resize"`` lets tests
+    inject faults. ``resize_hook(state) -> state`` performs the elastic
+    re-shard (built by the caller who owns mesh construction).
+    """
+
+    def __init__(self, step_fn: Callable, state: Any, cfg: FTConfig, *,
+                 failure_hook: Callable[[int], str | None] | None = None,
+                 resize_hook: Callable[[Any], Any] | None = None,
+                 state_shape: Any | None = None):
+        self.step_fn = step_fn
+        self.state = state
+        self.cfg = cfg
+        self.failure_hook = failure_hook or (lambda _: None)
+        self.resize_hook = resize_hook
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.step_times: list[float] = []
+        self.events: list[tuple[int, str]] = []
+        self._state_shape = state_shape
+
+    # -- recovery ------------------------------------------------------------
+
+    def try_resume(self, shardings: Any | None = None) -> int:
+        last = latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return 0
+        self.state = restore(self.cfg.ckpt_dir, last,
+                             self._state_shape or self.state, shardings)
+        self.events.append((last, "resumed"))
+        return last
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, batches, n_steps: int, start_step: int = 0) -> dict:
+        metrics_hist = []
+        slow = 0
+        step = start_step
+        it = iter(batches)
+        while step < n_steps:
+            _, batch = next(it)
+            fault = self.failure_hook(step)
+            if fault == "resize" and self.resize_hook is not None:
+                self.ckpt.wait()
+                self.ckpt.save_async(step, self.state, {"reason": "resize"})
+                self.ckpt.wait()
+                self.state = self.resize_hook(self.state)
+                self.events.append((step, "resized"))
+
+            t0 = time.perf_counter()
+            for attempt in range(self.cfg.max_retries + 1):
+                try:
+                    if fault == "transient" and attempt == 0:
+                        raise TransientError(f"injected at step {step}")
+                    new_state, metrics = self.step_fn(self.state, batch)
+                    jax.block_until_ready(
+                        jax.tree.leaves(metrics)[0]
+                        if jax.tree.leaves(metrics) else new_state
+                    )
+                    break
+                except (TransientError, jax.errors.JaxRuntimeError) as e:
+                    self.events.append((step, f"retry{attempt}:{type(e).__name__}"))
+                    if attempt == self.cfg.max_retries:
+                        raise
+                    time.sleep(self.cfg.retry_backoff_s * (2 ** attempt))
+            dt = time.perf_counter() - t0
+
+            # straggler watchdog
+            if len(self.step_times) >= 5:
+                med = statistics.median(self.step_times[-20:])
+                if dt > self.cfg.straggler_factor * med:
+                    slow += 1
+                    self.events.append((step, f"straggler({dt:.3f}s)"))
+                    if slow >= self.cfg.max_slow_steps and self.resize_hook:
+                        self.state = self.resize_hook(self.state)
+                        self.events.append((step, "resized:stragglers"))
+                        slow = 0
+            self.step_times.append(dt)
+
+            self.state = new_state
+            metrics_hist.append(metrics)
+            step += 1
+            if step % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(step, self.state)
+        self.ckpt.wait()
+        return {"metrics": metrics_hist, "events": self.events,
+                "final_step": step}

@@ -1,0 +1,361 @@
+"""Parameter / cache / batch partition rules.
+
+Name-based rules map every leaf of the model pytrees to a PartitionSpec,
+Megatron/MaxText-style:
+
+* column-parallel projections (w_q, w_k, w_v, w_gate, w_in, w_u*, ...) —
+  ``P(fsdp, tp)``: input dim sharded by the ZeRO-3/FSDP axes (GSPMD
+  all-gathers per layer inside the scan), output dim tensor-parallel;
+* row-parallel projections (w_o, w_out) — ``P(tp, fsdp)`` (psum on exit);
+* expert tensors (E, d, f) — expert dim over the EP axes, d over FSDP;
+* embeddings — vocab-parallel ``P(tp, None)``;
+* everything small (norms, gates, routers, SSM scalars) — replicated.
+
+Leading layer/group stack axes are auto-padded with ``None``. Any axis
+whose size does not divide the corresponding dim is *dropped* (replicated)
+— this is what lets one rule table serve 10 architectures with head
+counts from 4 to 96: e.g. xLSTM's (d, 2*H=8) gate projection silently
+degrades to replicated on a 16-way TP axis instead of erroring.
+
+FSDP policy is size-based (``auto_parallelism``): params ≤ TP budget stay
+DP-replicated; mid archs shard over ``data``; the 1T config additionally
+shards over ``pod`` (documented DCN cost; the alternative is not fitting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, Shape
+from repro.models.moe import Parallelism
+
+__all__ = [
+    "auto_parallelism",
+    "param_specs",
+    "cache_specs",
+    "batch_specs",
+    "shardings",
+    "param_count",
+]
+
+
+# rule table: (leaf-name match) -> spec template over the *trailing* dims.
+# tokens: "tp" -> par.tp_axis, "fsdp" -> par.fsdp_axes, "ep" -> par.ep_axes.
+_COL = ("w_q", "w_k", "w_v", "w_gate", "w_in", "w_uq", "w_uk", "w_uv",
+        "w_og", "w_if", "w_dq")
+# NOTE: sLSTM's w_x is deliberately absent (replicated): it feeds a
+# 4096-step time scan, and an FSDP-sharded w_x makes XLA re-gather it
+# inside the scan — 4096 gathers/layer (measured: ~840 GB/step on xlstm).
+_ROW = ("w_o", "w_out")
+_RULES: list[tuple[tuple[str, ...], tuple[Any, ...]]] = [
+    (("emb", "unemb"), ("vocab", None)),
+    (("w_gate_e", "w_in_e"), ("ep", "fsdp", None)),
+    (("w_out_e",), ("ep", None, "fsdp")),
+    (_ROW, ("tp", "fsdp")),
+    # w_dkv's output packs [c_kv | k_rope]: TP-slicing it would split the
+    # concat boundary and force gathers at every use; it is tiny — replicate
+    # the out dim and shard only the input dim.
+    (("w_dkv",), ("fsdp", None)),
+    (_COL, ("fsdp", "tp")),
+    (("conv_w",), (None, "tp")),
+    (("r_h",), (None, None, None)),
+]
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Total parameter count (from shapes, no allocation)."""
+    import repro.models.lm as lm
+
+    shapes = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def auto_parallelism(cfg: ArchConfig, mesh: Mesh, shape: Shape | None = None
+                     ) -> Parallelism:
+    """Pick TP/FSDP/EP axes from model size, mesh topology, and step kind.
+
+    Train policy (roofline-driven, see EXPERIMENTS.md §Perf P1): tensor
+    parallelism costs ~per-layer activation psums of tokens_dev x d bytes
+    — for models whose optimizer state fits under ZeRO, that traffic
+    dwarfs the gradient reduction it replaces. So:
+
+      params <= ~60B  ->  TP OFF: the model axis joins data parallelism;
+                          state is ZeRO-sharded over data (and over model
+                          too when data alone is not enough);
+      params  >  60B  ->  TP=16 + ZeRO over data (+ EP/pod for the 1T MoE).
+
+    Serve keeps TP=16: decode latency wants the model axis on weights,
+    and per-token activations are tiny so TP psums are cheap.
+    """
+    multi_pod = "pod" in mesh.axis_names
+    n_params = param_count(cfg)
+    n_bytes = 2 * n_params  # bf16
+    kind = shape.kind if shape is not None else "train"
+    d_ax, m_ax = mesh.shape["data"], mesh.shape["model"]
+
+    total_dev = d_ax * m_ax * (2 if multi_pod else 1)
+    # measured exceptions (EXPERIMENTS.md §Perf I9/I11): these two blow the
+    # HBM budget under TP-off (starcoder2: f32 boundary copies XLA hoists
+    # into the while state at d_ff=24576; zamba2: SSD intra-chunk Q^2xH f32
+    # buffers with all heads local) — they keep TP=16, which fits.
+    _TP_OFF_DENY = ("starcoder2-15b", "zamba2-1.2b")
+    if (kind == "train" and n_params <= 60e9
+            and cfg.name not in _TP_OFF_DENY
+            and shape is not None and shape.global_batch % total_dev == 0):
+        pass  # TP-off candidate; may still fall through to _tp_parallelism
+    else:
+        return _tp_parallelism(cfg, mesh, shape)
+    if True:
+        # bf16 moments policy: p + m + v + grad ~ 8 bytes/param
+        state = 8.0 * n_params
+        tokens_dev = (shape.tokens / (d_ax * m_ax * (2 if multi_pod else 1))
+                      if shape else 0)
+        act = tokens_dev * cfg.d_model * 2 * cfg.n_layers
+        if state / d_ax + act <= 11e9:
+            fsdp: tuple[str, ...] = ("data",)
+        elif not cfg.moe and state / (d_ax * m_ax) + 5 * act <= 12e9:
+            # ZeRO-3 over both axes (measured headroom factor on act: the
+            # while-state f32 boundary copies XLA hoists cost ~2-3x)
+            fsdp = ("data", "model")
+        else:
+            return _tp_parallelism(cfg, mesh, shape)
+        ep = ("model",) if cfg.moe else ()
+        return Parallelism(
+            mesh=mesh,
+            dp_axes=("data", "model"),
+            tp_axis=None,
+            ep_axes=ep,
+            fsdp_axes=fsdp,
+            pod_axis="pod" if multi_pod else None,
+            head_dim=cfg.head_dim,
+        )
+
+    raise AssertionError("unreachable")
+
+
+def _tp_parallelism(cfg: ArchConfig, mesh: Mesh, shape: Shape | None
+                    ) -> Parallelism:
+    multi_pod = "pod" in mesh.axis_names
+    n_params = param_count(cfg)
+    n_bytes = 2 * n_params
+    kind = shape.kind if shape is not None else "train"
+    d_ax, m_ax = mesh.shape["data"], mesh.shape["model"]
+    tp = m_ax
+    state_mult = 3 if kind == "train" else 1
+    per_dev_tp_only = n_bytes * state_mult / tp
+    fsdp = ()
+    if per_dev_tp_only > 4e9:               # >4GB/device with TP alone
+        fsdp = ("data",)
+        if multi_pod and per_dev_tp_only / d_ax > 8e9:
+            fsdp = ("data", "pod")          # the 1T config
+    ep: tuple[str, ...] = ("model",) if cfg.moe else ("model",)
+    if cfg.moe and multi_pod and cfg.moe.n_routed % (tp * 2) == 0 and (
+        n_bytes / (tp * d_ax) > 4e9
+    ):
+        ep = ("model", "pod")
+    # an axis can appear in at most one factor of a spec: EP wins over FSDP
+    fsdp = tuple(a for a in fsdp if a not in ep)
+    # big-model decode: replicate the tiny per-token activations over the
+    # FSDP axes so weights stay resident (partial products + psum) instead
+    # of being all-gathered layer by layer (see EXPERIMENTS.md §Perf I13)
+    # measured (EXPERIMENTS.md §Perf I13): replicating decode activations
+    # did NOT beat GSPMD's own choice (mistral coll 126->183 GB) — refuted;
+    # keep activations batch-sharded.
+    act_override = None
+    return Parallelism(
+        mesh=mesh,
+        dp_axes=("data",),
+        tp_axis="model",
+        ep_axes=ep,
+        fsdp_axes=fsdp,
+        pod_axis="pod" if multi_pod else None,
+        head_dim=cfg.head_dim,
+        act_batch_axes=act_override,
+    )
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _resolve(template, par: Parallelism):
+    out = []
+    for t in template:
+        if t == "tp":
+            out.append(par.tp_axis)
+        elif t == "vocab":
+            out.append(par.vocab_axis)
+        elif t == "fsdp":
+            out.append(par.fsdp_axes if par.fsdp_axes else None)
+        elif t == "ep":
+            out.append(par.ep_axes)
+        else:
+            out.append(t)
+    return out
+
+
+def _fit(spec_tail, shape, mesh: Mesh):
+    """Pad leading dims with None; drop axes that don't divide."""
+    spec = [None] * (len(shape) - len(spec_tail)) + list(spec_tail)
+    fitted = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fitted.append(None)
+        elif dim % _axis_size(mesh, ax) == 0:
+            fitted.append(ax)
+        else:
+            fitted.append(None)  # graceful degradation -> replicate
+    return P(*fitted)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "idx"):
+            continue
+    return ""
+
+
+def param_specs(params_shape: Any, par: Parallelism) -> Any:
+    """Spec tree matching a params (shape-)tree."""
+    mesh = par.mesh
+
+    def template_for(name: str):
+        for names, template in _RULES:
+            if name in names:
+                return template
+        return None
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name in ("row", "col"):
+            # factored second moment: derive from the parent param's rule
+            parents = [str(e.key) for e in path if hasattr(e, "key")]
+            parent = parents[-2] if len(parents) >= 2 else ""
+            template = template_for(parent)
+            if template is None:
+                return P()
+            template = (template[:-1] if name == "row"
+                        else template[:-2] + template[-1:])
+            return _fit(_resolve(template, par), leaf.shape, mesh)
+        template = template_for(name)
+        if template is not None:
+            spec = _fit(_resolve(template, par), leaf.shape, mesh)
+            if name in ("w_k", "w_v") and par.head_dim:
+                # head-aware: a TP shard must hold whole KV heads, else
+                # every attention chunk re-gathers half-heads over TP
+                tp_size = _axis_size(mesh, par.tp_axis)
+                if (leaf.shape[-1] // tp_size) % par.head_dim != 0:
+                    spec = P(*spec[:-1], None)
+            return spec
+        return P()  # replicate
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_axes_for(par: Parallelism, batch: int) -> tuple[str, ...]:
+    """Largest prefix of batch axes that divides ``batch``."""
+    axes: tuple[str, ...] = ()
+    size = 1
+    for a in par.batch_axes:
+        if batch % (size * par.mesh.shape[a]) == 0:
+            axes = axes + (a,)
+            size *= par.mesh.shape[a]
+    return axes
+
+
+def batch_specs(batch_shape: Any, par: Parallelism) -> Any:
+    """Inputs: shard dim0 (batch) over the batch axes that divide."""
+    mesh = par.mesh
+
+    def one(leaf):
+        ba = batch_axes_for(par, leaf.shape[0])
+        spec = [ba if ba else None] + [None] * (len(leaf.shape) - 1)
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, par: Parallelism, cfg: ArchConfig,
+                batch: int) -> Any:
+    """Decode caches: batch over dp axes; heads (or the compressed dim)
+    over TP when divisible; for unshardable batch (long-context B=1) the
+    sequence axis takes the dp axes instead (context parallelism)."""
+    mesh = par.mesh
+    ba = batch_axes_for(par, batch)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return P()
+        spec: list = [None] * leaf.ndim
+        if name in ("k", "v", "attn_k", "attn_v",
+                    "local_k", "local_v", "tail_k", "tail_v"):
+            # (L?, B, S, Hkv, hd)
+            b_ax = leaf.ndim - 4
+            spec[b_ax] = ba if ba else None
+            tp_size = _axis_size(mesh, par.tp_axis)
+            if shape[b_ax + 2] % tp_size == 0:
+                spec[b_ax + 2] = par.tp_axis       # head-parallel
+            elif shape[b_ax + 3] % tp_size == 0:
+                spec[b_ax + 3] = par.tp_axis       # head-DIM parallel (kv<tp)
+            if not ba and shape[b_ax + 1] % _axis_size(mesh, ("data",)) == 0:
+                spec[b_ax + 1] = "data"   # context parallel over S
+            return P(*spec)
+        if name in ("ckv", "krope"):
+            # (L, B, S, c)
+            spec[1] = ba if ba else None
+            if not ba and shape[2] % mesh.shape["data"] == 0:
+                spec[2] = "data"
+            if name == "ckv" and shape[3] % _axis_size(mesh, par.tp_axis) == 0:
+                spec[3] = par.tp_axis
+            return P(*spec)
+        if name == "state":
+            # (..., B, H, N, D) — shard H over tp if divisible, B over dp
+            b_ax = leaf.ndim - 4
+            spec[b_ax] = ba if ba else None
+            if shape[b_ax + 1] % _axis_size(mesh, par.tp_axis) == 0:
+                spec[b_ax + 1] = par.tp_axis
+            return P(*spec)
+        if name == "conv":
+            # (..., B, W-1, C)
+            b_ax = leaf.ndim - 3
+            spec[b_ax] = ba if ba else None
+            if shape[b_ax + 2] % _axis_size(mesh, par.tp_axis) == 0:
+                spec[b_ax + 2] = par.tp_axis
+            return P(*spec)
+        if name == "mlstm":
+            # (G, n_m, B, H, Dh, Dh+1)
+            spec[2] = ba if ba else None
+            if shape[4] % _axis_size(mesh, par.tp_axis) == 0:
+                spec[4] = par.tp_axis
+            return P(*spec)
+        if name == "slstm" or name == "hcn":
+            # tuple leaves (G, B, d)
+            spec[-2] = ba if ba else None
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,138 @@
+"""Attention-layer unit tests: flash chunking, windows, rings, MLA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    RING_EMPTY_POS, chunked_attention, ring_update,
+)
+
+KEY = jax.random.PRNGKey(5)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kk = jnp.repeat(k, g, 2).astype(jnp.float32)
+    vv = jnp.repeat(v, g, 2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk) / np.sqrt(D)
+    qp = jnp.arange(Sq) + q_offset
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv).astype(q.dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(4, 2), (8, 8), (6, 2)]),
+       st.sampled_from([16, 48, 64]),
+       st.sampled_from([0, 8]),
+       st.sampled_from([8, 16, 1000]))
+def test_chunked_matches_naive(heads, S, window, kv_chunk):
+    H, Hkv = heads
+    q = jax.random.normal(KEY, (2, S, H, 8), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, S, Hkv, 8), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, S, Hkv, 8), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            kv_chunk=kv_chunk, q_chunk=16)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_traced_window_matches_static():
+    q = jax.random.normal(KEY, (1, 32, 4, 8), jnp.float32)
+    k = jax.random.normal(KEY, (1, 32, 4, 8), jnp.float32)
+    v = jax.random.normal(KEY, (1, 32, 4, 8), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, window=8, kv_chunk=8)
+    b = jax.jit(lambda w: chunked_attention(
+        q, k, v, causal=True, window=w, kv_chunk=8))(jnp.asarray(8))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_ring_update_wraps_and_tracks_positions():
+    B, W, Hkv, D = 1, 4, 1, 2
+    ck = jnp.zeros((B, W, Hkv, D))
+    cv = jnp.zeros((B, W, Hkv, D))
+    pos = jnp.full((W,), RING_EMPTY_POS, jnp.int32)
+    # write positions 0..5 one at a time through a window of 4
+    for p in range(6):
+        kn = jnp.full((B, 1, Hkv, D), float(p))
+        ck, cv, pos = ring_update(ck, cv, pos, kn, kn, p)
+    # slots hold positions 4,5,2,3 (p % 4)
+    np.testing.assert_array_equal(np.asarray(pos), [4, 5, 2, 3])
+    np.testing.assert_allclose(np.asarray(ck[0, :, 0, 0]), [4, 5, 2, 3])
+
+
+def test_ring_update_bulk_prefill_keeps_tail():
+    B, W, Hkv, D = 1, 4, 1, 2
+    ck = jnp.zeros((B, W, Hkv, D))
+    cv = jnp.zeros((B, W, Hkv, D))
+    pos = jnp.full((W,), RING_EMPTY_POS, jnp.int32)
+    k_new = jnp.arange(10, dtype=jnp.float32).reshape(1, 10, 1, 1)
+    k_new = jnp.broadcast_to(k_new, (B, 10, Hkv, D))
+    ck, cv, pos = ring_update(ck, cv, pos, k_new, k_new, 0)
+    # only the last 4 of 10 positions survive
+    assert sorted(np.asarray(pos).tolist()) == [6, 7, 8, 9]
+
+
+def test_ring_attention_equals_linear_cache_decode():
+    """One decode step via ring == attention over the full history with a
+    window mask (position > window boundary)."""
+    W, window = 9, 8
+    B, Hkv, D, H = 1, 2, 4, 4
+    S_hist = 20
+    keys = jax.random.normal(KEY, (B, S_hist + 1, Hkv, D), jnp.float32)
+    vals = jax.random.normal(jax.random.PRNGKey(9), (B, S_hist + 1, Hkv, D),
+                             jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(8), (B, 1, H, D), jnp.float32)
+
+    ck = jnp.zeros((B, W, Hkv, D))
+    cv = jnp.zeros((B, W, Hkv, D))
+    pos = jnp.full((W,), RING_EMPTY_POS, jnp.int32)
+    for p in range(S_hist + 1):
+        ck, cv, pos = ring_update(ck, cv, pos, keys[:, p:p + 1],
+                                  vals[:, p:p + 1], p)
+    out_ring = chunked_attention(
+        q, ck, cv, causal=True, q_offset=S_hist, window=window,
+        kv_positions=pos, kv_chunk=3)
+    out_ref = naive_attention(q, keys, vals, causal=True, window=window,
+                              q_offset=S_hist)
+    np.testing.assert_allclose(np.asarray(out_ring), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_equals_decompressed():
+    from repro.config import MLAConfig
+    from repro.models.attention import mla_apply, mla_init
+
+    mla = MLAConfig(q_lora_rank=16, kv_lora_rank=24, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8)
+    d, H, B, S = 32, 4, 2, 12
+    p = mla_init(KEY, d, H, mla, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (B, S, d), jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache0 = {"ckv": jnp.zeros((B, S, 24), jnp.float32),
+              "krope": jnp.zeros((B, S, 4), jnp.float32),
+              "len": jnp.zeros((), jnp.int32)}
+    _, c = mla_apply(p, x[:, :-1], n_heads=H, mla=mla,
+                     positions=pos[:, :-1], cache=cache0,
+                     absorbed_decode=False)
+    o_abs, _ = mla_apply(p, x[:, -1:], n_heads=H, mla=mla,
+                         positions=pos[:, -1:], cache=c,
+                         absorbed_decode=True)
+    o_dec, _ = mla_apply(p, x[:, -1:], n_heads=H, mla=mla,
+                         positions=pos[:, -1:], cache=c,
+                         absorbed_decode=False)
+    np.testing.assert_allclose(np.asarray(o_abs), np.asarray(o_dec),
+                               rtol=2e-4, atol=2e-4)

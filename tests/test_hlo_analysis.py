@@ -1,0 +1,71 @@
+"""Unit tests for the HLO collective parser (roofline input)."""
+from __future__ import annotations
+
+import textwrap
+
+from repro.launch.hlo_analysis import (
+    CollectiveStats, analyze_collectives, parse_computations,
+)
+
+HLO = textwrap.dedent("""
+    HloModule jit_step
+
+    %region_add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %add = f32[] add(f32[] %a, f32[] %b)
+    }
+
+    %body.1 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+      %arg = (s32[], f32[128,256]) parameter(0)
+      %i = s32[] get-tuple-element((s32[], f32[128,256]) %arg), index=0
+      %x = f32[128,256] get-tuple-element((s32[], f32[128,256]) %arg), index=1
+      %ar = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={{0,1,2,3}}, to_apply=%region_add
+      %one = s32[] constant(1)
+      %ni = s32[] add(s32[] %i, s32[] %one)
+      ROOT %t = (s32[], f32[128,256]) tuple(s32[] %ni, f32[128,256] %ar)
+    }
+
+    %cond.1 (arg: (s32[], f32[128,256])) -> pred[] {
+      %arg = (s32[], f32[128,256]) parameter(0)
+      %i = s32[] get-tuple-element((s32[], f32[128,256]) %arg), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+    }
+
+    ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+      %p0 = f32[128,256] parameter(0)
+      %ag = f32[512,256] all-gather(f32[128,256] %p0), replica_groups=[4,4]<=[16], dimensions={0}
+      %rs = f32[32,256] reduce-scatter(f32[128,256] %p0), replica_groups={{0,1,2,3}}, to_apply=%region_add
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[128,256]) tuple(s32[] %zero, f32[128,256] %p0)
+      %w = (s32[], f32[128,256]) while((s32[], f32[128,256]) %init), condition=%cond.1, body=%body.1
+      ROOT %out = f32[128,256] get-tuple-element((s32[], f32[128,256]) %w), index=1
+    }
+""")
+
+
+def test_parse_computations_splits():
+    comps = parse_computations(HLO)
+    assert any("body" in c for c in comps)
+    assert any("main" in c or "entry" in c.lower() for c in comps)
+
+
+def test_collectives_counts_and_trip_correction():
+    stats = analyze_collectives(HLO)
+    # all-gather: result 512*256*4 bytes, k=4 -> (k-1)/k factor
+    ag = 512 * 256 * 4 * 3 / 4
+    assert abs(stats.bytes_by_kind["all-gather"] - ag) < 1
+    # reduce-scatter: result 32*256*4, (k-1) factor with k=4
+    rs = 32 * 256 * 4 * 3
+    assert abs(stats.bytes_by_kind["reduce-scatter"] - rs) < 1
+    # all-reduce inside while body x10 trip count, 2(k-1)/k with k=4
+    ar = 128 * 256 * 4 * 1.5 * 10
+    assert abs(stats.bytes_by_kind["all-reduce"] - ar) < 1
+    assert stats.count_by_kind["all-reduce"] == 10
+
+
+def test_total_bytes_positive():
+    stats = analyze_collectives(HLO)
+    assert stats.total_bytes > 0
+    assert isinstance(stats, CollectiveStats)

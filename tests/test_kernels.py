@@ -1,0 +1,91 @@
+"""Per-kernel allclose vs ref.py oracles, swept over shapes and dtypes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(shape, dtype=jnp.float32, key=KEY):
+    return jax.random.normal(key, shape, dtype)
+
+
+def tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 12288])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_triad(n, dtype):
+    b, c = rand((n,), dtype), rand((n,), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.triad(b, c, block=1024), np.float32),
+        np.asarray(ref.triad_ref(b, c), np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("k", [1, 3, 11, 20])
+def test_nstream(k):
+    ss = tuple(rand((2048,), key=jax.random.PRNGKey(i)) for i in range(k))
+    np.testing.assert_allclose(
+        np.asarray(ops.nstream(ss, block=512)),
+        np.asarray(ref.nstream_ref(ss)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("factor,block", [(2, 512), (4, 256), (8, 128)])
+def test_triad_interleaved(factor, block):
+    b, c = rand((4096,)), rand((4096,))
+    np.testing.assert_allclose(
+        np.asarray(ops.triad_interleaved(b, c, factor=factor, block=block)),
+        np.asarray(ref.triad_ref(b, c)), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,block", [(258, 64), (1026, 256), (4098, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_jacobi1d(n, block, dtype):
+    x = rand((n,), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.jacobi1d(x, block=block), np.float32),
+        np.asarray(ref.jacobi1d_ref(x), np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape,block", [
+    ((34, 66), (16, 32)), ((66, 130), (32, 64)), ((130, 130), (64, 128)),
+])
+def test_jacobi2d(shape, block):
+    x = rand(shape)
+    np.testing.assert_allclose(
+        np.asarray(ops.jacobi2d(x, block=block)),
+        np.asarray(ref.jacobi2d_ref(x)), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("shape,block", [
+    ((18, 18, 34), (8, 8, 16)), ((34, 18, 66), (16, 16, 32)),
+])
+def test_jacobi3d_blocked(shape, block):
+    x = rand(shape)
+    np.testing.assert_allclose(
+        np.asarray(ops.jacobi3d(x, block=block)),
+        np.asarray(ref.jacobi3d_ref(x)), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("shape,block", [
+    ((18, 18, 34), (8, 16)), ((34, 18, 66), (16, 32)),
+])
+def test_jacobi3d_streaming(shape, block):
+    x = rand(shape)
+    np.testing.assert_allclose(
+        np.asarray(ops.jacobi3d_streaming(x, block=block)),
+        np.asarray(ref.jacobi3d_ref(x)), rtol=3e-5, atol=3e-5)
+
+
+def test_block_divisibility_errors():
+    with pytest.raises(ValueError):
+        ops.triad(rand((100,)), rand((100,)), block=64)
+    with pytest.raises(ValueError):
+        ops.jacobi1d(rand((100,)), block=64)  # interior 98 not divisible

@@ -1,0 +1,122 @@
+"""Property tests for the polyhedral-lite schedule engine.
+
+Invariants (the legality contract of AdaptMemBench's transformations):
+every Schedule built from the fluent API is a *bijection on the iteration
+set* — the multiset of executed points equals the domain's point set —
+for arbitrary compositions of interchange/tile/interleave/unroll/reverse.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Affine, domain, identity
+from repro.core.schedule import Schedule
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@st.composite
+def schedules_1d(draw, extent: int):
+    sch = identity()
+    dim = "i"
+    n_t = draw(st.integers(0, 3))
+    cur_extent = extent
+    for _ in range(n_t):
+        kind = draw(st.sampled_from(["interleave", "unroll", "reverse", "tile"]))
+        if kind == "reverse":
+            sch = sch.reverse(dim)
+        elif kind == "tile":
+            size = draw(st.sampled_from(_divisors(cur_extent)))
+            if size in (0, cur_extent):
+                continue
+            sch = sch.tile(dim, size)
+            dim = f"{dim}_t"   # keep transforming the inner band
+            cur_extent = size
+        else:
+            f = draw(st.sampled_from(_divisors(cur_extent)))
+            if f in (0,):
+                continue
+            sch = getattr(sch, kind)(dim, f)
+            cur_extent //= f
+    return sch
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 48), st.data())
+def test_1d_schedules_preserve_iteration_set(n, data):
+    dom = domain(("i", 0, "n"))
+    env = {"n": n}
+    sch = data.draw(schedules_1d(n))
+    nest = sch.lower(dom, env)
+    pts = sorted(nest.executed_points())
+    assert pts == [(i,) for i in range(n)], sch.name
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.booleans(), st.booleans())
+def test_2d_interchange_tile(n0, n1, interchange, rev):
+    dom = domain(("i", 0, "n0"), ("j", 1, Affine.of("n1") + 1))
+    env = {"n0": n0, "n1": n1}
+    sch = identity()
+    if interchange:
+        sch = sch.interchange("i", "j")
+    if rev:
+        sch = sch.reverse("j")
+    for size in (2, 3):
+        if n0 % size == 0:
+            sch = sch.tile("i", size)
+            break
+    nest = sch.lower(dom, env)
+    got = sorted(nest.executed_points())
+    want = sorted((i, j) for i in range(n0) for j in range(1, n1 + 1))
+    assert got == want
+
+
+def test_interchange_changes_order_not_set():
+    dom = domain(("i", 0, "n"), ("j", 0, "n"))
+    env = {"n": 3}
+    base = list(identity().lower(dom, env).executed_points())
+    swapped = list(identity().interchange("i", "j").lower(dom, env)
+                   .executed_points())
+    assert base != swapped
+    assert sorted(base) == sorted(swapped)
+    # lexicographic in j-major order after interchange
+    assert swapped == [(i, j) for j in range(3) for i in range(3)]
+
+
+def test_interleave_matches_paper_listing7():
+    """interleave(i, 2) must execute body(i), body(i + n/2) per iteration."""
+    dom = domain(("i", 0, "n"))
+    nest = identity().interleave("i", 2).lower(dom, {"n": 8})
+    pts = list(nest.executed_points())
+    assert pts == [(0,), (4,), (1,), (5,), (2,), (6,), (3,), (7,)]
+
+
+def test_tile_guard_detection():
+    dom = domain(("i", 0, "n"))
+    nest = identity().tile("i", 4).lower(dom, {"n": 10})  # 10 % 4 != 0
+    assert nest.needs_guard()
+    pts = sorted(nest.executed_points())
+    assert pts == [(i,) for i in range(10)]  # guards drop the overrun
+    nest2 = identity().tile("i", 5).lower(dom, {"n": 10})
+    assert not nest2.needs_guard()
+
+
+def test_interleave_requires_divisibility():
+    dom = domain(("i", 0, "n"))
+    with pytest.raises(ValueError):
+        identity().interleave("i", 3).lower(dom, {"n": 8})
+
+
+def test_skew_preserves_set_with_guards():
+    dom = domain(("i", 0, "n"), ("j", 0, "n"))
+    env = {"n": 4}
+    nest = identity().skew("j", "i", 1).lower(dom, env)
+    # skewed j runs out of domain for some band points; guards drop them
+    pts = sorted(set(nest.executed_points()))
+    inside = [(i, j) for i in range(4) for j in range(4)]
+    assert set(pts).issubset(set(inside))

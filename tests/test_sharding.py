@@ -1,0 +1,142 @@
+"""Partition-rule tests against an abstract production mesh (no devices)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.config import SHAPES, get_config
+from repro.models import lm
+from repro.models.moe import Parallelism
+from repro.optim import adafactor, adamw
+from repro.runtime.sharding import (
+    auto_parallelism, batch_axes_for, batch_specs, cache_specs, param_count,
+    param_specs,
+)
+
+
+def mesh2d():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def mesh3d():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def par_for(mesh, fsdp=(), ep=("model",)):
+    return Parallelism(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                       ep_axes=ep, fsdp_axes=fsdp,
+                       pod_axis="pod" if "pod" in mesh.axis_names else None)
+
+
+def _flat(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def test_dense_param_specs_column_row():
+    cfg = get_config("internlm2-1.8b")
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(shapes, par_for(mesh2d()))
+    flat = {tuple(str(getattr(e, "key", e)) for e in p): s
+            for p, s in _flat(specs)}
+    assert flat[("emb",)] == P("model", None)
+    assert flat[("layers", "attn", "w_q")] == P(None, None, "model")
+    assert flat[("layers", "attn", "w_o")] == P(None, "model", None)
+    assert flat[("layers", "mlp", "w_gate")] == P(None, None, "model")
+    assert flat[("layers", "ln1")] == P()
+
+
+def test_moe_expert_specs_and_fsdp():
+    cfg = get_config("deepseek-v2-lite-16b")
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    par = par_for(mesh2d(), fsdp=("data",))
+    specs = param_specs(shapes, par)
+    flat = {tuple(str(getattr(e, "key", e)) for e in p): s
+            for p, s in _flat(specs)}
+    assert flat[("layers", "moe", "w_gate_e")] == P(
+        None, ("model",), ("data",), None)
+    assert flat[("layers", "moe", "w_out_e")] == P(
+        None, ("model",), None, ("data",))
+    # router stays replicated (f32, tiny, feeds global top-k)
+    assert flat[("layers", "moe", "router")] == P()
+
+
+def test_nondivisible_dims_degrade_to_replicated():
+    cfg = get_config("xlstm-1.3b")  # w_if out dim = 2*heads = 8 < 16
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(shapes, par_for(mesh2d()))
+    flat = {tuple(str(getattr(e, "key", e)) for e in p): s
+            for p, s in _flat(specs)}
+    key = ("groups", "mlstm", "blk", "w_if")
+    assert flat[key][-1] is None  # 8 % 16 != 0 -> dropped, not an error
+
+
+def test_adafactor_row_col_specs_follow_parent():
+    cfg = get_config("internlm2-1.8b")
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    opt = adafactor()
+    ostate = jax.eval_shape(opt.init, shapes)
+    specs = param_specs(ostate, par_for(mesh2d(), fsdp=("data",)))
+    flat = {tuple(str(getattr(e, "key", e)) for e in p): s
+            for p, s in _flat(specs)}
+    # w_q param spec is (None, fsdp, tp); row drops the last dim
+    assert flat[("v", "layers", "attn", "w_q", "row")] == P(None, ("data",))
+    assert flat[("v", "layers", "attn", "w_q", "col")] == P(None, "model")
+
+
+def test_auto_parallelism_policies():
+    # small-model training: TP off, model axis joins DP, ZeRO over data
+    small = auto_parallelism(get_config("internlm2-1.8b"), mesh2d(),
+                             SHAPES["train_4k"])
+    assert small.tp_axis is None
+    assert small.dp_axes == ("data", "model")
+    assert small.fsdp_axes == ("data",)
+    # small-model serving keeps TP for latency + weight residency
+    small_serve = auto_parallelism(get_config("internlm2-1.8b"), mesh2d(),
+                                   SHAPES["decode_32k"])
+    assert small_serve.tp_axis == "model"
+    big = auto_parallelism(get_config("mistral-large-123b"), mesh2d(),
+                           SHAPES["train_4k"])
+    assert big.tp_axis == "model"
+    assert big.fsdp_axes == ("data",)
+    kimi = auto_parallelism(get_config("kimi-k2-1t-a32b"), mesh3d(),
+                            SHAPES["train_4k"])
+    assert "pod" in kimi.ep_axes
+    assert all(a not in kimi.ep_axes for a in kimi.fsdp_axes)
+
+
+def test_batch_axes_divisibility():
+    par = par_for(mesh3d())
+    assert batch_axes_for(par, 256) == ("pod", "data")
+    assert batch_axes_for(par, 2) == ("pod",)
+    assert batch_axes_for(par, 1) == ()
+
+
+def test_cache_specs_head_dim_fallback():
+    cfg = get_config("mistral-large-123b")  # kv=8 < tp=16
+    par = par_for(mesh2d())
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, 128, 1024))
+    specs = cache_specs(cache, par, cfg, 128)
+    assert specs["k"] == P(None, ("data",), None, None, "model")
+
+
+def test_cache_specs_context_parallel_for_b1():
+    cfg = get_config("gemma3-27b")
+    par = par_for(mesh2d())
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, 1, 4096))
+    specs = cache_specs(cache, par, cfg, 1)
+    # batch unshardable -> S over data, heads over model
+    assert specs["k"] == P(None, None, "data", "model", None)
+
+
+def test_param_count_known_scale():
+    n = param_count(get_config("internlm2-1.8b"))
+    assert 1.5e9 < n < 2.3e9
+    n_kimi = param_count(get_config("kimi-k2-1t-a32b"))
+    assert 0.9e12 < n_kimi < 1.2e12

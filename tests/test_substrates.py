@@ -1,0 +1,223 @@
+"""Substrate tests: optimizer, compression, checkpoint, data, FT loop."""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+from repro.data.pipeline import Loader, SyntheticSource
+from repro.optim import (
+    adafactor, adamw, cosine_schedule, dequantize_int8, error_feedback,
+    quantize_int8,
+)
+from repro.runtime.fault_tolerance import FTConfig, FaultTolerantLoop
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quad_params():
+    return {"w": jnp.asarray([1.5, -2.0, 0.5]), "b": jnp.asarray([0.3])}
+
+
+def _quad_loss(p):
+    return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(5e-2, weight_decay=0.0),
+    lambda: adafactor(5e-2, weight_decay=0.0),
+    lambda: error_feedback(adamw(5e-2, weight_decay=0.0)),
+])
+def test_optimizers_descend_quadratic(make_opt):
+    opt = make_opt()
+    p = _quad_params()
+    s = opt.init(p)
+    l0 = float(_quad_loss(p))
+    for _ in range(60):
+        g = jax.grad(_quad_loss)(p)
+        p, s = opt.update(g, s, p)
+    assert float(_quad_loss(p)) < 0.2 * l0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < float(lr(jnp.asarray(50)))
+
+
+def test_adamw_bf16_moments_track_f32():
+    p = _quad_params()
+    o32, o16 = adamw(1e-2), adamw(1e-2, moment_dtype=jnp.bfloat16)
+    s32, s16 = o32.init(p), o16.init(p)
+    p32 = p16 = p
+    for _ in range(10):
+        g = jax.grad(_quad_loss)(p32)
+        p32, s32 = o32.update(g, s32, p32)
+        g = jax.grad(_quad_loss)(p16)
+        p16, s16 = o16.update(g, s16, p16)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p16["w"]),
+                               rtol=0.05, atol=0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_quantization_roundtrip_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_error_feedback_removes_bias():
+    """Constant gradient: EF-compressed updates converge to the same mean
+    step as uncompressed (bias cancels across steps)."""
+    g = {"w": jnp.full((4,), 0.013, jnp.float32)}
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    base = adamw(1e-2, weight_decay=0.0)
+    opt = error_feedback(base)
+    s = opt.init(p)
+    p_ef = p
+    for _ in range(50):
+        p_ef, s = opt.update(g, s, p_ef)
+    s0 = base.init(p)
+    p_ref = p
+    for _ in range(50):
+        p_ref, s0 = base.update(g, s0, p_ref)
+    np.testing.assert_allclose(np.asarray(p_ef["w"]), np.asarray(p_ref["w"]),
+                               rtol=0.02, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": {"c": jnp.ones((4,), jnp.float32),
+                  "d": (jnp.zeros((2,)), jnp.full((1,), 7.0))},
+            "step": jnp.asarray(5, jnp.int32)}
+    save(tmp_path, 5, tree)
+    assert latest_step(tmp_path) == 5
+    out = restore(tmp_path, 5, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomic_tmp_never_visible(tmp_path):
+    tree = {"x": jnp.ones((3,))}
+    save(tmp_path, 1, tree)
+    (tmp_path / "step_00000002.tmp").mkdir()  # simulated dead writer
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpointer_async_and_retention(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        ck.save_async(s, {"x": jnp.full((2,), float(s))})
+    ck.wait()
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_00000002", "step_00000003"]
+
+
+def test_restore_shape_mismatch_fails(tmp_path):
+    save(tmp_path, 1, {"x": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        restore(tmp_path, 1, {"x": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_source_deterministic():
+    src = SyntheticSource(vocab_size=100, batch=2, seq_len=8, seed=1)
+    a, b = src.get(3), src.get(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_loader_prefetch_order():
+    src = SyntheticSource(vocab_size=50, batch=1, seq_len=4)
+    loader = Loader(src, None)
+    steps = [next(loader)[0] for _ in range(4)]
+    loader.close()
+    assert steps == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def _toy_step(state, batch):
+    p = state["p"] - 0.1 * batch["g"]
+    return {"p": p}, {"loss": jnp.sum(p ** 2)}
+
+
+def _batches():
+    step = 0
+    while True:
+        yield step, {"g": jnp.full((2,), 0.5)}
+        step += 1
+
+
+def test_ft_retries_transient(tmp_path):
+    faults = {2: "transient"}
+    loop = FaultTolerantLoop(
+        _toy_step, {"p": jnp.ones((2,))},
+        FTConfig(str(tmp_path), ckpt_every=100),
+        failure_hook=lambda s: faults.get(s))
+    out = loop.run(_batches(), 5)
+    assert out["final_step"] == 5
+    assert any("retry0" in e for _, e in out["events"])
+
+
+def test_ft_checkpoints_and_resume(tmp_path):
+    loop = FaultTolerantLoop(
+        _toy_step, {"p": jnp.ones((2,))},
+        FTConfig(str(tmp_path), ckpt_every=2))
+    loop.run(_batches(), 4)
+    assert latest_step(tmp_path) == 4
+
+    fresh = FaultTolerantLoop(
+        _toy_step, {"p": jnp.ones((2,))},
+        FTConfig(str(tmp_path), ckpt_every=2))
+    resumed = fresh.try_resume()
+    assert resumed == 4
+    np.testing.assert_allclose(
+        np.asarray(fresh.state["p"]),
+        np.asarray(loop.state["p"]))
+
+
+def test_ft_resize_hook_called(tmp_path):
+    called = []
+
+    def resize(state):
+        called.append(True)
+        return state
+
+    faults = {3: "resize"}
+    loop = FaultTolerantLoop(
+        _toy_step, {"p": jnp.ones((2,))},
+        FTConfig(str(tmp_path), ckpt_every=100),
+        failure_hook=lambda s: faults.get(s), resize_hook=resize)
+    out = loop.run(_batches(), 5)
+    assert called and any(e == "resized" for _, e in out["events"])
+    # pre-resize checkpoint exists
+    assert latest_step(tmp_path) == 3
