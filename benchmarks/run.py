@@ -1,17 +1,49 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05,fig16]
+                                            [--smoke] [--out BENCH.json]
 
 Prints ``name,us_per_call,derived`` CSV (the paper's machine-parsable
 output contract). The roofline module additionally refreshes
 experiments/roofline.csv from the dry-run artifacts if present.
+
+``--smoke`` runs every module in quick mode (one tiny config ladder per
+figure) and writes a JSON perf ledger (default ``BENCH_PR1.json`` at the
+repo root) with per-module wall time and the process-wide translation-
+cache hit rate, so successive PRs can track the harness's own perf
+trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
+import pathlib
 import sys
 import time
+
+def _enable_persistent_cache() -> None:
+    """Disk-backed XLA compile cache (the cross-process leg of the
+    translation cache). Kernel timings are unaffected — compile time is
+    measured and reported separately — but re-runs of the suite skip the
+    backend compiles entirely. Opt out with REPRO_JAX_CACHE=0."""
+    if os.environ.get("REPRO_JAX_CACHE", "1") == "0":
+        return
+    cache_dir = os.environ.get(
+        "REPRO_JAX_CACHE_DIR",
+        str(pathlib.Path(__file__).resolve().parents[1]
+            / "experiments" / ".jax_cache"),
+    )
+    try:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:  # pragma: no cover - older jax without the knobs
+        pass
+
 
 MODULES = [
     "fig05_barriers",
@@ -26,16 +58,25 @@ MODULES = [
     "roofline",
 ]
 
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-def main() -> None:
+
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick mode + write a JSON perf ledger")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR1.json"),
+                    help="ledger path for --smoke")
+    args = ap.parse_args(argv)
 
+    _enable_persistent_cache()
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = []
+    module_seconds: dict[str, float] = {}
+    t_suite = time.time()
     for name in MODULES:
         if only and name not in only and name.split("_")[0] not in only:
             continue
@@ -43,10 +84,28 @@ def main() -> None:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.run(quick=not args.full)
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            module_seconds[name] = round(time.time() - t0, 3)
+            print(f"# {name} done in {module_seconds[name]:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
+            module_seconds[name] = round(time.time() - t0, 3)
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+
+    if args.smoke:
+        from repro.core.staging import GLOBAL_CACHE
+
+        ledger = {
+            "suite": "benchmarks.run --smoke",
+            "mode": "full" if args.full else "quick",
+            "total_seconds": round(time.time() - t_suite, 3),
+            "module_seconds": module_seconds,
+            "failures": failures,
+            "translation_cache": GLOBAL_CACHE.stats(),
+        }
+        out = pathlib.Path(args.out)
+        out.write_text(json.dumps(ledger, indent=2) + "\n")
+        print(f"# wrote {out}", flush=True)
+
     if failures:
         sys.exit(f"benchmark modules failed: {failures}")
 

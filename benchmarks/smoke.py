@@ -1,0 +1,18 @@
+"""CI smoke entrypoint: one tiny config per figure module + perf ledger.
+
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR1.json]
+
+Thin alias for ``benchmarks.run --smoke``: runs the quick-mode ladder of
+every figure module and writes per-module wall time plus the
+translation-cache hit rate to the JSON ledger, so future PRs can assert
+the harness's perf trajectory instead of guessing.
+"""
+from __future__ import annotations
+
+import sys
+
+from .run import main
+
+
+if __name__ == "__main__":
+    main(["--smoke", *sys.argv[1:]])

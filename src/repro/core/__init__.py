@@ -5,6 +5,7 @@ Layers (each maps to a component of the paper's Figure 1):
     domain / schedule   polyhedral-lite iteration sets + transformations
     pattern             pattern specifications (header + ISCC analogue)
     codegen             ISCC codegen analogue: -> vectorized JAX / Pallas
+    staging             staged lower -> compile -> execute + translation cache
     drivers             unified / independent / measured driver templates
     measure             timing, bandwidth accounting, counter surrogates
     autotune            schedule-variant sweeps (optimization testbed)
@@ -25,8 +26,22 @@ from .pattern import (
     stream_sum,
     triad,
 )
-from .codegen import lower_jax, lower_pallas, serial_oracle
-from .drivers import Driver, DriverConfig, independent_view, unified_program_schedule
+from .codegen import NestPlan, lower_jax, lower_pallas, plan_nest, serial_oracle
+from .staging import (
+    GLOBAL_CACHE,
+    Compiled,
+    Lowered,
+    TranslationCache,
+    precompile,
+    stage_lower,
+)
+from .drivers import (
+    Driver,
+    DriverConfig,
+    Prepared,
+    independent_view,
+    unified_program_schedule,
+)
 from .measure import Record, classify_level, hlo_counters, tile_traffic, time_fn
 from .autotune import SweepResult, Variant, sweep
 
@@ -36,8 +51,11 @@ __all__ = [
     "Access", "DataSpace", "PatternSpec", "Statement",
     "triad", "stream_copy", "stream_scale", "stream_sum", "nstream",
     "jacobi1d", "jacobi2d", "jacobi3d",
-    "lower_jax", "lower_pallas", "serial_oracle",
-    "Driver", "DriverConfig", "independent_view", "unified_program_schedule",
+    "lower_jax", "lower_pallas", "serial_oracle", "plan_nest", "NestPlan",
+    "Lowered", "Compiled", "TranslationCache", "GLOBAL_CACHE",
+    "stage_lower", "precompile",
+    "Driver", "DriverConfig", "Prepared",
+    "independent_view", "unified_program_schedule",
     "Record", "classify_level", "hlo_counters", "tile_traffic", "time_fn",
     "SweepResult", "Variant", "sweep",
 ]

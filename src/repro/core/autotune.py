@@ -4,6 +4,12 @@ The paper's workflow: express a kernel once, then fork schedule variants
 (tile sizes, interleave factors, data-space layouts) and measure each.
 ``sweep`` automates that loop and returns the argmax; the launcher's perf
 pass uses it to pick Pallas block shapes for the model kernels.
+
+Sweeps run through the staged lower/compile pipeline and share one
+translation cache across all variants and working sets: a variant is
+validated once (not per working set), repeated (variant, n) tuples hit
+the compiled-executable cache, and the result carries the cache's
+hit/miss accounting so callers can see what the sweep actually paid for.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ from .drivers import Driver, DriverConfig
 from .measure import Record
 from .pattern import PatternSpec
 from .schedule import Schedule
+from .staging import GLOBAL_CACHE, TranslationCache, precompile
 
 __all__ = ["Variant", "SweepResult", "sweep"]
 
@@ -28,6 +35,7 @@ class Variant:
 class SweepResult:
     records: list[tuple[str, Record]]            # (variant name, record)
     best: tuple[str, Record]
+    cache_stats: dict | None = None              # translation-cache accounting
 
     def table(self) -> str:
         lines = ["variant,n,GB/s,us_per_call"]
@@ -42,14 +50,25 @@ def sweep(
     working_sets: Sequence[int],
     *, validate: bool = True,
     key: Callable[[Record], float] = lambda r: r.gbs,
+    cache: TranslationCache | None = None,
 ) -> SweepResult:
-    """Measure every variant over every working set; best = max ``key``."""
+    """Measure every variant over every working set; best = max ``key``.
+
+    All variants share ``cache`` (default: the process-wide cache), and
+    every (variant, working set) executable is staged up front so the
+    XLA compiles overlap before any timing starts.
+    """
+    cache = cache if cache is not None else GLOBAL_CACHE
+    drivers = [Driver(pattern_factory, v.config, cache=cache) for v in variants]
+    precompile([
+        (lambda d=d: d.prepare(working_sets, parallel=False))
+        for d in drivers
+    ])
     records: list[tuple[str, Record]] = []
-    for v in variants:
-        d = Driver(pattern_factory, v.config)
+    for v, d in zip(variants, drivers):
         if validate and v.config.validate_n:
             d.validate()
         for rec in d.run(working_sets):
             records.append((v.name, rec))
     best = max(records, key=lambda nr: key(nr[1]))
-    return SweepResult(records, best)
+    return SweepResult(records, best, cache_stats=cache.stats())

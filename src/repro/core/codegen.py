@@ -1,7 +1,15 @@
 """Code generation: lower (PatternSpec, Schedule) to executable JAX.
 
 This is the analogue of ISCC's ``codegen`` call, retargeted at two
-backends:
+backends and split into explicit stages so drivers, sweeps, and the
+autotuner can share work through the translation cache (see
+``staging.py``):
+
+``plan_nest``
+    Stage 0 of the pipeline: lower the schedule against a concrete env
+    and resolve every access into per-band ``(coeffs, const)`` rows.
+    Plan building is pure Python (no tracing) and is what the staged
+    ``Lowered`` artifact memoizes.
 
 ``lower_jax``
     Vectorized jax.numpy. Instances whose affine maps use **one band per
@@ -9,8 +17,10 @@ backends:
     of the paper's triad-family experiments) lower to static strided-slice
     reads + ``.at[...].set`` writes, which XLA fuses into a single
     streaming loop — the moral equivalent of the paper's generated C.
-    General maps (tiling, skew) lower to a gather/scatter form used for
-    validation and small working sets.
+    General maps (tiling, skew) lower to a gather/scatter form whose
+    indices are built *inside* the traced program from
+    ``lax.broadcasted_iota`` (never embedded as host constants), so large
+    grids stay cheap to trace and compile.
 
 ``lower_pallas``
     A Pallas kernel per schedule. Loop bands become the ``grid``; vector
@@ -21,9 +31,12 @@ backends:
     with ``interpret=True`` on this CPU container.
 
 ``serial_oracle``
-    Pure-numpy point-by-point execution in generated-code order. The
-    ground truth every backend is validated against (the paper's
-    ``<kernel>_val.in`` stage).
+    Pure-numpy execution in generated-code order. The ground truth every
+    backend is validated against (the paper's ``<kernel>_val.in`` stage).
+    Nests whose statement never reads its written space and whose maps
+    admit the strided-slice form are executed with vectorized numpy
+    slices (provably order-independent there); everything else falls
+    back to the point-by-point loop.
 
 Traversal-direction note: slices generated from the same band are paired
 elementwise across reads and the write, so negative-coefficient maps
@@ -35,6 +48,7 @@ gather path (checked).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Mapping
 
 import numpy as np
@@ -52,9 +66,13 @@ __all__ = [
     "lower_jax",
     "lower_pallas",
     "resolve_access",
+    "plan_nest",
+    "NestPlan",
 ]
 
-_GATHER_POINT_CAP = 8_000_000  # refuse to embed bigger index constants
+# Indices are now built in-program from broadcasted_iota (no host-side
+# constants), so the cap only bounds runtime index-array memory.
+_GATHER_POINT_CAP = 1 << 26
 
 
 # ---------------------------------------------------------------------------
@@ -105,18 +123,89 @@ def _signs_consistent(plans) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Access plans (stage 0 of the pipeline)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NestPlan:
+    """Resolved access plans for one (pattern, schedule, env) instance.
+
+    ``plans[k] = (read_rows, write_rows)`` for statement instance k, where
+    each rows entry is ``resolve_access`` output: per array dim,
+    ``(coeff_per_band, const)``. Building a plan never traces; it is the
+    unit of work the translation cache's lower stage memoizes.
+    """
+
+    nest: LoweredNest
+    plans: tuple
+    guarded: bool
+    single_band: bool
+    signs_ok: bool
+
+    @property
+    def fast(self) -> bool:
+        """Strided-slice fast path precondition."""
+        return not self.guarded and self.single_band and self.signs_ok
+
+
+def plan_nest(pattern: PatternSpec, schedule: Schedule,
+              env: Mapping[str, int], nest: LoweredNest | None = None,
+              ) -> NestPlan:
+    """Lower the schedule and resolve every access against its bands."""
+    if nest is None:
+        nest = schedule.lower(pattern.domain, env)
+    return _plan_from_nest(pattern, nest, env)
+
+
+def _plan_from_nest(pattern: PatternSpec, nest: LoweredNest,
+                    env: Mapping[str, int]) -> NestPlan:
+    stmt = pattern.statement
+    iter_names = pattern.domain.names
+    plans = tuple(
+        (
+            tuple(
+                resolve_access(a, nest, inst, iter_names, env)
+                for a in stmt.reads
+            ),
+            resolve_access(stmt.write, nest, inst, iter_names, env),
+        )
+        for inst in nest.instances
+    )
+    return NestPlan(
+        nest=nest,
+        plans=plans,
+        guarded=nest.needs_guard(),
+        single_band=all(_single_band_per_dim(nest, i) for i in nest.instances),
+        signs_ok=_signs_consistent(plans),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Serial oracle
 # ---------------------------------------------------------------------------
 
 
 def serial_oracle(
     pattern: PatternSpec, nest: LoweredNest, arrays: dict[str, np.ndarray],
-    env: Mapping[str, int], ntimes: int = 1,
+    env: Mapping[str, int], ntimes: int = 1, *, force_loop: bool = False,
 ) -> dict[str, np.ndarray]:
-    """Execute the scheduled nest point-by-point in numpy. Copies inputs."""
+    """Execute the scheduled nest in numpy. Copies inputs.
+
+    Fast path: when the statement never reads its written space, the nest
+    needs no guards, and every instance admits the strided-slice form,
+    sweeps are executed with vectorized numpy slice assignments — result
+    is provably identical to the point loop (reads cannot observe writes
+    within a sweep; schedule bijectivity keeps instance writes disjoint).
+    ``force_loop=True`` pins the point-by-point reference (tests).
+    """
     arrays = {k: np.array(v) for k, v in arrays.items()}
     names = pattern.domain.names
     stmt = pattern.statement
+    if not force_loop:
+        plan = _oracle_plan(pattern, nest, env)
+        if plan is not None:
+            return _oracle_vectorized(pattern, plan, arrays, env, ntimes)
     for _ in range(ntimes):
         for point in nest.executed_points():
             scope = dict(zip(names, point))
@@ -128,6 +217,51 @@ def serial_oracle(
             res = stmt.combine(vals, dict(env))
             widx = tuple(Affine.of(ix).eval(scope) for ix in stmt.write.index)
             arrays[stmt.write.space][widx] = res
+    return arrays
+
+
+def _oracle_plan(pattern: PatternSpec, nest: LoweredNest,
+                 env: Mapping[str, int]) -> NestPlan | None:
+    """NestPlan if the vectorized oracle path is provably safe, else None."""
+    stmt = pattern.statement
+    if any(a.space == stmt.write.space for a in stmt.reads):
+        return None
+    try:
+        plan = _plan_from_nest(pattern, nest, env)
+    except Exception:
+        return None
+    return plan if plan.fast else None
+
+
+def _oracle_vectorized(pattern: PatternSpec, plan: NestPlan,
+                       arrays: dict[str, np.ndarray],
+                       env: Mapping[str, int], ntimes: int,
+                       ) -> dict[str, np.ndarray]:
+    """Numpy mirror of the strided-slice fast path (see lower_jax)."""
+    stmt = pattern.statement
+    nest = plan.nest
+    for _ in range(ntimes):
+        for racc, wacc in plan.plans:
+            w_sl, w_bands = [], []
+            for row, const in wacc:
+                sl, b = _slice_for(row, const, nest.band_extents)
+                w_sl.append(sl)
+                w_bands.append(b)
+            vals = []
+            for acc, rows in zip(stmt.reads, racc):
+                sls, bands_order = [], []
+                for row, const in rows:
+                    sl, b = _slice_for(row, const, nest.band_extents)
+                    sls.append(sl)
+                    bands_order.append(b)
+                v = arrays[acc.space][tuple(sls)]
+                perm = _axis_perm(bands_order, w_bands)
+                if perm is not None:
+                    v = np.transpose(v, perm)
+                vals.append(v)
+            res = stmt.combine(vals, dict(env))
+            tgt = arrays[stmt.write.space]
+            tgt[tuple(w_sl)] = np.asarray(res).astype(tgt.dtype)
     return arrays
 
 
@@ -182,28 +316,20 @@ def _axis_perm(src_bands: list[int], dst_bands: list[int]):
 
 def lower_jax(
     pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
-    *, force_gather: bool = False,
+    *, force_gather: bool = False, plan: NestPlan | None = None,
 ) -> Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]:
-    """Build ``step(arrays) -> arrays`` executing one sweep of the pattern."""
-    nest = schedule.lower(pattern.domain, env)
+    """Build ``step(arrays) -> arrays`` executing one sweep of the pattern.
+
+    ``plan`` lets the staged pipeline reuse an already-resolved NestPlan
+    instead of re-deriving access rows.
+    """
+    if plan is None:
+        plan = plan_nest(pattern, schedule, env)
+    nest = plan.nest
     stmt = pattern.statement
-    iter_names = pattern.domain.names
-    guarded = nest.needs_guard()
+    plans = plan.plans
 
-    plans = []
-    for inst in nest.instances:
-        racc = [resolve_access(a, nest, inst, iter_names, env) for a in stmt.reads]
-        wacc = resolve_access(stmt.write, nest, inst, iter_names, env)
-        plans.append((racc, wacc))
-
-    fast = (
-        not force_gather
-        and not guarded
-        and all(_single_band_per_dim(nest, i) for i in nest.instances)
-        and _signs_consistent(plans)
-    )
-
-    if fast:
+    if plan.fast and not force_gather:
         def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
             arrays = dict(arrays)
             for racc, wacc in plans:
@@ -234,61 +360,73 @@ def lower_jax(
         return step
 
     # -- gather/scatter general path ---------------------------------------
+    # Band coordinates come from lax.broadcasted_iota inside the traced
+    # program, so no index constants are embedded in the HLO and trace
+    # size stays O(accesses), not O(points).
     n_pts = int(np.prod(nest.band_extents)) if nest.band_extents else 1
     if n_pts > _GATHER_POINT_CAP:
         raise ValueError(
-            f"gather path would embed {n_pts} index points; use lower_pallas"
+            f"gather path would materialize {n_pts} index points; "
+            "use lower_pallas"
         )
-    grids = np.indices(nest.band_extents).reshape(nest.n_bands, -1)
-    gather_plans = []
-    for inst in nest.instances:
-        iters = (
-            np.array(inst.A, dtype=np.int64) @ grids
-            + np.array(inst.c, dtype=np.int64)[:, None]
-        )  # (rank, P)
-        mask = np.ones(iters.shape[1], dtype=bool)
-        for d in range(nest.rank):
-            mask &= (iters[d] >= nest.domain_lo[d]) & (iters[d] < nest.domain_hi[d])
-        scope: dict[str, np.ndarray] = {
-            n: iters[d] for d, n in enumerate(iter_names)
-        }
-        scope.update({k: np.int64(v) for k, v in env.items()})
-
-        def resolve_idx(acc: Access):
-            return tuple(
-                np.asarray(_affine_np(Affine.of(ix), scope), dtype=np.int32)
-                for ix in acc.index
-            )
-
-        gather_plans.append(
-            ([resolve_idx(a) for a in stmt.reads], resolve_idx(stmt.write), mask)
-        )
+    guarded = plan.guarded
+    used_bands = sorted({
+        b
+        for racc, wacc in plans
+        for rows in list(racc) + [wacc]
+        for row, _ in rows
+        for b, c in enumerate(row)
+        if c != 0
+    } | ({
+        b
+        for inst in nest.instances
+        for d in range(nest.rank)
+        for b, c in enumerate(inst.A[d])
+        if c != 0
+    } if guarded else set()))
+    extents = nest.band_extents
 
     def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
         arrays = dict(arrays)
-        for ridx, widx, mask in gather_plans:
+        cols = {
+            b: jax.lax.broadcasted_iota(jnp.int32, extents, b).reshape(-1)
+            for b in used_bands
+        }
+
+        def lin(row, const):
+            acc = None
+            for b, c in enumerate(row):
+                if c == 0:
+                    continue
+                term = c * cols[b]
+                acc = term if acc is None else acc + term
+            if acc is None:
+                return jnp.full((n_pts,), const, jnp.int32)
+            return acc + jnp.int32(const)
+
+        for (racc, wacc), inst in zip(plans, nest.instances):
+            mask = None
+            if guarded:
+                mask = jnp.ones((n_pts,), bool)
+                for d in range(nest.rank):
+                    it = lin(inst.A[d], inst.c[d])
+                    mask &= (it >= nest.domain_lo[d]) & (it < nest.domain_hi[d])
             # OOB reads clamp (jit default); their lanes are dropped on write
             vals = [
-                arrays[acc.space][idx]
-                for acc, idx in zip(stmt.reads, ridx)
+                arrays[acc.space][tuple(lin(row, const) for row, const in rows)]
+                for acc, rows in zip(stmt.reads, racc)
             ]
             res = stmt.combine(vals, dict(env))
             tgt = arrays[stmt.write.space]
-            if not mask.all():
-                widx = tuple(np.where(mask, ix, -1) for ix in widx)
+            widx = tuple(lin(row, const) for row, const in wacc)
+            if mask is not None:
+                widx = tuple(jnp.where(mask, ix, -1) for ix in widx)
             arrays[stmt.write.space] = tgt.at[widx].set(
                 jnp.asarray(res).astype(tgt.dtype), mode="drop"
             )
         return arrays
 
     return step
-
-
-def _affine_np(a: Affine, scope: Mapping[str, np.ndarray]) -> np.ndarray:
-    acc = np.int64(a.const)
-    for sym, c in a.coeffs:
-        acc = acc + c * scope[sym]
-    return acc
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +437,7 @@ def _affine_np(a: Affine, scope: Mapping[str, np.ndarray]) -> np.ndarray:
 def lower_pallas(
     pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
     *, interpret: bool = True, grid_bands: tuple[str, ...] | None = None,
+    plan: NestPlan | None = None,
 ) -> Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]:
     """Lower to ``pl.pallas_call``.
 
@@ -310,14 +449,15 @@ def lower_pallas(
     The output space is aliased to its input so un-iterated elements
     (stencil borders) keep their initial values, matching the oracle.
     """
-    nest = schedule.lower(pattern.domain, env)
-    if nest.needs_guard():
+    if plan is None:
+        plan = plan_nest(pattern, schedule, env)
+    nest = plan.nest
+    if plan.guarded:
         raise NotImplementedError(
             "guarded schedules on the pallas backend: pick divisible tile "
             "sizes (the drivers choose divisible working sets)"
         )
     stmt = pattern.statement
-    iter_names = pattern.domain.names
     rank = nest.rank
 
     inst0 = nest.instances[0]
@@ -340,12 +480,8 @@ def lower_pallas(
     grid = tuple(nest.band_extents[b] for b in gbs) or (1,)
     vec_extents = {b: nest.band_extents[b] for b in vec_bands}
 
-    acc_plans = []
-    for inst in nest.instances:
-        racc = [resolve_access(a, nest, inst, iter_names, env) for a in stmt.reads]
-        wacc = resolve_access(stmt.write, nest, inst, iter_names, env)
-        acc_plans.append((racc, wacc))
-    if not _signs_consistent(acc_plans):
+    acc_plans = plan.plans
+    if not plan.signs_ok:
         raise ValueError("mixed coefficient signs per band; not vectorizable")
 
     space_order = [s.name for s in pattern.spaces]

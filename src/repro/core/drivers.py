@@ -31,10 +31,9 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
-from .codegen import lower_jax, lower_pallas, serial_oracle
+from .codegen import serial_oracle
 from .domain import Affine, Dim, IterDomain
 from .measure import (
     Record,
@@ -45,10 +44,19 @@ from .measure import (
 )
 from .pattern import Access, DataSpace, PatternSpec, Statement
 from .schedule import Schedule, identity
+from .staging import (
+    GLOBAL_CACHE,
+    Compiled,
+    Lowered,
+    TranslationCache,
+    precompile,
+    stage_lower,
+)
 
 __all__ = [
     "DriverConfig",
     "Driver",
+    "Prepared",
     "independent_view",
     "unified_program_schedule",
 ]
@@ -144,31 +152,50 @@ class DriverConfig:
     validate_n: int | None = 64     # oracle-check size (None = skip)
 
 
+@dataclasses.dataclass
+class Prepared:
+    """One staged measurement point: env + both pipeline stages."""
+
+    env: dict
+    lowered: Lowered
+    compiled: Compiled
+
+
 class Driver:
     """Combine a PatternSpec with a driver template and measure it.
 
     ``pattern_factory(env)`` lets stream-count-style sweeps rebuild the
     pattern per point; for fixed patterns pass ``lambda env: pat``.
+
+    Construction is staged (``lower -> compile -> execute``) through a
+    :class:`~repro.core.staging.TranslationCache`; identical (pattern,
+    schedule, template, backend, env) tuples never lower or compile
+    twice across working-set loops, repeated runs, and sweeps. Pass
+    ``cache=`` to isolate; the default pools work process-wide.
     """
 
     def __init__(self, pattern_factory: Callable[[Mapping[str, int]], PatternSpec],
-                 config: DriverConfig):
+                 config: DriverConfig,
+                 cache: TranslationCache | None = None):
         self.factory = pattern_factory
         self.cfg = config
+        self.cache = cache if cache is not None else GLOBAL_CACHE
 
     # -- construction -------------------------------------------------------
 
-    def _materialize(self, env: Mapping[str, int]):
+    def lower(self, env: Mapping[str, int]) -> Lowered:
+        """Stage 1: apply the driver template and resolve access plans.
+
+        Note the ``independent`` template treats the caller's ``n`` as
+        the *per-program* row extent (mirroring the paper's
+        ``int N = n/t`` macro): callers pass per-program ``n`` and every
+        space grows a leading ``programs`` axis of such rows.
+        """
         cfg = self.cfg
         base = self.factory(env)
         sch = cfg.schedule or identity()
         if cfg.template == "independent":
             pat = independent_view(base, cfg.programs, cfg.pad)
-            # per-program env: the caller's n is global; rows get n/programs
-            env = dict(env)
-            for k in ("n",):
-                if k in env and base.domain.dims[0].hi.symbols == (k,):
-                    pass
             grid_bands = ("p",) + tuple(cfg.grid_bands or ())
         elif cfg.template == "unified":
             pat = base
@@ -176,67 +203,83 @@ class Driver:
             grid_bands = ("prog",) + tuple(cfg.grid_bands or ())
         else:
             raise ValueError(cfg.template)
-
-        if cfg.backend == "jax":
-            step = lower_jax(pat, sch, env)
-        elif cfg.backend == "pallas":
-            step = lower_pallas(pat, sch, env, grid_bands=grid_bands)
-        else:
-            raise ValueError(cfg.backend)
-        return pat, sch, env, step
+        return stage_lower(
+            pat, sch, env, cfg.backend,
+            grid_bands=grid_bands if cfg.backend == "pallas" else None,
+            cache=self.cache,
+        )
 
     def build(self, env: Mapping[str, int]):
-        """Returns (pattern, schedule, run_fn, arrays0). ``run_fn(arrays)``
-        executes ``ntimes`` sweeps under the configured barrier regime."""
+        """Stage 1+2 plus initial arrays.
+
+        Returns ``(pattern, schedule, env, compiled, arrays0, names)``;
+        ``compiled(tup)`` executes ``ntimes`` sweeps under the configured
+        barrier regime on a tuple of arrays ordered by ``names``.
+        """
         cfg = self.cfg
-        pat, sch, env, step = self._materialize(env)
-        arrays0 = {k: jnp.asarray(v) for k, v in pat.allocate(env).items()}
-        names = sorted(arrays0)
+        lowered = self.lower(env)
+        compiled = lowered.compile(
+            ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
+            cache=self.cache,
+        )
+        pat = lowered.pattern
+        arrays0 = {k: jnp.asarray(v) for k, v in pat.allocate(lowered.env).items()}
+        names = compiled.names
+        return (pat, lowered.schedule, lowered.env, compiled,
+                tuple(arrays0[k] for k in names), names)
 
-        def step_t(tup):
-            d = dict(zip(names, tup))
-            d = step(d)
-            return tuple(d[k] for k in names)
-
-        if cfg.sync_every_rep:
-            one = jax.jit(step_t)
-
-            def run(tup):
-                for _ in range(cfg.ntimes):
-                    tup = one(tup)
-                    jax.block_until_ready(tup)
-                return tup
-
-            lowerable = one
-        else:
-            @jax.jit
-            def run(tup):
-                return jax.lax.fori_loop(
-                    0, cfg.ntimes, lambda _, t: step_t(t), tup
-                )
-
-            lowerable = run
-
-        return pat, sch, env, run, lowerable, tuple(arrays0[k] for k in names), names
+    def prepare(self, working_sets: Sequence[int],
+                env_extra: Mapping[str, int] | None = None,
+                parallel: bool = True) -> list[Prepared]:
+        """Stage all working-set points: lower serially (cheap, GIL-bound),
+        then AOT-compile the points concurrently (XLA releases the GIL)."""
+        cfg = self.cfg
+        lowereds = []
+        for n in working_sets:
+            env = {"n": int(n), **(env_extra or {})}
+            lowereds.append((env, self.lower(env)))
+        thunks = [
+            (lambda lw=lw: lw.compile(
+                ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
+                cache=self.cache,
+            ))
+            for _, lw in lowereds
+        ]
+        compiled = (precompile(thunks) if parallel
+                    else [t() for t in thunks])
+        return [
+            Prepared(env=env, lowered=lw, compiled=c)
+            for (env, lw), c in zip(lowereds, compiled)
+        ]
 
     # -- validation (the <kernel>_val.in stage) ------------------------------
 
     def validate(self, env: Mapping[str, int] | None = None) -> None:
+        """Replay the run schedule against the numpy oracle.
+
+        Memoized per lowered key: a sweep validates each variant once,
+        not once per working set / per repeated call.
+        """
         cfg = self.cfg
         n = cfg.validate_n or 64
         env = dict(env or {"n": n})
-        pat, sch, env2, step = self._materialize(env)
+        lowered = self.lower(env)
+        vkey = ("validate", lowered.key) if lowered.key is not None else None
+        if vkey is not None and self.cache.was_validated(vkey):
+            return
+        pat, sch, env2 = lowered.pattern, lowered.schedule, lowered.env
         arrays = pat.allocate(env2)
-        nest = sch.lower(pat.domain, env2)
-        want = serial_oracle(pat, nest, arrays, env2, ntimes=2)
+        want = serial_oracle(pat, lowered.nest, arrays, env2, ntimes=2)
         got = {k: jnp.asarray(v) for k, v in arrays.items()}
         for _ in range(2):
-            got = step(got)
+            got = lowered.step(got)
         for k in want:
             np.testing.assert_allclose(
                 np.asarray(got[k]), want[k], rtol=1e-5, atol=1e-5,
                 err_msg=f"space {k} diverged under {sch.name}/{cfg.template}",
             )
+        if vkey is not None:
+            self.cache.mark_validated(vkey)
 
     # -- measurement ---------------------------------------------------------
 
@@ -244,24 +287,30 @@ class Driver:
             env_extra: Mapping[str, int] | None = None) -> list[Record]:
         cfg = self.cfg
         records = []
-        for n in working_sets:
-            env = {"n": int(n), **(env_extra or {})}
-            pat, sch, env, run, lowerable, tup, names = self.build(env)
-            timing = time_fn(run, tup, reps=cfg.reps)
-            pts = pat.domain.point_count(env)
+        for p in self.prepare(working_sets, env_extra):
+            pat, env = p.lowered.pattern, p.env
+            arrays0 = {
+                k: jnp.asarray(v) for k, v in pat.allocate(p.lowered.env).items()
+            }
+            tup = tuple(arrays0[k] for k in p.compiled.names)
+            timing = time_fn(
+                p.compiled, tup, reps=cfg.reps, warmup=1,
+                compile_seconds=p.compiled.compile_seconds,
+            )
+            pts = pat.domain.point_count(p.lowered.env)
             bpp = pat.bytes_per_point()
             total_bytes = bpp * pts * cfg.ntimes
             ws_bytes = sum(
-                int(np.prod(s.concrete_shape(env)))
+                int(np.prod(s.concrete_shape(p.lowered.env)))
                 * np.dtype(s.dtype).itemsize
                 for s in pat.spaces
             )
             rec = Record(
                 pattern=pat.name,
                 template=cfg.template,
-                schedule=sch.name,
+                schedule=p.lowered.schedule.name,
                 backend=cfg.backend,
-                n=int(n),
+                n=int(env["n"]),
                 working_set_bytes=ws_bytes,
                 programs=cfg.programs,
                 ntimes=cfg.ntimes,
@@ -270,11 +319,16 @@ class Driver:
                 gflops=pat.flops_per_point * pts * cfg.ntimes
                 / timing.seconds / 1e9,
                 level=classify_level(ws_bytes),
-                extra={"barrier": cfg.sync_every_rep},
+                extra={
+                    "barrier": cfg.sync_every_rep,
+                    "compile_seconds": p.compiled.compile_seconds,
+                    "lower_seconds": p.lowered.lower_seconds,
+                    "cache_hit": p.compiled.from_cache,
+                },
             )
             if cfg.measured:
-                rec.extra.update(hlo_counters(lowerable, tup))
-                rec.extra.update(self._traffic(pat, env).as_dict())
+                rec.extra.update(hlo_counters(p.compiled))
+                rec.extra.update(self._traffic(pat, p.lowered.env).as_dict())
             records.append(rec)
         return records
 

@@ -49,10 +49,21 @@ class TimingResult:
     seconds: float          # median per-call wall time
     reps: int
     all_seconds: tuple[float, ...]
+    # staged pipeline: AOT compile time, reported separately from run
+    # time so sweep records never fold translation cost into bandwidth
+    compile_seconds: float | None = None
 
 
-def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> TimingResult:
-    """Median wall time of ``fn(*args)`` with device fencing."""
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2,
+            compile_seconds: float | None = None) -> TimingResult:
+    """Median wall time of ``fn(*args)`` with device fencing.
+
+    ``fn`` may be a pre-compiled executable from the staged pipeline
+    (``staging.Compiled`` or a jax AOT executable); pass ``warmup=1``
+    then — the first call only absorbs dispatch warm-up, compilation
+    already happened — and thread its measured ``compile_seconds``
+    through so records can report translation cost separately.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -61,14 +72,24 @@ def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> TimingResult
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return TimingResult(times[len(times) // 2], reps, tuple(times))
+    return TimingResult(times[len(times) // 2], reps, tuple(times),
+                        compile_seconds)
 
 
-def hlo_counters(jitted, *args) -> dict[str, float]:
-    """FLOPs and bytes-accessed as claimed by the compiled executable."""
+def hlo_counters(target, *args) -> dict[str, float]:
+    """FLOPs and bytes-accessed as claimed by the compiled executable.
+
+    ``target`` is either an already-compiled executable exposing
+    ``cost_analysis()`` (``staging.Compiled`` / jax AOT executable — no
+    recompile) or a jitted function, which is lowered and compiled here
+    with ``*args``.
+    """
     try:
-        compiled = jitted.lower(*args).compile()
-        ca = compiled.cost_analysis() or {}
+        if hasattr(target, "cost_analysis"):
+            ca = target.cost_analysis() or {}
+        else:
+            compiled = target.lower(*args).compile()
+            ca = compiled.cost_analysis() or {}
         if isinstance(ca, (list, tuple)):
             ca = ca[0] if ca else {}
         return {

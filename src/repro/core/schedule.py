@@ -234,8 +234,36 @@ class Schedule:
 
     # -- lowering ----------------------------------------------------------
 
+    @property
+    def cache_key(self) -> tuple:
+        """Hashable identity used by the staging translation cache."""
+        return (self.name, self.transforms)
+
     def lower(self, dom: IterDomain, env: Mapping[str, int]) -> LoweredNest:
-        """Resolve parameters and apply the transform chain.
+        """Resolve parameters and apply the transform chain (memoized).
+
+        Lowering is pure: (schedule, domain, env) fully determine the
+        nest, and every participant is immutable — so repeated lowering
+        across driver working-set loops, validation, and sweeps hits a
+        process-wide memo instead of re-running the transform chain.
+        """
+        try:
+            key = (self.cache_key, dom, tuple(sorted(env.items())))
+            hit = _LOWER_MEMO.get(key)
+        except TypeError:
+            key = None
+            hit = None
+        if hit is not None:
+            return hit
+        nest = self._lower(dom, env)
+        if key is not None:
+            if len(_LOWER_MEMO) >= _LOWER_MEMO_CAP:
+                _LOWER_MEMO.clear()
+            _LOWER_MEMO[key] = nest
+        return nest
+
+    def _lower(self, dom: IterDomain, env: Mapping[str, int]) -> LoweredNest:
+        """Uncached lowering.
 
         Internal state during lowering: a list of bands
         ``(name, extent:int)`` and a list of instances, each a dict
@@ -348,6 +376,10 @@ class Schedule:
             lowered.append(LoweredInstance(tuple(A), tuple(c)))
 
         return LoweredNest(band_names, band_extents, tuple(lowered), lo, hi)
+
+
+_LOWER_MEMO: dict = {}
+_LOWER_MEMO_CAP = 4096
 
 
 def identity() -> Schedule:

@@ -1,0 +1,461 @@
+"""Staged lower -> compile -> execute pipeline with a translation cache.
+
+AdaptMemBench's value is cheap exploration: express a pattern once, fork
+many (schedule, template, working-set) variants, measure each. The naive
+pipeline re-resolves access plans, re-traces, and re-jits for every
+variant, so sweep wall time is dominated by Python lowering and XLA
+compilation instead of the kernels being measured. This module makes the
+stages explicit (the JaCe ``lower().compile()`` discipline):
+
+``Lowered``
+    Access plans resolved against a concrete environment; the backend
+    ``step(arrays) -> arrays`` function is built but nothing is traced.
+
+``Compiled``
+    The repetition loop is traced and AOT-compiled into an XLA
+    executable (``jax.jit(...).lower(avals).compile()``). Compile time
+    and cost analysis come from this stage for free — measurement never
+    pays a hidden recompile.
+
+``TranslationCache``
+    Both stages are memoized behind a keyed cache. Keys are structural
+    fingerprints of (pattern, schedule, env, backend, template knobs),
+    so identical tuples never lower or compile twice across
+    ``Driver.run`` working-set loops, ``sweep`` variants, and repeated
+    validation. A shared ``GLOBAL_CACHE`` is the default so independent
+    drivers in one process pool their work.
+
+``precompile``
+    Compiles many staged variants concurrently. XLA's backend compile
+    releases the GIL, so a small thread pool overlaps the compiles of a
+    sweep's variants even though tracing stays serial.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+import jax
+
+from .pattern import PatternSpec
+from .schedule import Schedule
+
+__all__ = [
+    "Lowered",
+    "Compiled",
+    "TranslationCache",
+    "GLOBAL_CACHE",
+    "stage_lower",
+    "precompile",
+    "fingerprint_pattern",
+    "fingerprint_schedule",
+]
+
+
+# ---------------------------------------------------------------------------
+# Structural fingerprints (cache keys)
+# ---------------------------------------------------------------------------
+
+
+def _freeze_callable(fn: Callable) -> tuple:
+    """Fingerprint a function by code identity + closure contents.
+
+    Pattern factories rebuild specs per call, so ``combine``/``init``
+    lambdas are fresh objects every time; what identifies them is their
+    bytecode and the values they close over (``triad(scalar=2.0)`` and
+    ``triad(scalar=3.0)`` must not collide).
+    """
+    if hasattr(fn, "func"):  # functools.partial
+        return ("partial", _freeze(fn.func), _freeze(fn.args),
+                _freeze(tuple(sorted(fn.keywords.items()))))
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return ("obj", repr(fn))
+    cells: tuple = ()
+    if getattr(fn, "__closure__", None):
+        cells = tuple(_freeze(c.cell_contents) for c in fn.__closure__)
+    defaults = _freeze(fn.__defaults__) if fn.__defaults__ else ()
+    return ("fn", fn.__module__, fn.__qualname__,
+            hash(code.co_code), _freeze(code.co_consts), defaults, cells)
+
+
+def _freeze(obj: Any) -> Any:
+    """Recursively convert ``obj`` into a hashable structural key."""
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    if isinstance(obj, (np.integer, np.floating)):
+        return ("np", str(obj.dtype), obj.item())
+    if isinstance(obj, np.ndarray):
+        return ("nd", obj.shape, str(obj.dtype), hash(obj.tobytes()))
+    if isinstance(obj, (tuple, list)):
+        return tuple(_freeze(x) for x in obj)
+    if isinstance(obj, dict):
+        return tuple(sorted((str(k), _freeze(v)) for k, v in obj.items()))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        try:
+            hash(obj)
+            return obj  # frozen dataclass (Affine, Dim, ...) — already a key
+        except TypeError:
+            return tuple(
+                (f.name, _freeze(getattr(obj, f.name)))
+                for f in dataclasses.fields(obj)
+            )
+    if callable(obj):
+        return _freeze_callable(obj)
+    return ("repr", repr(obj))
+
+
+def fingerprint_pattern(pattern: PatternSpec) -> tuple:
+    """Hashable structural identity of a PatternSpec.
+
+    Two factory-built specs with equal structure (spaces, accesses,
+    combine code + captured constants, domain) get equal fingerprints
+    even though every Python object in them is fresh.
+    """
+    stmt = pattern.statement
+    return (
+        "pat",
+        pattern.name,
+        tuple(
+            (s.name, _freeze(s.shape), s.dtype, _freeze(s.init))
+            for s in pattern.spaces
+        ),
+        tuple((a.space, _freeze(a.resolved())) for a in stmt.reads),
+        (stmt.write.space, _freeze(stmt.write.resolved())),
+        _freeze(stmt.combine),
+        pattern.domain.dims,
+        pattern.flops_per_point,
+    )
+
+
+def fingerprint_schedule(schedule: Schedule) -> tuple:
+    return ("sch", schedule.name, schedule.transforms)
+
+
+def _env_key(env: Mapping[str, int]) -> tuple:
+    return tuple(sorted((str(k), int(v)) for k, v in env.items()))
+
+
+# ---------------------------------------------------------------------------
+# Staged artifacts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Lowered:
+    """Stage 1: access plans resolved, backend step built (nothing traced)."""
+
+    pattern: PatternSpec
+    schedule: Schedule
+    env: dict
+    backend: str
+    step: Callable[[dict], dict]
+    nest: Any                       # LoweredNest
+    key: tuple | None               # None = uncacheable (fingerprint failed)
+    lower_seconds: float
+    cache: "TranslationCache | None" = None
+
+    @property
+    def space_names(self) -> tuple[str, ...]:
+        return tuple(sorted(s.name for s in self.pattern.spaces))
+
+    def avals(self) -> tuple[jax.ShapeDtypeStruct, ...]:
+        by_name = {s.name: s for s in self.pattern.spaces}
+        return tuple(
+            jax.ShapeDtypeStruct(
+                by_name[nm].concrete_shape(self.env), np.dtype(by_name[nm].dtype)
+            )
+            for nm in self.space_names
+        )
+
+    def compile(self, *, ntimes: int, sync_every_rep: bool = False,
+                cache: "TranslationCache | None" = None) -> "Compiled":
+        """Stage 2: trace + AOT-compile the ``ntimes``-sweep repetition loop."""
+        cache = cache or self.cache
+        key = None
+        if self.key is not None:
+            key = ("exec", self.key, int(ntimes), bool(sync_every_rep))
+        builder = lambda: _build_compiled(self, ntimes, sync_every_rep)
+        if cache is None or key is None:
+            return builder()
+        out, hit = cache._compiled_get_or_build(key, builder)
+        # per-caller view: never mutate the shared cached object (racy
+        # under precompile threads and wrong for duplicate points)
+        return dataclasses.replace(out, from_cache=hit) if hit else out
+
+
+@dataclasses.dataclass
+class Compiled:
+    """Stage 3 handle: an executable repetition loop + its cost metadata."""
+
+    lowered: Lowered
+    names: tuple[str, ...]
+    run: Callable                   # run(tup) -> tup, ntimes sweeps
+    executable: Any                 # jax AOT executable (cost_analysis source)
+    ntimes: int
+    sync_every_rep: bool
+    compile_seconds: float
+    from_cache: bool = False
+
+    def __call__(self, tup):
+        return self.run(tup)
+
+    def cost_analysis(self) -> dict:
+        ca = self.executable.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return ca
+
+
+def _build_compiled(lowered: Lowered, ntimes: int,
+                    sync_every_rep: bool) -> Compiled:
+    names = lowered.space_names
+    step = lowered.step
+
+    def step_t(tup):
+        d = dict(zip(names, tup))
+        d = step(d)
+        return tuple(d[k] for k in names)
+
+    avals = lowered.avals()
+    t0 = time.perf_counter()
+    if sync_every_rep:
+        exe = jax.jit(step_t).lower(avals).compile()
+
+        def run(tup):
+            for _ in range(ntimes):
+                tup = exe(tup)
+                jax.block_until_ready(tup)
+            return tup
+    else:
+        def fused(tup):
+            return jax.lax.fori_loop(0, ntimes, lambda _, t: step_t(t), tup)
+
+        exe = jax.jit(fused).lower(avals).compile()
+        run = exe
+    compile_seconds = time.perf_counter() - t0
+    return Compiled(
+        lowered=lowered, names=names, run=run, executable=exe,
+        ntimes=ntimes, sync_every_rep=sync_every_rep,
+        compile_seconds=compile_seconds,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Translation cache
+# ---------------------------------------------------------------------------
+
+
+class TranslationCache:
+    """Keyed memo for both pipeline stages, with hit/miss accounting.
+
+    Thread-safe for concurrent ``precompile`` workers: lookups and
+    insertions are locked; builders run outside the lock, and
+    concurrent requests for one key deduplicate onto a single in-
+    flight build (waiters count as hits — they paid a wait, not a
+    compile).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._lowered: dict[tuple, Lowered] = {}
+        self._compiled: dict[tuple, Compiled] = {}
+        self._inflight: dict[tuple, Future] = {}
+        self._validated: set[tuple] = set()
+        self.lower_hits = 0
+        self.lower_misses = 0
+        self.compile_hits = 0
+        self.compile_misses = 0
+
+    # bound the memo the same way schedule._LOWER_MEMO is bounded: a
+    # long-lived autotune/exploration process must not pin executables
+    # without limit. Crossing the cap drops the whole store (simple and
+    # rare) rather than tracking LRU order on the hot path.
+    MAX_ENTRIES_PER_STAGE = 1024
+
+    def _get_or_build(self, store: dict, key, builder,
+                      kind: str) -> tuple[Any, bool]:
+        with self._lock:
+            hit = store.get(key)
+            if hit is not None:
+                setattr(self, f"{kind}_hits", getattr(self, f"{kind}_hits") + 1)
+                return hit, True
+            if len(store) >= self.MAX_ENTRIES_PER_STAGE:
+                store.clear()
+            fut = self._inflight.get(key)
+            if fut is None:
+                fut = Future()
+                self._inflight[key] = fut
+                owner = True
+                setattr(self, f"{kind}_misses",
+                        getattr(self, f"{kind}_misses") + 1)
+            else:
+                owner = False
+                setattr(self, f"{kind}_hits", getattr(self, f"{kind}_hits") + 1)
+        if not owner:
+            return fut.result(), True
+        try:
+            out = builder()
+        except BaseException as e:
+            with self._lock:
+                self._inflight.pop(key, None)
+            fut.set_exception(e)
+            raise
+        with self._lock:
+            store[key] = out
+            self._inflight.pop(key, None)
+        fut.set_result(out)
+        return out, False
+
+    def _lowered_get_or_build(self, key, builder) -> tuple[Lowered, bool]:
+        return self._get_or_build(self._lowered, key, builder, "lower")
+
+    def _compiled_get_or_build(self, key, builder) -> tuple[Compiled, bool]:
+        return self._get_or_build(self._compiled, key, builder, "compile")
+
+    # -- validation memo (sweeps validate a variant once, not per set) ------
+
+    def was_validated(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._validated
+
+    def mark_validated(self, key: tuple) -> None:
+        with self._lock:
+            self._validated.add(key)
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = (self.lower_hits + self.lower_misses
+                     + self.compile_hits + self.compile_misses)
+            hits = self.lower_hits + self.compile_hits
+            return {
+                "lower_hits": self.lower_hits,
+                "lower_misses": self.lower_misses,
+                "compile_hits": self.compile_hits,
+                "compile_misses": self.compile_misses,
+                "entries": len(self._lowered) + len(self._compiled),
+                "hit_rate": (hits / total) if total else 0.0,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._lowered.clear()
+            self._compiled.clear()
+            self._validated.clear()
+            self.lower_hits = self.lower_misses = 0
+            self.compile_hits = self.compile_misses = 0
+
+
+GLOBAL_CACHE = TranslationCache()
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 entry point
+# ---------------------------------------------------------------------------
+
+
+def stage_lower(
+    pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
+    backend: str = "jax", *, grid_bands: tuple[str, ...] | None = None,
+    force_gather: bool = False,
+    cache: TranslationCache | None = None,
+) -> Lowered:
+    """Resolve access plans and build the backend step, through the cache."""
+    from . import codegen  # deferred: codegen imports nothing from here
+
+    env = dict(env)
+    try:
+        key = (
+            "lower", fingerprint_pattern(pattern),
+            fingerprint_schedule(schedule), backend,
+            tuple(grid_bands) if grid_bands else None,
+            bool(force_gather), _env_key(env),
+        )
+    except Exception:
+        key = None  # unhashable pattern piece: bypass the cache
+
+    def builder() -> Lowered:
+        t0 = time.perf_counter()
+        plan = codegen.plan_nest(pattern, schedule, env)
+        if backend == "jax":
+            step = codegen.lower_jax(
+                pattern, schedule, env, force_gather=force_gather, plan=plan
+            )
+        elif backend == "pallas":
+            step = codegen.lower_pallas(
+                pattern, schedule, env, grid_bands=grid_bands, plan=plan
+            )
+        else:
+            raise ValueError(backend)
+        return Lowered(
+            pattern=pattern, schedule=schedule, env=env, backend=backend,
+            step=step, nest=plan.nest, key=key,
+            lower_seconds=time.perf_counter() - t0, cache=cache,
+        )
+
+    if cache is None or key is None:
+        return builder()
+    out, _hit = cache._lowered_get_or_build(key, builder)
+    if out.cache is None:
+        out.cache = cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Concurrent compile
+# ---------------------------------------------------------------------------
+
+
+def precompile(thunks: Sequence[Callable[[], Any]],
+               max_workers: int | None = None) -> list:
+    """Run compile thunks concurrently; returns their results in order.
+
+    XLA's ``backend_compile`` releases the GIL, so a small pool overlaps
+    the per-variant compiles of a sweep. Tracing inside each thunk stays
+    correct (JAX trace state is thread-local) but serializes on the GIL;
+    the win is the backend compile, which dominates.
+    """
+    thunks = list(thunks)
+    if len(thunks) <= 1:
+        return [t() for t in thunks]
+    if max_workers is None:
+        max_workers = min(4, len(thunks), os.cpu_count() or 1)
+    if max_workers <= 1:
+        return [t() for t in thunks]
+    with ThreadPoolExecutor(max_workers=max_workers) as ex:
+        return list(ex.map(lambda t: t(), thunks))
+
+
+def pipeline_compile(lower_thunks: Sequence[Callable[[], Any]],
+                     compile_fn: Callable[[Any], Any] | None = None,
+                     max_workers: int | None = None) -> list:
+    """Overlap serial lowering with concurrent compilation.
+
+    Each ``lower_thunks[i]()`` runs on the calling thread (JAX tracing
+    is GIL-bound, so serializing it costs nothing) and its result is
+    immediately handed to a worker that runs ``compile_fn`` (default:
+    ``lowered.compile()``), which spends its time in XLA with the GIL
+    released. Total wall time approaches ``max(sum(lower), sum(compile)
+    / workers)`` instead of their sum. Returns compiled results in
+    order.
+    """
+    if compile_fn is None:
+        compile_fn = lambda lowered: lowered.compile()
+    lower_thunks = list(lower_thunks)
+    if len(lower_thunks) <= 1:
+        return [compile_fn(t()) for t in lower_thunks]
+    if max_workers is None:
+        max_workers = min(4, len(lower_thunks), os.cpu_count() or 1)
+    if max_workers <= 1:
+        return [compile_fn(t()) for t in lower_thunks]
+    with ThreadPoolExecutor(max_workers=max_workers) as ex:
+        futures = [ex.submit(compile_fn, t()) for t in lower_thunks]
+        return [f.result() for f in futures]

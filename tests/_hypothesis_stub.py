@@ -1,0 +1,150 @@
+"""Deterministic mini-hypothesis used when the real package is absent.
+
+The test suite property-tests with a small hypothesis surface:
+``given``, ``settings``, ``st.integers/sampled_from/booleans/floats/
+lists/data/composite``. This stub replays each ``@given`` test over
+``max_examples`` pseudo-random examples drawn from a generator seeded by
+the test's qualified name — deterministic across runs, no shrinking, no
+database. ``tests/conftest.py`` installs it as ``sys.modules
+["hypothesis"]`` only when the real package is unavailable.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def sampled_from(seq):
+    items = list(seq)
+    if not items:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value=None, max_value=None, allow_nan=True,
+           allow_infinity=None, **_kw):
+    lo = -1e9 if min_value is None else min_value
+    hi = 1e9 if max_value is None else max_value
+
+    def sample(rng):
+        # bias toward boundary values the way hypothesis does
+        r = rng.random()
+        if r < 0.1:
+            return float(lo)
+        if r < 0.2:
+            return float(hi)
+        if r < 0.3:
+            return 0.0 if lo <= 0.0 <= hi else float(lo)
+        return rng.uniform(lo, hi)
+
+    return Strategy(sample)
+
+
+def lists(elements: Strategy, min_size=0, max_size=None, **_kw):
+    hi = (min_size + 16) if max_size is None else max_size
+    return Strategy(
+        lambda rng: [elements.example(rng)
+                     for _ in range(rng.randint(min_size, hi))]
+    )
+
+
+class DataObject:
+    """Interactive draws (``st.data()``) share the test's generator."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.example(self._rng)
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng))
+
+
+def data():
+    return _DataStrategy()
+
+
+def composite(fn):
+    """``@st.composite def s(draw, *args)`` -> callable returning a Strategy."""
+
+    def make(*args, **kwargs):
+        def sample(rng):
+            draw = DataObject(rng).draw
+            return fn(draw, *args, **kwargs)
+
+        return Strategy(sample)
+
+    make.__name__ = fn.__name__
+    make.__doc__ = fn.__doc__
+    return make
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper():
+            max_examples = getattr(
+                wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(max_examples):
+                args = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args)
+                except BaseException:
+                    shown = [
+                        a if not isinstance(a, DataObject) else "<data>"
+                        for a in args
+                    ]
+                    print(f"[hypothesis-stub] falsified on example "
+                          f"{i}: {shown!r}")
+                    raise
+
+        # keep pytest's collected signature argument-free (no __wrapped__:
+        # pytest would treat the original params as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        return wrapper
+
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    sampled_from=sampled_from,
+    integers=integers,
+    booleans=booleans,
+    floats=floats,
+    lists=lists,
+    data=data,
+    composite=composite,
+)

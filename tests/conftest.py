@@ -4,3 +4,16 @@ import sys
 SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+# hypothesis is an optional dependency: fall back to the deterministic
+# stub so the property tests still collect and run without it.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    TESTS = pathlib.Path(__file__).resolve().parent
+    if str(TESTS) not in sys.path:
+        sys.path.insert(0, str(TESTS))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

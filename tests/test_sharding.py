@@ -17,12 +17,19 @@ from repro.runtime.sharding import (
 )
 
 
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)  # jax >= 0.5 (axis_sizes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # 0.4.x shape_tuple
+
+
 def mesh2d():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh3d():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def par_for(mesh, fsdp=(), ep=("model",)):

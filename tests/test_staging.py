@@ -1,0 +1,221 @@
+"""Translation-cache + staged-pipeline tests.
+
+Covers the PR-1 acceptance contract: hit/miss accounting across repeated
+``Driver.run`` working sets, invalidation when env / schedule / template
+change, cached-vs-cold output equivalence, compile-time reporting, the
+vectorized oracle fast path, and once-per-variant validation.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Driver, DriverConfig, TranslationCache, Variant, identity, jacobi1d,
+    jacobi2d, jacobi3d, serial_oracle, stage_lower, sweep, triad,
+)
+from repro.core import drivers as drivers_mod
+
+WS = [256, 512, 1024]  # three working sets, per the acceptance criteria
+
+
+def _cfg(**kw):
+    base = dict(template="unified", programs=4, ntimes=2, reps=1,
+                validate_n=64)
+    base.update(kw)
+    return DriverConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# hit/miss accounting
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_runs_hit_cache_across_working_sets():
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(), _cfg(), cache=cache)
+
+    d.run(WS)
+    s1 = cache.stats()
+    assert s1["lower_misses"] == len(WS)
+    assert s1["compile_misses"] == len(WS)
+    assert s1["lower_hits"] == 0 and s1["compile_hits"] == 0
+
+    d.run(WS)  # identical tuples: nothing may lower or compile again
+    s2 = cache.stats()
+    assert s2["lower_misses"] == len(WS)
+    assert s2["compile_misses"] == len(WS)
+    assert s2["lower_hits"] >= len(WS)
+    assert s2["compile_hits"] >= len(WS)
+    assert s2["hit_rate"] > 0
+
+
+def test_fresh_driver_same_structure_still_hits():
+    """Factories rebuild PatternSpec objects per call; the structural
+    fingerprint must identify them anyway."""
+    cache = TranslationCache()
+    Driver(lambda env: triad(), _cfg(), cache=cache).run([512])
+    Driver(lambda env: triad(), _cfg(), cache=cache).run([512])
+    s = cache.stats()
+    assert s["lower_misses"] == 1 and s["lower_hits"] == 1
+    assert s["compile_misses"] == 1 and s["compile_hits"] == 1
+
+
+def test_cache_keys_invalidate_on_config_changes():
+    cache = TranslationCache()
+    Driver(lambda env: triad(), _cfg(), cache=cache).run([512])
+    base = cache.stats()["lower_misses"]
+
+    # different env (working set)
+    Driver(lambda env: triad(), _cfg(), cache=cache).run([513 - 1 + 256])
+    assert cache.stats()["lower_misses"] == base + 1
+
+    # different schedule
+    Driver(lambda env: triad(),
+           _cfg(schedule=identity().interleave("i", 2)),
+           cache=cache).run([512])
+    assert cache.stats()["lower_misses"] == base + 2
+
+    # different template
+    Driver(lambda env: triad(), _cfg(template="independent"),
+           cache=cache).run([512])
+    assert cache.stats()["lower_misses"] == base + 3
+
+    # different pattern constants (combine closure) must not collide
+    Driver(lambda env: triad(scalar=2.0), _cfg(), cache=cache).run([512])
+    assert cache.stats()["lower_misses"] == base + 4
+
+
+def test_ntimes_change_recompiles_but_shares_lowering():
+    cache = TranslationCache()
+    d1 = Driver(lambda env: triad(), _cfg(ntimes=2), cache=cache)
+    d2 = Driver(lambda env: triad(), _cfg(ntimes=4), cache=cache)
+    d1.run([512])
+    d2.run([512])
+    s = cache.stats()
+    assert s["lower_misses"] == 1 and s["lower_hits"] >= 1
+    assert s["compile_misses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# cached-vs-cold equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("template", ["unified", "independent"])
+def test_cached_output_equals_cold_output(template):
+    cold_cache, warm_cache = TranslationCache(), TranslationCache()
+    mk = lambda c: Driver(lambda env: triad(), _cfg(template=template),
+                          cache=c)
+    _, _, env, compiled_cold, tup, names = mk(cold_cache).build({"n": 512})
+
+    warm = mk(warm_cache)
+    warm.build({"n": 512})                       # prime
+    _, _, _, compiled_warm, tup2, _ = warm.build({"n": 512})
+    assert compiled_warm.from_cache
+
+    out_cold = compiled_cold(tup)
+    out_warm = compiled_warm(tup2)
+    for a, b in zip(out_cold, out_warm):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_record_fields_and_compile_time_reporting():
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(), _cfg(), cache=cache)
+    (rec,) = d.run([512])
+    assert rec.gbs > 0 and rec.seconds > 0
+    assert rec.extra["barrier"] is False
+    assert rec.extra["compile_seconds"] >= 0
+    assert rec.extra["lower_seconds"] >= 0
+    assert rec.extra["cache_hit"] is False
+    (rec2,) = d.run([512])
+    assert rec2.extra["cache_hit"] is True
+    # cached replay preserves the record identity fields
+    for f in ("pattern", "template", "schedule", "backend", "n",
+              "working_set_bytes", "programs", "ntimes", "level"):
+        assert getattr(rec2, f) == getattr(rec, f)
+
+
+# ---------------------------------------------------------------------------
+# validation memo + sweep sharing
+# ---------------------------------------------------------------------------
+
+
+def test_validate_runs_once_per_variant(monkeypatch):
+    calls = []
+    real = drivers_mod.serial_oracle
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(drivers_mod, "serial_oracle", spy)
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(), _cfg(), cache=cache)
+    d.validate()
+    d.validate()
+    Driver(lambda env: triad(), _cfg(), cache=cache).validate()
+    assert len(calls) == 1
+
+
+def test_sweep_shares_cache_and_reports_stats():
+    cache = TranslationCache()
+    variants = [
+        Variant("a", _cfg(template="independent", programs=2)),
+        Variant("b", _cfg(template="independent", programs=2,
+                          schedule=identity().interleave("i", 2))),
+    ]
+    res = sweep(lambda env: triad(), variants, [256, 512], cache=cache)
+    assert res.best[0] in ("a", "b")
+    assert res.cache_stats is not None
+    assert res.cache_stats["lower_misses"] >= 4
+    # sweeping again is pure cache hits for lowering + compilation
+    res2 = sweep(lambda env: triad(), variants, [256, 512], cache=cache)
+    assert res2.cache_stats["lower_misses"] == res.cache_stats["lower_misses"]
+    assert res2.cache_stats["compile_misses"] == res.cache_stats["compile_misses"]
+    assert res2.cache_stats["compile_hits"] > res.cache_stats["compile_hits"]
+
+
+# ---------------------------------------------------------------------------
+# staged artifacts directly
+# ---------------------------------------------------------------------------
+
+
+def test_stage_lower_pallas_keyed_separately():
+    cache = TranslationCache()
+    pat = triad()
+    env = {"n": 256}
+    stage_lower(pat, identity(), env, "jax", cache=cache)
+    stage_lower(pat, identity(), env, "pallas", cache=cache)
+    stage_lower(pat, identity(), env, "jax", cache=cache)
+    s = cache.stats()
+    assert s["lower_misses"] == 2 and s["lower_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# vectorized oracle fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("factory,sch,env", [
+    # vectorized fast path (single band per dim, write space never read)
+    (triad, identity(), {"n": 64}),
+    (triad, identity().interleave("i", 2), {"n": 64}),
+    (triad, identity().reverse("i"), {"n": 64}),
+    (jacobi1d, identity(), {"n": 66}),
+    (jacobi2d, identity().interchange("i", "j"), {"n": 18}),
+    (jacobi3d, identity(), {"n": 10}),
+    # unified-template shape: programs split via outer tile, inner intact
+    (triad, identity().tile("i", 16, outer="prog", inner="i"), {"n": 64}),
+    # tiled nests fall back to the point loop; equality must still hold
+    (jacobi1d, identity().tile("i", 16), {"n": 66}),
+])
+def test_vectorized_oracle_matches_point_loop(factory, sch, env):
+    pat = factory()
+    nest = sch.lower(pat.domain, env)
+    arrays = pat.allocate(env)
+    fast = serial_oracle(pat, nest, arrays, env, ntimes=2)
+    slow = serial_oracle(pat, nest, arrays, env, ntimes=2, force_loop=True)
+    for k in slow:
+        np.testing.assert_allclose(fast[k], slow[k], rtol=1e-6, atol=1e-6)
