@@ -1,21 +1,19 @@
-"""Shared benchmark plumbing: working-set ladders, CSV emission."""
+"""Thin re-export shim kept for external callers.
+
+The ladder constants and CSV helpers moved into the suite layer
+(``repro.suite.ladders`` / ``repro.suite.runner``) so workloads reference
+them as values; import from ``repro.suite`` in new code.
+"""
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core import Record
-
-# Working-set ladder (elements per stream). On the TPU target these cross
-# the VMEM boundary the way the paper's sizes cross L1/L2/L3; on this CPU
-# container they cross L1/L2/LLC — the *shape* of the curves is the
-# reproduction target, and records carry working_set_bytes + level so the
-# table is interpretable on either substrate.
-QUICK_SETS = [1 << 10, 1 << 12, 1 << 14, 1 << 17]
-FULL_SETS = [1 << 10, 1 << 11, 1 << 12, 1 << 13, 1 << 14, 1 << 16,
-             1 << 18, 1 << 20, 1 << 22]
-
-QUICK_GRID = [18, 34]
-FULL_GRID = [18, 34, 66, 130]
+from repro.suite import (  # noqa: F401
+    FULL_GRID,
+    FULL_SETS,
+    QUICK_GRID,
+    QUICK_SETS,
+    csv_line,
+    emit,
+)
 
 
 def sets(quick: bool):
@@ -24,15 +22,3 @@ def sets(quick: bool):
 
 def grids(quick: bool):
     return QUICK_GRID if quick else FULL_GRID
-
-
-def csv_line(name: str, rec: Record, derived: str | float = "") -> str:
-    if derived == "":
-        derived = f"{rec.gbs:.3f}GB/s"
-    return f"{name},{rec.seconds * 1e6:.2f},{derived}"
-
-
-def emit(lines: list[str]) -> list[str]:
-    for ln in lines:
-        print(ln, flush=True)
-    return lines

@@ -1,23 +1,10 @@
 """Paper Fig. 5 — cost of implicit barriers.
 
-OpenMP's implicit barrier per parallel-for becomes, on this substrate, a
-host sync + dispatch per sweep. The `nowait` analogue fuses all ntimes
-sweeps into one compiled fori_loop (no host round trip). Reported per
-working set: barrier vs fused bandwidth.
+Registry entry: the barrier/nowait contrast is declared in
+``repro.suite.catalog`` and executed by the shared suite runner.
 """
-from repro.core import Driver, DriverConfig, triad
-
-from .common import csv_line, emit, sets
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    for barrier in (True, False):
-        cfg = DriverConfig(template="unified", programs=4, ntimes=16,
-                           reps=2, sync_every_rep=barrier)
-        d = Driver(lambda env: triad(), cfg)
-        d.validate()
-        for rec in d.run(sets(quick)):
-            tag = "barrier" if barrier else "nowait"
-            out.append(csv_line(f"fig05/{tag}/n{rec.n}", rec))
-    return emit(out)
+    return run_module("fig05_barriers", quick)

@@ -1,28 +1,10 @@
 """Paper Fig. 6 — unified vs independent data spaces for triad.
 
-Unified: one array, programs take schedule(static, n/t) chunks that share
-native tiles at the seams. Independent: per-program tile-padded rows.
-The paper sees ~2x in L1 for independent; here the analogue is the
-tile-aligned layout avoiding shared-tile writebacks.
+Registry entry: the layout contrast is declared in
+``repro.suite.catalog`` and executed by the shared suite runner.
 """
-from repro.core import Driver, DriverConfig, triad
-from repro.core.measure import NATIVE_TILE_BYTES
-
-from .common import csv_line, emit, sets
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    tile_elems = NATIVE_TILE_BYTES // 4
-    variants = [
-        ("unified", DriverConfig(template="unified", programs=4,
-                                 ntimes=16, reps=2)),
-        ("independent", DriverConfig(template="independent", programs=4,
-                                     ntimes=16, reps=2, pad=tile_elems)),
-    ]
-    for name, cfg in variants:
-        d = Driver(lambda env: triad(), cfg)
-        d.validate()
-        for rec in d.run(sets(quick)):
-            out.append(csv_line(f"fig06/{name}/n{rec.n}", rec))
-    return emit(out)
+    return run_module("fig06_dataspaces", quick)

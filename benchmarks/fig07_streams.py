@@ -1,43 +1,11 @@
 """Paper Fig. 7 — bandwidth vs number of concurrent data streams.
 
-The paper sweeps 3..20 simultaneously-read arrays and finds the peak at
-11 streams (prefetch-engine occupancy). The TPU analogue is concurrent
-HBM->VMEM DMA streams = concurrent BlockSpec operands; we sweep the same
-k with the nstream pattern.
-
-All k-variants share one translation cache and are staged up front:
-lowering happens serially (pure Python), the per-k XLA compiles overlap
-on worker threads, and the measurement loop then runs entirely against
-pre-compiled executables (``Driver.run`` hits the compile cache).
+Registry entry: the k-stream sweep is declared in
+``repro.suite.catalog`` (one variant per k, each with its own nstream
+pattern) and executed by the shared suite runner.
 """
-from repro.core import Driver, DriverConfig, nstream
-from repro.core.staging import GLOBAL_CACHE, precompile
-
-from .common import csv_line, emit
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    ks = [1, 2, 3, 5, 7, 11, 15, 20] if quick else list(range(1, 21))
-    n = 1 << 14
-    # drivers default to GLOBAL_CACHE so the --smoke ledger sees fig07's
-    # translation activity; report this module's share as a delta
-    s0 = GLOBAL_CACHE.stats()
-    drivers = [
-        (k, Driver(lambda env, k=k: nstream(k),
-                   DriverConfig(template="independent", programs=4,
-                                ntimes=8, reps=2)))
-        for k in ks
-    ]
-    # stage every variant's executable before any timing starts
-    precompile([
-        (lambda d=d: d.prepare([n], parallel=False)) for _, d in drivers
-    ])
-    for k, d in drivers:
-        rec = d.run([n])[0]
-        out.append(csv_line(f"fig07/streams{k}/n{n}", rec))
-    s1 = GLOBAL_CACHE.stats()
-    print(f"# fig07 cache: {s1['compile_hits'] - s0['compile_hits']} compile "
-          f"hits / {s1['compile_misses'] - s0['compile_misses']} misses",
-          flush=True)
-    return emit(out)
+    return run_module("fig07_streams", quick)

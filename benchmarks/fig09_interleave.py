@@ -1,43 +1,11 @@
 """Paper Fig. 9 — the interleaved-triad optimization.
 
-Splitting each array into f blocks accessed simultaneously (Listing 7)
-doubles the concurrent stream count. Two reproductions: (a) the schedule
-transformation through the polyhedral engine (jax backend), and (b) the
-blocked Pallas kernel where interleaving is a (factor, n/factor) layout
-view — plus per-call timing of the dedicated kernels.
+Registry entry: the schedule-engine variants plus the dedicated Pallas
+kernel timings (a ``post`` hook) are declared in
+``repro.suite.catalog`` and executed by the shared suite runner.
 """
-import jax
-import jax.numpy as jnp
-
-from repro.core import Driver, DriverConfig, identity, triad
-from repro.core.measure import time_fn
-from repro.kernels import ops
-
-from .common import csv_line, emit, sets
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    for factor in (1, 2, 4):
-        sch = identity() if factor == 1 else identity().interleave("i", factor)
-        d = Driver(lambda env: triad(),
-                   DriverConfig(template="independent", programs=2,
-                                ntimes=16, reps=2, schedule=sch))
-        d.validate()
-        for rec in d.run(sets(quick)):
-            out.append(csv_line(f"fig09/engine/il{factor}/n{rec.n}", rec))
-    # dedicated pallas kernels
-    n = 1 << 16
-    key = jax.random.PRNGKey(0)
-    b = jax.random.normal(key, (n,), jnp.float32)
-    c = jax.random.normal(key, (n,), jnp.float32)
-    bytes_moved = 3 * n * 4
-    t = time_fn(lambda: ops.triad(b, c, block=4096), reps=3)
-    out.append(f"fig09/kernel/naive,{t.seconds*1e6:.2f},"
-               f"{bytes_moved/t.seconds/1e9:.3f}GB/s")
-    for f in (2, 4):
-        t = time_fn(lambda f=f: ops.triad_interleaved(b, c, factor=f,
-                                                      block=2048), reps=3)
-        out.append(f"fig09/kernel/il{f},{t.seconds*1e6:.2f},"
-                   f"{bytes_moved/t.seconds/1e9:.3f}GB/s")
-    return emit(out)
+    return run_module("fig09_interleave", quick)

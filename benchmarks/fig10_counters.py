@@ -1,35 +1,11 @@
 """Paper Fig. 10 — counter-based false-sharing diagnosis.
 
-PAPI L1 miss / exclusive-line-request counters become (a) the analytic
-native-tile traffic model (exact for affine patterns) and (b) XLA
-cost_analysis counters, reported for the three Jacobi-1D layouts:
-unified, independent (unpadded rows), independent tile-padded.
+Registry entry: the three Jacobi-1D layouts with measured counters are
+declared in ``repro.suite.catalog`` and executed by the shared suite
+runner (the counter columns come from a ``derived`` formatter).
 """
-from repro.core import Driver, DriverConfig, jacobi1d
-from repro.core.measure import NATIVE_TILE_BYTES
-
-from .common import emit
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    tile_elems = NATIVE_TILE_BYTES // 4
-    n = (1 << 14) + 2
-    variants = [
-        ("unified", DriverConfig(template="unified", programs=4, ntimes=4,
-                                 reps=1, measured=True)),
-        ("indep_unpadded", DriverConfig(template="independent", programs=4,
-                                        ntimes=4, reps=1, measured=True)),
-        ("indep_padded", DriverConfig(template="independent", programs=4,
-                                      ntimes=4, reps=1, pad=tile_elems,
-                                      measured=True)),
-    ]
-    for name, cfg in variants:
-        d = Driver(lambda env: jacobi1d(), cfg)
-        rec = d.run([n])[0]
-        shared = rec.extra.get("shared_write_tiles", -1)
-        fetches = rec.extra.get("fetches", -1)
-        out.append(
-            f"fig10/{name}/n{n},{rec.seconds*1e6:.2f},"
-            f"shared_tiles={shared};fetches={fetches};gbs={rec.gbs:.3f}")
-    return emit(out)
+    return run_module("fig10_counters", quick)

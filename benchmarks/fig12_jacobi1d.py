@@ -1,32 +1,10 @@
 """Paper Fig. 12 — Jacobi 1D under the three memory layouts.
 
-Unified (shared array, program-chunked), independent (per-program rows),
-independent + tile padding (the paper's `A[t_id*8][i]` fix). Reported
-across the working-set ladder.
+Registry entry: declared in ``repro.suite.catalog`` over the interior
+ladder (points run at n+2 so the interior divides the program count).
 """
-from repro.core import Driver, DriverConfig, jacobi1d
-from repro.core.measure import NATIVE_TILE_BYTES
-
-from .common import csv_line, emit, sets
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    tile_elems = NATIVE_TILE_BYTES // 4
-    variants = [
-        ("unified", DriverConfig(template="unified", programs=4,
-                                 ntimes=8, reps=2, validate_n=66)),
-        ("independent", DriverConfig(template="independent", programs=4,
-                                     ntimes=8, reps=2, validate_n=66)),
-        ("indep_padded", DriverConfig(template="independent", programs=4,
-                                      ntimes=8, reps=2, pad=tile_elems,
-                                      validate_n=66)),
-    ]
-    for name, cfg in variants:
-        d = Driver(lambda env: jacobi1d(), cfg)
-        d.validate()
-        # interior must divide by programs: use n = k*programs + 2
-        for n in sets(quick):
-            rec = d.run([n + 2])[0]
-            out.append(csv_line(f"fig12/{name}/n{n}", rec))
-    return emit(out)
+    return run_module("fig12_jacobi1d", quick)

@@ -1,21 +1,9 @@
-"""Paper Fig. 14 — Jacobi 2D (5-pt star), unified vs independent."""
-from repro.core import Driver, DriverConfig, jacobi2d
+"""Paper Fig. 14 — Jacobi 2D (5-pt star), unified vs independent.
 
-from .common import csv_line, emit, grids
+Registry entry: declared in ``repro.suite.catalog``.
+"""
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    variants = [
-        ("unified", DriverConfig(template="unified", programs=4,
-                                 ntimes=8, reps=2, validate_n=18)),
-        ("independent", DriverConfig(template="independent", programs=4,
-                                     ntimes=8, reps=2, validate_n=18)),
-    ]
-    for name, cfg in variants:
-        d = Driver(lambda env: jacobi2d(), cfg)
-        d.validate()
-        for n in grids(quick):
-            rec = d.run([n])[0]
-            out.append(csv_line(f"fig14/{name}/n{n}", rec))
-    return emit(out)
+    return run_module("fig14_jacobi2d", quick)

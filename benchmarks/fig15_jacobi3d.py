@@ -1,22 +1,9 @@
-"""Paper Fig. 15 — Jacobi 3D (7-pt), unified vs independent layouts."""
-from repro.core import Driver, DriverConfig, jacobi3d
+"""Paper Fig. 15 — Jacobi 3D (7-pt), unified vs independent layouts.
 
-from .common import csv_line, emit
+Registry entry: declared in ``repro.suite.catalog``.
+"""
+from repro.suite import run_module
 
 
 def run(quick: bool = True) -> list[str]:
-    out = []
-    grids3 = [10, 18] if quick else [10, 18, 34, 66]
-    variants = [
-        ("unified", DriverConfig(template="unified", programs=4,
-                                 ntimes=4, reps=2, validate_n=10)),
-        ("independent", DriverConfig(template="independent", programs=4,
-                                     ntimes=4, reps=2, validate_n=10)),
-    ]
-    for name, cfg in variants:
-        d = Driver(lambda env: jacobi3d(), cfg)
-        d.validate()
-        for n in grids3:
-            rec = d.run([n])[0]
-            out.append(csv_line(f"fig15/{name}/n{n}", rec))
-    return emit(out)
+    return run_module("fig15_jacobi3d", quick)

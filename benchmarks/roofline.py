@@ -22,6 +22,7 @@ import json
 import pathlib
 
 from repro.config import SHAPES, get_config
+from repro.suite import Workload, register, run_module
 
 from .model_math import step_flops
 
@@ -84,7 +85,7 @@ def load_all() -> list[dict]:
     return rows
 
 
-def run(quick: bool = True) -> list[str]:
+def _roofline(quick: bool = True) -> list[str]:
     rows = load_all()
     out = []
     csv_path = ROOT / "experiments" / "roofline.csv"
@@ -109,6 +110,18 @@ def run(quick: bool = True) -> list[str]:
         print(ln, flush=True)
     print(f"# wrote {csv_path} ({len(rows)} cells)", flush=True)
     return out
+
+
+register(Workload(
+    name="roofline",
+    figure="roofline",
+    title="roofline refresh from the dry-run artifacts",
+    runner=_roofline,
+))
+
+
+def run(quick: bool = True) -> list[str]:
+    return run_module("roofline", quick)
 
 
 def markdown_table() -> str:

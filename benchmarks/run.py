@@ -1,17 +1,20 @@
-"""Benchmark harness entrypoint — one module per paper table/figure.
+"""Benchmark harness entrypoint — a generic executor over the registry.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05,fig16]
-                                            [--smoke] [--out BENCH.json]
+                                            [--smoke] [--list]
+                                            [--out BENCH.json]
 
-Prints ``name,us_per_call,derived`` CSV (the paper's machine-parsable
-output contract). The roofline module additionally refreshes
-experiments/roofline.csv from the dry-run artifacts if present.
+Every experiment is a declarative ``repro.suite`` Workload (pattern x
+schedule variants x ladder x validation policy) registered by name; this
+module just iterates the registry and prints the paper's machine-parsable
+``name,us_per_call,derived`` CSV contract. ``--list`` prints the
+registered names, ``--only`` filters by name or figure prefix.
 
-``--smoke`` runs every module in quick mode (one tiny config ladder per
-figure) and writes a JSON perf ledger (default ``BENCH_PR1.json`` at the
-repo root) with per-module wall time and the process-wide translation-
-cache hit rate, so successive PRs can track the harness's own perf
-trajectory.
+``--smoke`` runs every workload in quick mode and writes a JSON perf
+ledger (default ``BENCH_PR2.json`` at the repo root) with per-workload
+wall time plus the process-wide translation-cache hit rate (in-process
+lower/compile counters and the jax disk compile cache), so successive
+PRs can track the harness's own perf trajectory.
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ import os
 import pathlib
 import sys
 import time
+
 
 def _enable_persistent_cache() -> None:
     """Disk-backed XLA compile cache (the cross-process leg of the
@@ -45,15 +49,9 @@ def _enable_persistent_cache() -> None:
         pass
 
 
-MODULES = [
-    "fig05_barriers",
-    "fig06_dataspaces",
-    "fig07_streams",
-    "fig09_interleave",
-    "fig10_counters",
-    "fig12_jacobi1d",
-    "fig14_jacobi2d",
-    "fig15_jacobi3d",
+# Modules that register *custom* (non-declarative) workloads on import;
+# the declarative entries live in repro.suite.catalog.
+CUSTOM_MODULES = [
     "fig16_tile_sweep",
     "roofline",
 ]
@@ -61,29 +59,71 @@ MODULES = [
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def load_registry() -> tuple[list[str], dict[str, str]]:
+    """Load all workloads; a custom module that fails to import becomes a
+    per-module failure entry instead of killing the whole harness."""
+    from repro import suite
+
+    suite.load_builtins()
+    import_errors: dict[str, str] = {}
+    for name in CUSTOM_MODULES:
+        try:
+            importlib.import_module(f"benchmarks.{name}")
+        except Exception as e:  # noqa: BLE001
+            import_errors[name] = f"{type(e).__name__}: {e}"
+    return list(suite.names()), import_errors
+
+
+def registered_names() -> list[str]:
+    """All workload names, declarative builtins + custom modules."""
+    return load_registry()[0]
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated workload names or figure prefixes")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered workload names and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="quick mode + write a JSON perf ledger")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR1.json"),
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR2.json"),
                     help="ledger path for --smoke")
     args = ap.parse_args(argv)
 
     _enable_persistent_cache()
+    from repro import suite
+
+    names, import_errors = load_registry()
+    if args.list:
+        for name in names:
+            print(name)
+        return
+
     only = set(args.only.split(",")) if args.only else None
+
+    def selected(name: str, figure: str = "") -> bool:
+        return (only is None or name in only or figure in only
+                or name.split("_")[0] in only)
+
     print("name,us_per_call,derived")
     failures = []
     module_seconds: dict[str, float] = {}
+    for name, err in import_errors.items():
+        if not selected(name):
+            continue
+        failures.append(name)
+        module_seconds[name] = 0.0
+        print(f"# {name} FAILED at import: {err}", flush=True)
     t_suite = time.time()
-    for name in MODULES:
-        if only and name not in only and name.split("_")[0] not in only:
+    for name in names:
+        w = suite.workload(name)
+        if not selected(name, w.figure):
             continue
         t0 = time.time()
         try:
-            mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(quick=not args.full)
+            suite.run_workload(w, quick=not args.full)
             module_seconds[name] = round(time.time() - t0, 3)
             print(f"# {name} done in {module_seconds[name]:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
@@ -107,7 +147,7 @@ def main(argv: list[str] | None = None) -> None:
         print(f"# wrote {out}", flush=True)
 
     if failures:
-        sys.exit(f"benchmark modules failed: {failures}")
+        sys.exit(f"benchmark workloads failed: {failures}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
-"""CI smoke entrypoint: one tiny config per figure module + perf ledger.
+"""CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR1.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR2.json]
 
 Thin alias for ``benchmarks.run --smoke``: runs the quick-mode ladder of
-every figure module and writes per-module wall time plus the
-translation-cache hit rate to the JSON ledger, so future PRs can assert
-the harness's perf trajectory instead of guessing.
+every registry workload and writes per-workload wall time plus the
+translation-cache hit rate (in-process and jax disk cache) to the JSON
+ledger, so future PRs can assert the harness's perf trajectory instead
+of guessing.
 """
 from __future__ import annotations
 

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the registry smoke suite + harness-perf floor.
+#
+#   scripts/ci.sh [LEDGER_PATH]
+#
+# Fails on: any pytest failure, any benchmark workload failure, or a
+# process-wide translation-cache hit rate below 0.5 on the smoke suite
+# (the parametric-ladder + staged-pipeline floor this repo maintains).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+LEDGER="${1:-BENCH_PR2.json}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== benchmarks.run --smoke =="
+python -m benchmarks.run --smoke --out "$LEDGER"
+
+echo "== ledger gates ($LEDGER) =="
+python - "$LEDGER" <<'EOF'
+import json, sys
+
+ledger = json.load(open(sys.argv[1]))
+failures = ledger["failures"]
+if failures:
+    sys.exit(f"FAIL: benchmark workloads failed: {failures}")
+tc = ledger["translation_cache"]
+rate = tc["hit_rate"]
+print(f"translation-cache hit rate: {rate:.3f} "
+      f"(lower {tc['lower_hits']}/{tc['lower_hits']+tc['lower_misses']}, "
+      f"compile {tc['compile_hits']}/{tc['compile_hits']+tc['compile_misses']}, "
+      f"disk {tc['disk']})")
+if rate < 0.5:
+    sys.exit(f"FAIL: translation-cache hit rate {rate:.3f} < 0.5")
+print("OK")
+EOF

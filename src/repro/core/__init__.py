@@ -11,29 +11,43 @@ Layers (each maps to a component of the paper's Figure 1):
     autotune            schedule-variant sweeps (optimization testbed)
 """
 from .domain import Affine, Dim, IterDomain, domain
-from .schedule import Schedule, identity
+from .schedule import ParamNest, Schedule, SymbolicLowerError, identity
 from .pattern import (
     Access,
     DataSpace,
     PatternSpec,
     Statement,
+    gather,
+    gather_scatter,
     jacobi1d,
     jacobi2d,
     jacobi3d,
     nstream,
+    scatter,
     stream_copy,
     stream_scale,
     stream_sum,
     triad,
 )
-from .codegen import NestPlan, lower_jax, lower_pallas, plan_nest, serial_oracle
+from .codegen import (
+    NestPlan,
+    lower_jax,
+    lower_jax_parametric,
+    lower_pallas,
+    plan_nest,
+    serial_oracle,
+)
 from .staging import (
     GLOBAL_CACHE,
     Compiled,
     Lowered,
+    ParamCompiled,
+    ParamLowered,
     TranslationCache,
+    disk_cache_stats,
     precompile,
     stage_lower,
+    stage_lower_parametric,
 )
 from .drivers import (
     Driver,
@@ -47,13 +61,17 @@ from .autotune import SweepResult, Variant, sweep
 
 __all__ = [
     "Affine", "Dim", "IterDomain", "domain",
-    "Schedule", "identity",
+    "Schedule", "ParamNest", "SymbolicLowerError", "identity",
     "Access", "DataSpace", "PatternSpec", "Statement",
     "triad", "stream_copy", "stream_scale", "stream_sum", "nstream",
     "jacobi1d", "jacobi2d", "jacobi3d",
-    "lower_jax", "lower_pallas", "serial_oracle", "plan_nest", "NestPlan",
-    "Lowered", "Compiled", "TranslationCache", "GLOBAL_CACHE",
-    "stage_lower", "precompile",
+    "gather", "scatter", "gather_scatter",
+    "lower_jax", "lower_jax_parametric", "lower_pallas", "serial_oracle",
+    "plan_nest", "NestPlan",
+    "Lowered", "Compiled", "ParamLowered", "ParamCompiled",
+    "TranslationCache", "GLOBAL_CACHE",
+    "stage_lower", "stage_lower_parametric", "precompile",
+    "disk_cache_stats",
     "Driver", "DriverConfig", "Prepared",
     "independent_view", "unified_program_schedule",
     "Record", "classify_level", "hlo_counters", "tile_traffic", "time_fn",

@@ -59,13 +59,21 @@ from jax.experimental import pallas as pl
 
 from .domain import Affine
 from .pattern import Access, PatternSpec
-from .schedule import LoweredInstance, LoweredNest, Schedule
+from .schedule import (
+    LoweredInstance,
+    LoweredNest,
+    ParamInstance,
+    ParamNest,
+    Schedule,
+)
 
 __all__ = [
     "serial_oracle",
     "lower_jax",
+    "lower_jax_parametric",
     "lower_pallas",
     "resolve_access",
+    "resolve_access_symbolic",
     "plan_nest",
     "NestPlan",
 ]
@@ -73,6 +81,11 @@ __all__ = [
 # Indices are now built in-program from broadcasted_iota (no host-side
 # constants), so the cap only bounds runtime index-array memory.
 _GATHER_POINT_CAP = 1 << 26
+
+# Lane-block size of the parametric (shape-polymorphic) path: points are
+# executed in fixed-shape chunks under a dynamic trip count, so the work
+# a call performs scales with the runtime working set, not the capacity.
+_PARAM_CHUNK = 8192
 
 
 # ---------------------------------------------------------------------------
@@ -425,6 +438,182 @@ def lower_jax(
                 jnp.asarray(res).astype(tgt.dtype), mode="drop"
             )
         return arrays
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Parametric (shape-polymorphic) JAX backend
+# ---------------------------------------------------------------------------
+
+
+def resolve_access_symbolic(
+    acc: Access, pnest: ParamNest, inst: ParamInstance,
+    iter_names: tuple[str, ...],
+) -> list[tuple[tuple[Affine, ...], Affine]]:
+    """Symbolic twin of :func:`resolve_access`: compose an access with a
+    :class:`ParamInstance` without resolving parameters, so per array dim
+    ``array_index = row . bands + const`` with Affine-in-params entries."""
+    out = []
+    pos = {n: i for i, n in enumerate(iter_names)}
+    for ix in acc.resolved():
+        row = [Affine.of(0)] * pnest.n_bands
+        const = Affine.of(ix.const)
+        for sym, c in ix.coeffs:
+            if sym in pos:
+                d = pos[sym]
+                const = const + inst.c[d] * c
+                for b in range(pnest.n_bands):
+                    row[b] = row[b] + inst.A[d][b] * c
+            elif sym in pnest.params:
+                const = const + Affine(coeffs=((sym, c),))
+            else:
+                raise KeyError(
+                    f"access symbol {sym!r} is not an iterator or param"
+                )
+        out.append((tuple(row), const))
+    return out
+
+
+def _affine_traced(aff: Affine, scope: Mapping[str, jnp.ndarray]):
+    """Evaluate an Affine whose symbols map to traced int32 scalars.
+
+    Rational coefficients are handled exactly: the whole expression is
+    scaled by the lcm of the denominators, evaluated in integers, and
+    divided back out — by construction (divisibility constraints) the
+    result is integral, so the floor division is exact.
+    """
+    L = aff.denominator
+    acc = jnp.int32(int(aff.const * L))
+    for sym, c in aff.coeffs:
+        acc = acc + jnp.int32(int(c * L)) * scope[sym]
+    return acc // L if L != 1 else acc
+
+
+def lower_jax_parametric(
+    pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
+    *, params: tuple[str, ...] = ("n",), chunk: int = _PARAM_CHUNK,
+    pnest: ParamNest | None = None,
+) -> Callable:
+    """Build ``step(arrays, pvals) -> arrays`` with the working-set
+    parameter(s) as *traced operands* instead of baked constants.
+
+    One executable serves every working set up to the capacity
+    ``cap_env`` (arrays are allocated at capacity shapes): band extents,
+    instance maps, and domain bounds are computed inside the trace from
+    the ``pvals`` scalars, and points are executed in fixed-shape lane
+    chunks under a dynamic trip count (``fori_loop`` over
+    ``ceil(points/chunk)``), so the work a call performs scales with the
+    *runtime* working set — a ladder shares one compiled program without
+    every rung paying capacity-sized sweeps.
+
+    Reads and the write are gather/scatter over the chunk lanes; lanes
+    past the dynamic point count (or outside the domain, for guarded
+    nests) are masked onto index -1 and dropped, mirroring the
+    specialized gather path. Preconditions checked by the caller via
+    ``ParamNest.admits``: every requested env must satisfy the nest's
+    divisibility constraints.
+    """
+    if pnest is None:
+        pnest = schedule.lower_symbolic(pattern.domain, params)
+    stmt = pattern.statement
+    iter_names = pattern.domain.names
+    plans = tuple(
+        (
+            tuple(
+                resolve_access_symbolic(a, pnest, inst, iter_names)
+                for a in stmt.reads
+            ),
+            resolve_access_symbolic(stmt.write, pnest, inst, iter_names),
+        )
+        for inst in pnest.instances
+    )
+    n_bands = pnest.n_bands
+    rank = pnest.rank
+    cap_extents = tuple(max(0, e.eval(cap_env)) for e in pnest.band_extents)
+    cap_pts = int(np.prod(cap_extents)) if cap_extents else 1
+    if cap_pts > _GATHER_POINT_CAP:
+        raise ValueError(
+            f"parametric path would stage {cap_pts} capacity points; "
+            "use lower_pallas"
+        )
+    C = int(min(chunk, max(1, cap_pts)))
+    rest_env = {k: int(v) for k, v in cap_env.items() if k not in params}
+
+    def step(arrays: dict[str, jnp.ndarray], pvals) -> dict[str, jnp.ndarray]:
+        arrays = dict(arrays)
+        scope = {p: jnp.asarray(v, jnp.int32) for p, v in zip(params, pvals)}
+        cenv = {**rest_env, **scope}
+
+        ext = [jnp.maximum(_affine_traced(e, scope), 0)
+               for e in pnest.band_extents]
+        strides = [None] * n_bands
+        s = jnp.int32(1)
+        for b in reversed(range(n_bands)):
+            strides[b] = s
+            s = s * ext[b]
+        npts = s if n_bands else jnp.int32(1)
+        nchunks = (npts + (C - 1)) // C
+        lane0 = jax.lax.broadcasted_iota(jnp.int32, (C,), 0)
+        lo = [_affine_traced(l, scope) for l in pnest.domain_lo]
+        hi = [_affine_traced(h, scope) for h in pnest.domain_hi]
+        # loop-invariant scalar coefficients, computed once outside the body
+        tr_plans = [
+            (
+                [
+                    [
+                        ([_affine_traced(cf, scope) for cf in row],
+                         _affine_traced(const, scope))
+                        for row, const in rows
+                    ]
+                    for rows in racc
+                ],
+                [
+                    ([_affine_traced(cf, scope) for cf in row],
+                     _affine_traced(const, scope))
+                    for row, const in wacc
+                ],
+                [
+                    ([_affine_traced(cf, scope) for cf in inst.A[d]],
+                     _affine_traced(inst.c[d], scope))
+                    for d in range(rank)
+                ],
+            )
+            for (racc, wacc), inst in zip(plans, pnest.instances)
+        ]
+
+        def body(ci, arrs):
+            arrs = dict(arrs)
+            lanes = ci * C + lane0
+            valid0 = lanes < npts
+            cols = [(lanes // strides[b]) % ext[b] for b in range(n_bands)]
+
+            def lin(coeffs, const):
+                acc = jnp.full((C,), 1, jnp.int32) * const
+                for b, cf in enumerate(coeffs):
+                    acc = acc + cf * cols[b]
+                return acc
+
+            for racc, wacc, imap in tr_plans:
+                valid = valid0
+                for d in range(rank):
+                    it = lin(*imap[d])
+                    valid = valid & (it >= lo[d]) & (it < hi[d])
+                vals = [
+                    arrs[acc.space][tuple(lin(*rc) for rc in rows)]
+                    for acc, rows in zip(stmt.reads, racc)
+                ]
+                res = stmt.combine(vals, cenv)
+                tgt = arrs[stmt.write.space]
+                widx = tuple(
+                    jnp.where(valid, lin(*rc), -1) for rc in wacc
+                )
+                arrs[stmt.write.space] = tgt.at[widx].set(
+                    jnp.asarray(res).astype(tgt.dtype), mode="drop"
+                )
+            return arrs
+
+        return jax.lax.fori_loop(0, nchunks, body, arrays)
 
     return step
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from fractions import Fraction
 from typing import Iterable, Mapping, Sequence
 
 import numpy as np
@@ -31,16 +32,30 @@ __all__ = [
 ]
 
 
+def _norm(v: "int | Fraction") -> "int | Fraction":
+    """Collapse integral Fractions back to int (canonical, hash-stable)."""
+    if isinstance(v, Fraction) and v.denominator == 1:
+        return int(v)
+    return v
+
+
 @dataclasses.dataclass(frozen=True)
 class Affine:
     """An affine expression ``const + sum(coeffs[s] * s)`` over symbols.
 
     Symbols are strings naming either parameters ("n") or outer iterators
     ("i"). Immutable and hashable so schedules can be compared/cached.
+
+    Coefficients and the constant are usually ints; the symbolic
+    (parametric) lowering path additionally produces exact rationals
+    (``Fraction``), e.g. the per-program chunk extent ``n/4`` of the
+    unified template. Rational values are only legal when a recorded
+    divisibility constraint guarantees they evaluate to integers;
+    ``eval`` enforces integrality.
     """
 
-    const: int = 0
-    coeffs: tuple[tuple[str, int], ...] = ()
+    const: "int | Fraction" = 0
+    coeffs: tuple[tuple[str, "int | Fraction"], ...] = ()
 
     @staticmethod
     def of(value: "Affine | int | str") -> "Affine":
@@ -60,37 +75,62 @@ class Affine:
         terms = self._terms()
         for sym, c in other.coeffs:
             terms[sym] = terms.get(sym, 0) + c
-        terms = {s: c for s, c in terms.items() if c != 0}
-        return Affine(self.const + other.const, tuple(sorted(terms.items())))
+        terms = {s: _norm(c) for s, c in terms.items() if c != 0}
+        return Affine(_norm(self.const + other.const),
+                      tuple(sorted(terms.items())))
 
     __radd__ = __add__
 
     def __sub__(self, other: "Affine | int | str") -> "Affine":
         return self + (Affine.of(other) * -1)
 
-    def __mul__(self, k: int) -> "Affine":
-        return Affine(self.const * k, tuple((s, c * k) for s, c in self.coeffs))
+    def __mul__(self, k: "int | Fraction") -> "Affine":
+        return Affine(_norm(self.const * k),
+                      tuple((s, _norm(c * k)) for s, c in self.coeffs))
 
     __rmul__ = __mul__
+
+    def __truediv__(self, k: int) -> "Affine":
+        """Exact division (rational coefficients). ``eval`` later checks
+        the result is integral for the given environment."""
+        return self * Fraction(1, k)
+
+    @property
+    def is_const(self) -> bool:
+        return not self.coeffs
+
+    @property
+    def denominator(self) -> int:
+        """lcm of all coefficient denominators (1 for purely-int exprs)."""
+        d = 1
+        for v in (self.const, *(c for _, c in self.coeffs)):
+            if isinstance(v, Fraction):
+                d = d * v.denominator // np.gcd(d, v.denominator)
+        return int(d)
 
     def subs(self, env: Mapping[str, int]) -> "Affine | int":
         """Substitute symbols; returns an int if fully resolved."""
         const = self.const
-        remaining: dict[str, int] = {}
+        remaining: dict[str, int | Fraction] = {}
         for sym, c in self.coeffs:
             if sym in env:
                 const += c * int(env[sym])
             else:
                 remaining[sym] = remaining.get(sym, 0) + c
         if not remaining:
-            return const
-        return Affine(const, tuple(sorted(remaining.items())))
+            return _norm(const)
+        return Affine(_norm(const), tuple(sorted(remaining.items())))
 
     def eval(self, env: Mapping[str, int]) -> int:
         out = self.subs(env)
         if isinstance(out, Affine):
             missing = [s for s, _ in out.coeffs]
             raise KeyError(f"unbound symbols {missing} in {self!r}")
+        if isinstance(out, Fraction):
+            raise ValueError(
+                f"{self!r} is not integral under {dict(env)!r} "
+                f"(got {out}); a divisibility constraint was violated"
+            )
         return out
 
     @property

@@ -43,14 +43,18 @@ from .measure import (
     time_fn,
 )
 from .pattern import Access, DataSpace, PatternSpec, Statement
-from .schedule import Schedule, identity
+from .schedule import Schedule, SymbolicLowerError, identity
 from .staging import (
     GLOBAL_CACHE,
     Compiled,
     Lowered,
+    ParamCompiled,
+    ParamLowered,
     TranslationCache,
+    fingerprint_pattern,
     precompile,
     stage_lower,
+    stage_lower_parametric,
 )
 
 __all__ = [
@@ -129,7 +133,11 @@ def unified_program_schedule(
         raise ValueError(
             f"unified template needs programs | extent ({programs} vs {extent})"
         )
-    return sch.tile(d0.name, extent // programs, outer="prog", inner=d0.name)
+    # tile_by_count keeps the split affine in a symbolic extent (chunk
+    # length n/programs becomes a rational coefficient), so the unified
+    # template stays shape-polymorphic; concrete lowering is identical to
+    # the old tile(extent // programs) form.
+    return sch.tile_by_count(d0.name, programs, outer="prog", inner=d0.name)
 
 
 # ---------------------------------------------------------------------------
@@ -150,15 +158,38 @@ class DriverConfig:
     measured: bool = False          # attach counter surrogates (template 3)
     grid_bands: tuple[str, ...] | None = None  # pallas grid override
     validate_n: int | None = 64     # oracle-check size (None = skip)
+    # Shape-polymorphic ladders: None = unset (specialize; the suite
+    # runner may apply its workload-level policy); False = always
+    # specialize per working set (one executable per n, never
+    # overridden); "auto" = share one executable across the whole ladder
+    # when the schedule lowers symbolically and every point satisfies
+    # its divisibility constraints, else fall back; True = require the
+    # parametric path (raise if unsupported).
+    parametric: bool | str | None = None
 
 
 @dataclasses.dataclass
 class Prepared:
-    """One staged measurement point: env + both pipeline stages."""
+    """One staged measurement point: env + both pipeline stages.
+
+    On the parametric path ``lowered``/``compiled`` are the ladder-shared
+    :class:`ParamLowered`/:class:`ParamCompiled` (allocation happens at
+    their capacity env) and ``env`` names this point's working set.
+    """
 
     env: dict
-    lowered: Lowered
-    compiled: Compiled
+    lowered: Lowered | ParamLowered
+    compiled: Compiled | ParamCompiled
+
+    @property
+    def parametric(self) -> bool:
+        return isinstance(self.lowered, ParamLowered)
+
+    def executable(self) -> Callable:
+        """A ``fn(tup) -> tup`` for this point (binds params if needed)."""
+        if self.parametric:
+            return self.compiled.bind(self.env)
+        return self.compiled
 
 
 class Driver:
@@ -183,14 +214,10 @@ class Driver:
 
     # -- construction -------------------------------------------------------
 
-    def lower(self, env: Mapping[str, int]) -> Lowered:
-        """Stage 1: apply the driver template and resolve access plans.
-
-        Note the ``independent`` template treats the caller's ``n`` as
-        the *per-program* row extent (mirroring the paper's
-        ``int N = n/t`` macro): callers pass per-program ``n`` and every
-        space grows a leading ``programs`` axis of such rows.
-        """
+    def _templated(
+        self, env: Mapping[str, int]
+    ) -> tuple[PatternSpec, Schedule, tuple[str, ...]]:
+        """Apply the driver template: (pattern, schedule, grid_bands)."""
         cfg = self.cfg
         base = self.factory(env)
         sch = cfg.schedule or identity()
@@ -203,11 +230,74 @@ class Driver:
             grid_bands = ("prog",) + tuple(cfg.grid_bands or ())
         else:
             raise ValueError(cfg.template)
+        return pat, sch, grid_bands
+
+    def lower(self, env: Mapping[str, int]) -> Lowered:
+        """Stage 1: apply the driver template and resolve access plans.
+
+        Note the ``independent`` template treats the caller's ``n`` as
+        the *per-program* row extent (mirroring the paper's
+        ``int N = n/t`` macro): callers pass per-program ``n`` and every
+        space grows a leading ``programs`` axis of such rows.
+        """
+        cfg = self.cfg
+        env = dict(env)
+        pat, sch, grid_bands = self._templated(env)
         return stage_lower(
             pat, sch, env, cfg.backend,
             grid_bands=grid_bands if cfg.backend == "pallas" else None,
             cache=self.cache,
         )
+
+    def lower_parametric(self, cap_env: Mapping[str, int],
+                         params: tuple[str, ...] = ("n",)) -> ParamLowered:
+        """Stage 1, shape-polymorphic: one artifact for a whole ladder,
+        capacity-allocated at ``cap_env``."""
+        pat, sch, _ = self._templated(cap_env)
+        return stage_lower_parametric(
+            pat, sch, cap_env, params, self.cfg.backend, cache=self.cache
+        )
+
+    def _parametric_viable(self, envs: Sequence[Mapping[str, int]],
+                           cap_env: Mapping[str, int]) -> bool:
+        """Pre-flight (outside the cache, so failed probes never count as
+        misses): the schedule must lower symbolically, every ladder point
+        must satisfy the divisibility constraints, and the pattern
+        factory must be structurally env-independent (one executable can
+        only serve the ladder if every point shares its structure)."""
+        cfg = self.cfg
+        if cfg.backend != "jax":
+            return False
+        try:
+            pat, sch, _ = self._templated(cap_env)
+            pnest = sch.lower_symbolic(pat.domain, ("n",))
+        except SymbolicLowerError:
+            return False
+        if not all(pnest.admits(e) for e in envs):
+            return False
+        from .codegen import _GATHER_POINT_CAP
+
+        cap_pts = 1
+        for e in pnest.band_extents:
+            cap_pts *= max(0, e.eval(cap_env))
+        if cap_pts > _GATHER_POINT_CAP:
+            return False  # capacity too large to stage; specialize instead
+        try:
+            # every point's arrays must fit the capacity allocation
+            cap_shapes = {s.name: s.concrete_shape(cap_env)
+                          for s in pat.spaces}
+            for e in envs:
+                for s in pat.spaces:
+                    if any(g > c for g, c in zip(s.concrete_shape(e),
+                                                 cap_shapes[s.name])):
+                        return False
+            cap_fp = fingerprint_pattern(pat)
+            for e in envs:
+                if fingerprint_pattern(self._templated(e)[0]) != cap_fp:
+                    return False
+        except Exception:
+            return False
+        return True
 
     def build(self, env: Mapping[str, int]):
         """Stage 1+2 plus initial arrays.
@@ -231,13 +321,43 @@ class Driver:
     def prepare(self, working_sets: Sequence[int],
                 env_extra: Mapping[str, int] | None = None,
                 parallel: bool = True) -> list[Prepared]:
-        """Stage all working-set points: lower serially (cheap, GIL-bound),
-        then AOT-compile the points concurrently (XLA releases the GIL)."""
+        """Stage all working-set points.
+
+        Parametric path (``cfg.parametric``): the whole ladder maps onto
+        ONE ``ParamLowered``/``ParamCompiled`` pair keyed at the ladder's
+        capacity (max n) — the first point pays the single lower+compile,
+        the rest are cache hits, and ``run`` passes each point's ``n`` at
+        call time. Specialized path: lower serially (cheap, GIL-bound),
+        then AOT-compile the points concurrently (XLA releases the GIL).
+        """
         cfg = self.cfg
-        lowereds = []
-        for n in working_sets:
-            env = {"n": int(n), **(env_extra or {})}
-            lowereds.append((env, self.lower(env)))
+        envs = [{"n": int(n), **(env_extra or {})} for n in working_sets]
+        # "auto" only shares when there is a ladder to share across: a
+        # single-point run gains nothing from the parametric regime and
+        # would pay its chunked-gather overhead for free, so it keeps the
+        # specialized fast path. parametric=True still forces sharing.
+        want_parametric = cfg.parametric and not (
+            cfg.parametric == "auto" and len({e["n"] for e in envs}) < 2
+        )
+        if want_parametric:
+            cap_env = max(envs, key=lambda e: e["n"])
+            if self._parametric_viable(envs, cap_env):
+                preps = []
+                for env in envs:
+                    lw = self.lower_parametric(cap_env)
+                    c = lw.compile(
+                        ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
+                        cache=self.cache,
+                    )
+                    preps.append(Prepared(env=env, lowered=lw, compiled=c))
+                return preps
+            if cfg.parametric is True:
+                raise SymbolicLowerError(
+                    f"parametric=True but the ladder {list(working_sets)} "
+                    f"cannot share one executable under {cfg.template}/"
+                    f"{(cfg.schedule or identity()).name}"
+                )
+        lowereds = [(env, self.lower(env)) for env in envs]
         thunks = [
             (lambda lw=lw: lw.compile(
                 ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
@@ -289,19 +409,23 @@ class Driver:
         records = []
         for p in self.prepare(working_sets, env_extra):
             pat, env = p.lowered.pattern, p.env
+            # Parametric points allocate at the shared capacity env (the
+            # executable's static shapes); the kernel only touches the
+            # [0, n) region, and all *accounting* below uses the actual
+            # per-point env so records match the specialized path.
             arrays0 = {
                 k: jnp.asarray(v) for k, v in pat.allocate(p.lowered.env).items()
             }
             tup = tuple(arrays0[k] for k in p.compiled.names)
             timing = time_fn(
-                p.compiled, tup, reps=cfg.reps, warmup=1,
+                p.executable(), tup, reps=cfg.reps, warmup=1,
                 compile_seconds=p.compiled.compile_seconds,
             )
-            pts = pat.domain.point_count(p.lowered.env)
+            pts = pat.domain.point_count(env)
             bpp = pat.bytes_per_point()
             total_bytes = bpp * pts * cfg.ntimes
             ws_bytes = sum(
-                int(np.prod(s.concrete_shape(p.lowered.env)))
+                int(np.prod(s.concrete_shape(env)))
                 * np.dtype(s.dtype).itemsize
                 for s in pat.spaces
             )
@@ -324,13 +448,76 @@ class Driver:
                     "compile_seconds": p.compiled.compile_seconds,
                     "lower_seconds": p.lowered.lower_seconds,
                     "cache_hit": p.compiled.from_cache,
+                    "parametric": p.parametric,
+                    **({"capacity": int(p.lowered.cap_env["n"])}
+                       if p.parametric else {}),
                 },
             )
             if cfg.measured:
                 rec.extra.update(hlo_counters(p.compiled))
-                rec.extra.update(self._traffic(pat, p.lowered.env).as_dict())
+                rec.extra.update(self._traffic(pat, env).as_dict())
             records.append(rec)
         return records
+
+    def validate_parametric(self, working_sets: Sequence[int],
+                            env_extra: Mapping[str, int] | None = None,
+                            max_check_n: int | None = None) -> None:
+        """Check the ladder-shared executable point-by-point against the
+        specialized serial oracle: for a working set, the [0, n)
+        region of the parametric result must match the oracle run at
+        exactly that n (the paper's ``<kernel>_val.in`` stage, replayed
+        for the shape-polymorphic path).
+
+        The executable is built at the ladder's true capacity, but
+        ``max_check_n`` bounds which points are oracle-replayed (the
+        serial oracle's point-loop fallback is O(points) Python); the
+        smallest point is always checked. Memoized per (ladder key,
+        checked points) like :meth:`validate`.
+        """
+        cfg = self.cfg
+        envs = [{"n": int(n), **(env_extra or {})} for n in working_sets]
+        cap_env = max(envs, key=lambda e: e["n"])
+        if not self._parametric_viable(envs, cap_env):
+            raise SymbolicLowerError(
+                f"ladder {list(working_sets)} is not parametric under "
+                f"{cfg.template}"
+            )
+        if max_check_n is not None:
+            lo = min(envs, key=lambda e: e["n"])
+            envs = [e for e in envs if e["n"] <= max_check_n] or [lo]
+        lw = self.lower_parametric(cap_env)
+        vkey = None
+        if lw.key is not None:
+            vkey = ("pvalidate", lw.key,
+                    tuple(sorted(e["n"] for e in envs)))
+            if self.cache.was_validated(vkey):
+                return
+        pat = lw.pattern
+        cap_arrays = pat.allocate(cap_env)
+        for env in envs:
+            pvals = tuple(np.int32(env[p]) for p in lw.params)
+            got = {k: jnp.asarray(v) for k, v in cap_arrays.items()}
+            for _ in range(2):
+                got = lw.step(got, pvals)
+            spec = self.lower(env)
+            want = serial_oracle(
+                spec.pattern, spec.nest, spec.pattern.allocate(env), env,
+                ntimes=2,
+            )
+            for k in want:
+                region = tuple(
+                    slice(0, d) for d in pat.space(k).concrete_shape(env)
+                )
+                np.testing.assert_allclose(
+                    np.asarray(got[k])[region], want[k],
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=(
+                        f"space {k} diverged on the parametric path at "
+                        f"n={env['n']} (capacity {cap_env['n']})"
+                    ),
+                )
+        if vkey is not None:
+            self.cache.mark_validated(vkey)
 
     def _traffic(self, pat: PatternSpec, env: Mapping[str, int]):
         """Analytic tile traffic for the current template split (1D)."""

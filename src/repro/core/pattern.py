@@ -39,6 +39,9 @@ __all__ = [
     "jacobi1d",
     "jacobi2d",
     "jacobi3d",
+    "gather",
+    "scatter",
+    "gather_scatter",
 ]
 
 
@@ -211,6 +214,86 @@ def nstream(k: int, scalar: float = 3.0) -> PatternSpec:
     )
     return PatternSpec(
         f"nstream{k}", spaces, stmt, domain(("i", 0, "n")), flops_per_point=k
+    )
+
+
+# -- Spatter-style gather/scatter (Lavin et al.) ----------------------------
+#
+# Spatter expresses memory benchmarks as pattern vectors driven through a
+# fixed gather/scatter kernel; its UNIFORM:stride mode is affine, so the
+# same specs drive this engine's schedule/template machinery. ``stride``
+# plays Spatter's pattern-stride role: the sparse side touches one element
+# per ``stride`` while the dense side streams contiguously.
+
+
+def gather(stride: int = 8) -> PatternSpec:
+    """Spatter gather: dense[i] = sparse[stride*i] (UNIFORM:stride)."""
+    if stride < 1:
+        raise ValueError("stride must be >= 1")
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("S", (i * stride,)),),
+        write=Access("D", (i,)),
+        combine=lambda vals, env: vals[0],
+    )
+    return PatternSpec(
+        f"gather{stride}",
+        (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("S", (Affine.of("n") * stride,), "float32",
+                      lambda i: (i % 23).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+        flops_per_point=0,
+    )
+
+
+def scatter(stride: int = 8) -> PatternSpec:
+    """Spatter scatter: sparse[stride*i] = dense[i] (UNIFORM:stride)."""
+    if stride < 1:
+        raise ValueError("stride must be >= 1")
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("D", (i,)),),
+        write=Access("S", (i * stride,)),
+        combine=lambda vals, env: vals[0],
+    )
+    return PatternSpec(
+        f"scatter{stride}",
+        (
+            DataSpace("D", ("n",), "float32",
+                      lambda i: (i % 19).astype(np.float32)),
+            DataSpace("S", (Affine.of("n") * stride,), "float32", 0.0),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+        flops_per_point=0,
+    )
+
+
+def gather_scatter(stride: int = 8) -> PatternSpec:
+    """Spatter GS: sparse_out[stride*i] = sparse_in[stride*i] — both sides
+    strided, the round-trip pattern Spatter uses to expose TLB/prefetch
+    limits that one-sided gather or scatter alone hides."""
+    if stride < 1:
+        raise ValueError("stride must be >= 1")
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("S", (i * stride,)),),
+        write=Access("T", (i * stride,)),
+        combine=lambda vals, env: vals[0],
+    )
+    return PatternSpec(
+        f"gather_scatter{stride}",
+        (
+            DataSpace("S", (Affine.of("n") * stride,), "float32",
+                      lambda i: (i % 29).astype(np.float32)),
+            DataSpace("T", (Affine.of("n") * stride,), "float32", 0.0),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+        flops_per_point=0,
     )
 
 

@@ -41,8 +41,17 @@ __all__ = [
     "Schedule",
     "LoweredNest",
     "LoweredInstance",
+    "ParamNest",
+    "ParamInstance",
+    "SymbolicLowerError",
     "identity",
 ]
+
+
+class SymbolicLowerError(Exception):
+    """A transform genuinely needs concrete extents (e.g. the product of
+    two parameter-dependent quantities); callers fall back to per-size
+    specialization."""
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +144,87 @@ class LoweredNest:
 
 
 # ---------------------------------------------------------------------------
+# Parametric (shape-polymorphic) form
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInstance:
+    """Affine instance map whose entries stay symbolic in the params:
+    ``iter[d] = sum_b A[d][b] * band[b] + c[d]`` with Affine entries."""
+
+    A: tuple[tuple[Affine, ...], ...]
+    c: tuple[Affine, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamNest:
+    """A lowered nest whose band extents (and instance maps) are affine in
+    a set of still-symbolic parameters — the shape-polymorphic analogue of
+    :class:`LoweredNest`. One ParamNest serves a whole working-set ladder:
+    the parametric codegen path turns the symbolic extents into traced
+    operands, so a single executable covers every ladder point that
+    satisfies ``constraints`` (the divisibility assumptions the symbolic
+    transforms made, e.g. ``programs | extent`` for the unified split).
+    """
+
+    params: tuple[str, ...]
+    band_names: tuple[str, ...]
+    band_extents: tuple[Affine, ...]
+    instances: tuple[ParamInstance, ...]
+    domain_lo: tuple[Affine, ...]
+    domain_hi: tuple[Affine, ...]
+    constraints: tuple[tuple[Affine, int], ...]  # (expr, d): require d | expr
+
+    @property
+    def n_bands(self) -> int:
+        return len(self.band_names)
+
+    @property
+    def rank(self) -> int:
+        return len(self.domain_lo)
+
+    def admits(self, env: Mapping[str, int]) -> bool:
+        """True if every divisibility assumption holds for this env."""
+        for expr, div in self.constraints:
+            try:
+                if expr.eval(env) % div != 0:
+                    return False
+            except (KeyError, ValueError):
+                return False
+        return True
+
+    def concretize(self, env: Mapping[str, int]) -> LoweredNest:
+        """Evaluate at a concrete env — must equal ``schedule.lower``."""
+        if not self.admits(env):
+            raise ValueError(f"env {dict(env)!r} violates {self.constraints}")
+        return LoweredNest(
+            band_names=self.band_names,
+            band_extents=tuple(max(0, e.eval(env)) for e in self.band_extents),
+            instances=tuple(
+                LoweredInstance(
+                    tuple(tuple(a.eval(env) for a in row) for row in inst.A),
+                    tuple(c.eval(env) for c in inst.c),
+                )
+                for inst in self.instances
+            ),
+            domain_lo=tuple(lo.eval(env) for lo in self.domain_lo),
+            domain_hi=tuple(hi.eval(env) for hi in self.domain_hi),
+        )
+
+
+def _affine_mul(a: Affine, b: Affine) -> Affine:
+    """Product of two affine expressions; affine only when one is const."""
+    if a.is_const:
+        return b * a.const
+    if b.is_const:
+        return a * b.const
+    raise SymbolicLowerError(
+        f"product of two parameter-dependent quantities ({a!r} * {b!r})"
+    )
+
+
+# ---------------------------------------------------------------------------
 # Transform records
 # ---------------------------------------------------------------------------
 
@@ -150,6 +240,20 @@ class _Tile:
     dim: str
     size: int
     # names for the generated bands; default <dim>_T (outer) / <dim>_t (inner)
+    outer: str | None = None
+    inner: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _TileByCount:
+    """Split ``dim`` into exactly ``count`` equal chunks (outer extent =
+    count, inner extent = E/count). Requires count | extent — the unified
+    template's ``schedule(static, n/t)`` work-sharing split. Unlike
+    ``_Tile`` the *count* is the static knob, so the split stays affine in
+    a symbolic extent (chunk length becomes a rational coefficient)."""
+
+    dim: str
+    count: int
     outer: str | None = None
     inner: str | None = None
 
@@ -184,7 +288,8 @@ class _Skew:
     factor: int
 
 
-_Transform = _Interchange | _Tile | _Interleave | _Unroll | _Reverse | _Skew
+_Transform = (_Interchange | _Tile | _TileByCount | _Interleave | _Unroll
+              | _Reverse | _Skew)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +320,13 @@ class Schedule:
         if size < 1:
             raise ValueError("tile size must be >= 1")
         return self._push(_Tile(dim, size, outer, inner), f"tile({dim},{size})")
+
+    def tile_by_count(self, dim: str, count: int, outer: str | None = None,
+                      inner: str | None = None) -> "Schedule":
+        if count < 1:
+            raise ValueError("tile count must be >= 1")
+        return self._push(_TileByCount(dim, count, outer, inner),
+                          f"tile_by_count({dim},{count})")
 
     def interleave(self, dim: str, factor: int) -> "Schedule":
         if factor < 1:
@@ -304,6 +416,25 @@ class Schedule:
                             coeffs[outer] = coeffs.get(outer, 0) + c * t.size
                             coeffs[inner] = coeffs.get(inner, 0) + c
 
+            elif isinstance(t, _TileByCount):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                if extent % t.count != 0:
+                    raise ValueError(
+                        f"tile_by_count({name},{t.count}): extent {extent} "
+                        "not divisible (pick a divisible working set)"
+                    )
+                size = extent // t.count
+                outer = t.outer or f"{name}_T"
+                inner = t.inner or f"{name}_t"
+                bands[i : i + 1] = [(outer, t.count), (inner, size)]
+                for inst in instances:
+                    for dim, (coeffs, const) in inst.items():
+                        c = coeffs.pop(name, 0)
+                        if c:
+                            coeffs[outer] = coeffs.get(outer, 0) + c * size
+                            coeffs[inner] = coeffs.get(inner, 0) + c
+
             elif isinstance(t, (_Interleave, _Unroll)):
                 i = band_index(t.dim)
                 name, extent = bands[i]
@@ -377,8 +508,207 @@ class Schedule:
 
         return LoweredNest(band_names, band_extents, tuple(lowered), lo, hi)
 
+    # -- symbolic lowering (shape-polymorphic path) -------------------------
+
+    def lower_symbolic(self, dom: IterDomain,
+                       params: tuple[str, ...] = ("n",)) -> ParamNest:
+        """Lower keeping ``params`` symbolic: band extents, instance maps,
+        and domain bounds stay :class:`Affine` in the params.
+
+        Transforms that split a parameter-dependent extent assume exact
+        divisibility and record it in ``ParamNest.constraints`` (checked
+        per concrete env by ``admits``); a transform whose result is not
+        affine at all (e.g. reversing a band whose extent *and*
+        coefficient both depend on a param) raises
+        :class:`SymbolicLowerError` and the caller specializes instead.
+        Memoized like :meth:`lower`.
+        """
+        try:
+            key = (self.cache_key, dom, tuple(params))
+            hit = _SYMBOLIC_MEMO.get(key)
+        except TypeError:
+            key, hit = None, None
+        if hit is not None:
+            if isinstance(hit, SymbolicLowerError):
+                raise hit
+            return hit
+        try:
+            nest = self._lower_symbolic(dom, tuple(params))
+        except SymbolicLowerError as e:
+            if key is not None:
+                _SYMBOLIC_MEMO[key] = e
+            raise
+        if key is not None:
+            if len(_SYMBOLIC_MEMO) >= _LOWER_MEMO_CAP:
+                _SYMBOLIC_MEMO.clear()
+            _SYMBOLIC_MEMO[key] = nest
+        return nest
+
+    def _lower_symbolic(self, dom: IterDomain,
+                        params: tuple[str, ...]) -> ParamNest:
+        aff = Affine.of
+        lo = tuple(d.lo for d in dom.dims)
+        hi = tuple(d.hi for d in dom.dims)
+
+        bands: list[tuple[str, Affine]] = []
+        inst0: dict[str, tuple[dict[str, Affine], Affine]] = {}
+        for d, l, h in zip(dom.dims, lo, hi):
+            bands.append((d.name, h - l))
+            inst0[d.name] = ({d.name: aff(1)}, l)
+        instances = [inst0]
+        constraints: list[tuple[Affine, int]] = []
+
+        def band_index(name: str) -> int:
+            for i, (n, _) in enumerate(bands):
+                if n == name:
+                    return i
+            raise KeyError(f"no band named {name!r}; have {[n for n, _ in bands]}")
+
+        def split(i: int, outer_name: str, inner_name: str,
+                  count: "Affine", size: "Affine") -> None:
+            """Replace band i by (outer: count, inner: size); rewrite
+            every instance's use of it as ``outer*size + inner``."""
+            name, _ = bands[i]
+            bands[i : i + 1] = [(outer_name, count), (inner_name, size)]
+            for inst in instances:
+                for dim, (coeffs, const) in inst.items():
+                    c = coeffs.pop(name, None)
+                    if c is not None and c != aff(0):
+                        coeffs[outer_name] = (
+                            coeffs.get(outer_name, aff(0)) + _affine_mul(c, size)
+                        )
+                        coeffs[inner_name] = coeffs.get(inner_name, aff(0)) + c
+
+        for t in self.transforms:
+            if isinstance(t, _Interchange):
+                ia, ib = band_index(t.a), band_index(t.b)
+                bands[ia], bands[ib] = bands[ib], bands[ia]
+
+            elif isinstance(t, _Tile):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                if extent.is_const:
+                    n_outer = aff(-(-int(extent.const) // t.size))
+                else:
+                    # symbolic extent: ceil is not affine — assume (and
+                    # record) exact divisibility; indivisible ladder
+                    # points fall back to specialization via admits().
+                    constraints.append((extent, t.size))
+                    n_outer = extent / t.size
+                split(i, t.outer or f"{name}_T", t.inner or f"{name}_t",
+                      n_outer, aff(t.size))
+
+            elif isinstance(t, _TileByCount):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                if extent.is_const:
+                    if int(extent.const) % t.count != 0:
+                        raise ValueError(
+                            f"tile_by_count({name},{t.count}): extent "
+                            f"{extent.const} not divisible"
+                        )
+                else:
+                    constraints.append((extent, t.count))
+                size = extent / t.count
+                split(i, t.outer or f"{name}_T", t.inner or f"{name}_t",
+                      aff(t.count), size)
+
+            elif isinstance(t, (_Interleave, _Unroll)):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                f = t.factor
+                if extent.is_const:
+                    if int(extent.const) % f != 0:
+                        raise ValueError(
+                            f"{type(t).__name__.lstrip('_').lower()}"
+                            f"({name},{f}): extent {extent.const} not divisible"
+                        )
+                else:
+                    constraints.append((extent, f))
+                new_extent = extent / f
+                bands[i] = (name, new_extent)
+                new_instances = []
+                for inst in instances:
+                    for k in range(f):
+                        clone: dict[str, tuple[dict[str, Affine], Affine]] = {}
+                        for dim, (coeffs, const) in inst.items():
+                            c = coeffs.get(name, aff(0))
+                            cf = dict(coeffs)
+                            if c != aff(0):
+                                if isinstance(t, _Interleave):
+                                    const2 = const + _affine_mul(c, new_extent) * k
+                                else:
+                                    cf[name] = c * f
+                                    const2 = const + c * k
+                            else:
+                                const2 = const
+                            clone[dim] = (cf, const2)
+                        new_instances.append(clone)
+                instances = new_instances
+
+            elif isinstance(t, _Reverse):
+                i = band_index(t.dim)
+                name, extent = bands[i]
+                for inst in instances:
+                    for dim, (coeffs, const) in inst.items():
+                        c = coeffs.get(name, aff(0))
+                        if c != aff(0):
+                            coeffs[name] = c * -1
+                            inst[dim] = (coeffs,
+                                         const + _affine_mul(c, extent - 1))
+
+            elif isinstance(t, _Skew):
+                band_index(t.source)
+                for inst in instances:
+                    if t.target not in inst:
+                        raise KeyError(f"skew target {t.target!r} is not a domain dim")
+                    coeffs, const = inst[t.target]
+                    coeffs[t.source] = coeffs.get(t.source, aff(0)) + t.factor
+            else:  # pragma: no cover
+                raise TypeError(t)
+
+        band_names = tuple(n for n, _ in bands)
+        band_extents = tuple(e for _, e in bands)
+        pos = {n: i for i, n in enumerate(band_names)}
+        lowered = []
+        for inst in instances:
+            A = []
+            c = []
+            for d in dom.dims:
+                coeffs, const = inst[d.name]
+                row = [aff(0)] * len(bands)
+                for bn, cf in coeffs.items():
+                    if bn in pos:
+                        row[pos[bn]] = cf
+                    elif cf != aff(0):
+                        raise AssertionError(f"dangling band {bn}")
+                A.append(tuple(row))
+                c.append(const)
+            lowered.append(ParamInstance(tuple(A), tuple(c)))
+
+        exprs = list(band_extents) + list(lo) + list(hi) + [
+            a for inst in lowered for row in inst.A for a in row
+        ] + [cc for inst in lowered for cc in inst.c]
+        stray = {s for e in exprs for s in e.symbols if s not in params}
+        if stray:
+            raise SymbolicLowerError(
+                f"non-parameter symbols {sorted(stray)} survive lowering "
+                "(iterator-dependent bounds are not shape-polymorphic)"
+            )
+
+        return ParamNest(
+            params=params,
+            band_names=band_names,
+            band_extents=band_extents,
+            instances=tuple(lowered),
+            domain_lo=lo,
+            domain_hi=hi,
+            constraints=tuple(constraints),
+        )
+
 
 _LOWER_MEMO: dict = {}
+_SYMBOLIC_MEMO: dict = {}
 _LOWER_MEMO_CAP = 4096
 
 

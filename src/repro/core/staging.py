@@ -49,12 +49,16 @@ from .schedule import Schedule
 __all__ = [
     "Lowered",
     "Compiled",
+    "ParamLowered",
+    "ParamCompiled",
     "TranslationCache",
     "GLOBAL_CACHE",
     "stage_lower",
+    "stage_lower_parametric",
     "precompile",
     "fingerprint_pattern",
     "fingerprint_schedule",
+    "disk_cache_stats",
 ]
 
 
@@ -140,6 +144,58 @@ def fingerprint_schedule(schedule: Schedule) -> tuple:
 
 def _env_key(env: Mapping[str, int]) -> tuple:
     return tuple(sorted((str(k), int(v)) for k, v in env.items()))
+
+
+# ---------------------------------------------------------------------------
+# jax disk compilation cache accounting (the cross-process leg)
+# ---------------------------------------------------------------------------
+#
+# jax's persistent compilation cache reports activity only through
+# monitoring events; a process-wide listener folds them into counters so
+# ``TranslationCache.stats()`` can report disk hits/misses alongside the
+# in-process lower/compile accounting (and the smoke ledger records both).
+
+_DISK_EVENTS = {
+    "/jax/compilation_cache/cache_hits": "hits",
+    "/jax/compilation_cache/cache_misses": "misses",
+}
+_disk_counters = {"hits": 0, "misses": 0}
+_disk_listener_installed = False
+
+
+def _install_disk_listener() -> None:
+    global _disk_listener_installed
+    if _disk_listener_installed:
+        return
+    _disk_listener_installed = True
+    try:
+        def _on_event(event, **kwargs):
+            key = _DISK_EVENTS.get(event)
+            if key is not None:
+                _disk_counters[key] += 1
+
+        jax.monitoring.register_event_listener(_on_event)
+    except Exception:  # pragma: no cover - monitoring API drift
+        pass
+
+
+def disk_cache_stats() -> dict:
+    """jax persistent-cache counters for this process (0/0 when the disk
+    cache is disabled — events never fire)."""
+    try:
+        from jax._src import compilation_cache as _cc
+
+        enabled = bool(_cc.is_persistent_cache_enabled())
+    except Exception:  # pragma: no cover
+        enabled = False
+    return {
+        "enabled": enabled,
+        "hits": _disk_counters["hits"],
+        "misses": _disk_counters["misses"],
+    }
+
+
+_install_disk_listener()
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +304,140 @@ def _build_compiled(lowered: Lowered, ntimes: int,
 
 
 # ---------------------------------------------------------------------------
+# Parametric staged artifacts (one executable per ladder)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamLowered:
+    """Stage 1, shape-polymorphic: the working-set parameter(s) stay
+    symbolic. ``step(arrays, pvals)`` takes capacity-shaped arrays plus
+    one traced int32 scalar per parameter; a whole ladder shares this
+    artifact (and the one executable compiled from it)."""
+
+    pattern: PatternSpec
+    schedule: Schedule
+    cap_env: dict                   # capacity env (arrays allocated here)
+    params: tuple[str, ...]
+    backend: str
+    step: Callable[[dict, tuple], dict]
+    pnest: Any                      # ParamNest
+    key: tuple | None
+    lower_seconds: float
+    cache: "TranslationCache | None" = None
+
+    # Driver.run treats lowered.env as the allocation env; for the
+    # parametric artifact that is the capacity env.
+    @property
+    def env(self) -> dict:
+        return self.cap_env
+
+    @property
+    def param_names(self) -> tuple[str, ...]:
+        return self.params
+
+    @property
+    def space_names(self) -> tuple[str, ...]:
+        return tuple(sorted(s.name for s in self.pattern.spaces))
+
+    def avals(self) -> tuple:
+        by_name = {s.name: s for s in self.pattern.spaces}
+        arr = tuple(
+            jax.ShapeDtypeStruct(
+                by_name[nm].concrete_shape(self.cap_env),
+                np.dtype(by_name[nm].dtype),
+            )
+            for nm in self.space_names
+        )
+        pv = tuple(
+            jax.ShapeDtypeStruct((), np.dtype(np.int32)) for _ in self.params
+        )
+        return arr, pv
+
+    def compile(self, *, ntimes: int, sync_every_rep: bool = False,
+                cache: "TranslationCache | None" = None) -> "ParamCompiled":
+        cache = cache or self.cache
+        key = None
+        if self.key is not None:
+            key = ("pexec", self.key, int(ntimes), bool(sync_every_rep))
+        builder = lambda: _build_param_compiled(self, ntimes, sync_every_rep)
+        if cache is None or key is None:
+            return builder()
+        out, hit = cache._compiled_get_or_build(key, builder)
+        return dataclasses.replace(out, from_cache=hit) if hit else out
+
+
+@dataclasses.dataclass
+class ParamCompiled:
+    """One executable repetition loop shared by a whole working-set
+    ladder: ``run(tup, pvals)`` executes ``ntimes`` sweeps at the working
+    set named by the ``pvals`` scalars."""
+
+    lowered: ParamLowered
+    names: tuple[str, ...]
+    run: Callable
+    executable: Any
+    ntimes: int
+    sync_every_rep: bool
+    compile_seconds: float
+    from_cache: bool = False
+
+    @property
+    def param_names(self) -> tuple[str, ...]:
+        return self.lowered.params
+
+    def __call__(self, tup, pvals):
+        return self.run(tup, pvals)
+
+    def bind(self, env: Mapping[str, int]) -> Callable:
+        """Close over one ladder point: returns ``fn(tup) -> tup``."""
+        pvals = tuple(np.int32(env[p]) for p in self.param_names)
+        return lambda tup: self.run(tup, pvals)
+
+    def cost_analysis(self) -> dict:
+        ca = self.executable.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return ca
+
+
+def _build_param_compiled(lowered: ParamLowered, ntimes: int,
+                          sync_every_rep: bool) -> ParamCompiled:
+    names = lowered.space_names
+    step = lowered.step
+
+    def step_t(tup, pvals):
+        d = dict(zip(names, tup))
+        d = step(d, pvals)
+        return tuple(d[k] for k in names)
+
+    avals, pavals = lowered.avals()
+    t0 = time.perf_counter()
+    if sync_every_rep:
+        exe = jax.jit(step_t).lower(avals, pavals).compile()
+
+        def run(tup, pvals):
+            for _ in range(ntimes):
+                tup = exe(tup, pvals)
+                jax.block_until_ready(tup)
+            return tup
+    else:
+        def fused(tup, pvals):
+            return jax.lax.fori_loop(
+                0, ntimes, lambda _, t: step_t(t, pvals), tup
+            )
+
+        exe = jax.jit(fused).lower(avals, pavals).compile()
+        run = exe
+    compile_seconds = time.perf_counter() - t0
+    return ParamCompiled(
+        lowered=lowered, names=names, run=run, executable=exe,
+        ntimes=ntimes, sync_every_rep=sync_every_rep,
+        compile_seconds=compile_seconds,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Translation cache
 # ---------------------------------------------------------------------------
 
@@ -343,6 +533,7 @@ class TranslationCache:
                 "compile_misses": self.compile_misses,
                 "entries": len(self._lowered) + len(self._compiled),
                 "hit_rate": (hits / total) if total else 0.0,
+                "disk": disk_cache_stats(),
             }
 
     def clear(self) -> None:
@@ -399,6 +590,58 @@ def stage_lower(
             pattern=pattern, schedule=schedule, env=env, backend=backend,
             step=step, nest=plan.nest, key=key,
             lower_seconds=time.perf_counter() - t0, cache=cache,
+        )
+
+    if cache is None or key is None:
+        return builder()
+    out, _hit = cache._lowered_get_or_build(key, builder)
+    if out.cache is None:
+        out.cache = cache
+    return out
+
+
+def stage_lower_parametric(
+    pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
+    params: tuple[str, ...] = ("n",), backend: str = "jax", *,
+    cache: TranslationCache | None = None,
+) -> ParamLowered:
+    """Shape-polymorphic stage 1: keep ``params`` symbolic, through the
+    cache. The key deliberately omits the per-point env — every ladder
+    point maps onto one entry, which is the whole point.
+
+    Raises :class:`~repro.core.schedule.SymbolicLowerError` when a
+    transform genuinely needs concrete extents; callers fall back to
+    per-size :func:`stage_lower` specialization.
+    """
+    from . import codegen
+
+    if backend != "jax":
+        from .schedule import SymbolicLowerError
+
+        raise SymbolicLowerError(
+            f"parametric lowering targets the jax backend, not {backend!r}"
+        )
+    cap_env = dict(cap_env)
+    params = tuple(params)
+    try:
+        key = (
+            "plower", fingerprint_pattern(pattern),
+            fingerprint_schedule(schedule), backend, params,
+            _env_key(cap_env),
+        )
+    except Exception:
+        key = None
+
+    def builder() -> ParamLowered:
+        t0 = time.perf_counter()
+        pnest = schedule.lower_symbolic(pattern.domain, params)
+        step = codegen.lower_jax_parametric(
+            pattern, schedule, cap_env, params=params, pnest=pnest
+        )
+        return ParamLowered(
+            pattern=pattern, schedule=schedule, cap_env=cap_env,
+            params=params, backend=backend, step=step, pnest=pnest,
+            key=key, lower_seconds=time.perf_counter() - t0, cache=cache,
         )
 
     if cache is None or key is None:

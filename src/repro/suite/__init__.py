@@ -1,0 +1,42 @@
+"""repro.suite — the declarative workload registry layer.
+
+AdaptMemBench's core claim is that access patterns should be *specified*,
+not hand-coded, and replayed through kernel-independent drivers. This
+package extends that discipline from single kernels to whole experiment
+suites (the registry-driven design of Spatter and of Mess-style load
+sweeps): each experiment is a declarative :class:`Workload` record —
+pattern x schedule variants x working-set ladder x validation policy —
+registered by name, and one generic runner executes every entry, so a
+new scenario is ~10 lines of data instead of a hand-rolled script.
+
+    Ladder           named working-set ladders (quick/full points)
+    Workload         one experiment: variants + ladder + policies
+    register/...     the process-wide registry
+    run_workload     the single shared executor (stage -> validate ->
+                     measure -> CSV), parametric-by-default
+"""
+from .ladders import (
+    FULL_GRID,
+    FULL_SETS,
+    GRID2,
+    GRID3,
+    INTERIOR_SETS,
+    QUICK_GRID,
+    QUICK_SETS,
+    WORKING_SETS,
+    Ladder,
+    fixed,
+)
+from .workload import VariantSpec, Workload
+from .registry import load_builtins, names, register, workload, workloads
+from .runner import collect_records, csv_line, emit, run_module, run_workload
+
+__all__ = [
+    "Ladder", "fixed",
+    "WORKING_SETS", "INTERIOR_SETS", "GRID2", "GRID3",
+    "QUICK_SETS", "FULL_SETS", "QUICK_GRID", "FULL_GRID",
+    "VariantSpec", "Workload",
+    "register", "workload", "workloads", "names", "load_builtins",
+    "run_workload", "run_module", "collect_records",
+    "csv_line", "emit",
+]

@@ -1,0 +1,259 @@
+"""Built-in workload entries — the paper's figures as declarative data.
+
+Each ``register(Workload(...))`` below replaces a hand-rolled
+``benchmarks/fig*.py`` script: the pattern, the driver-config variants
+being contrasted, the working-set ladder, and the validation policy are
+*specified*; the shared runner does everything else. The Spatter-style
+``spatter_uniform`` entry is the scenario-diversity proof: a whole new
+gather/scatter suite in a dozen declarative lines.
+
+Fully custom experiments (the Pallas tile sweep, the roofline refresh)
+register themselves from their ``benchmarks`` modules with a ``runner``.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    DriverConfig,
+    Record,
+    gather,
+    gather_scatter,
+    identity,
+    jacobi1d,
+    jacobi2d,
+    jacobi3d,
+    nstream,
+    scatter,
+    triad,
+)
+from repro.core.measure import NATIVE_TILE_BYTES
+
+from .ladders import GRID2, GRID3, INTERIOR_SETS, WORKING_SETS, fixed
+from .registry import register
+from .workload import VariantSpec, Workload
+
+_TILE_ELEMS = NATIVE_TILE_BYTES // 4
+
+
+# -- fig05: cost of implicit barriers ---------------------------------------
+# OpenMP's implicit barrier per parallel-for becomes a host sync + dispatch
+# per sweep; the `nowait` analogue fuses all sweeps into one fori_loop.
+
+register(Workload(
+    name="fig05_barriers",
+    figure="fig05",
+    title="barrier vs fused (nowait) bandwidth per working set",
+    pattern=lambda env: triad(),
+    variants=(
+        VariantSpec("barrier", DriverConfig(
+            template="unified", programs=4, ntimes=16, reps=2,
+            sync_every_rep=True)),
+        VariantSpec("nowait", DriverConfig(
+            template="unified", programs=4, ntimes=16, reps=2)),
+    ),
+    ladder=WORKING_SETS,
+))
+
+
+# -- fig06: unified vs independent data spaces ------------------------------
+# One shared array with schedule(static, n/t) chunks vs per-program
+# tile-padded rows (the paper's ~2x-in-L1 layout study).
+
+register(Workload(
+    name="fig06_dataspaces",
+    figure="fig06",
+    title="unified vs independent (tile-padded) data spaces for triad",
+    pattern=lambda env: triad(),
+    variants=(
+        VariantSpec("unified", DriverConfig(
+            template="unified", programs=4, ntimes=16, reps=2)),
+        VariantSpec("independent", DriverConfig(
+            template="independent", programs=4, ntimes=16, reps=2,
+            pad=_TILE_ELEMS)),
+    ),
+    ladder=WORKING_SETS,
+))
+
+
+# -- fig07: bandwidth vs concurrent read streams ----------------------------
+# The paper sweeps 3..20 simultaneously-read arrays (peak at 11 streams);
+# the variant list is the sweep axis, each k with its own nstream pattern.
+
+def _fig07_variants(quick: bool) -> tuple[VariantSpec, ...]:
+    ks = [1, 2, 3, 5, 7, 11, 15, 20] if quick else list(range(1, 21))
+    return tuple(
+        VariantSpec(
+            f"streams{k}",
+            DriverConfig(template="independent", programs=4, ntimes=8,
+                         reps=2),
+            pattern=lambda env, k=k: nstream(k),
+        )
+        for k in ks
+    )
+
+
+register(Workload(
+    name="fig07_streams",
+    figure="fig07",
+    title="bandwidth vs number of concurrent data streams",
+    variants=_fig07_variants,
+    ladder=fixed(1 << 14, "streams_point"),
+    validate=False,
+))
+
+
+# -- fig09: the interleaved-triad optimization ------------------------------
+# Splitting each array into f simultaneously-accessed blocks (Listing 7)
+# through the schedule engine, plus dedicated Pallas kernels as a post.
+
+def _fig09_kernels(quick: bool) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.measure import time_fn
+    from repro.kernels import ops
+
+    out = []
+    n = 1 << 16
+    key = jax.random.PRNGKey(0)
+    b = jax.random.normal(key, (n,), jnp.float32)
+    c = jax.random.normal(key, (n,), jnp.float32)
+    bytes_moved = 3 * n * 4
+    t = time_fn(lambda: ops.triad(b, c, block=4096), reps=3)
+    out.append(f"fig09/kernel/naive,{t.seconds*1e6:.2f},"
+               f"{bytes_moved/t.seconds/1e9:.3f}GB/s")
+    for f in (2, 4):
+        t = time_fn(lambda f=f: ops.triad_interleaved(b, c, factor=f,
+                                                      block=2048), reps=3)
+        out.append(f"fig09/kernel/il{f},{t.seconds*1e6:.2f},"
+                   f"{bytes_moved/t.seconds/1e9:.3f}GB/s")
+    return out
+
+
+register(Workload(
+    name="fig09_interleave",
+    figure="fig09",
+    title="interleaved triad: schedule engine + dedicated kernels",
+    pattern=lambda env: triad(),
+    variants=tuple(
+        VariantSpec(
+            f"engine/il{f}",
+            DriverConfig(
+                template="independent", programs=2, ntimes=16, reps=2,
+                schedule=(identity() if f == 1
+                          else identity().interleave("i", f)),
+            ),
+        )
+        for f in (1, 2, 4)
+    ),
+    ladder=WORKING_SETS,
+    post=_fig09_kernels,
+))
+
+
+# -- fig10: counter-based false-sharing diagnosis ---------------------------
+# The analytic native-tile traffic model + XLA cost_analysis stand in for
+# PAPI's L1-miss / exclusive-line-request counters.
+
+def _fig10_derived(rec: Record) -> str:
+    shared = rec.extra.get("shared_write_tiles", -1)
+    fetches = rec.extra.get("fetches", -1)
+    return f"shared_tiles={shared};fetches={fetches};gbs={rec.gbs:.3f}"
+
+
+register(Workload(
+    name="fig10_counters",
+    figure="fig10",
+    title="false-sharing counters for three Jacobi-1D layouts",
+    pattern=lambda env: jacobi1d(),
+    variants=(
+        VariantSpec("unified", DriverConfig(
+            template="unified", programs=4, ntimes=4, reps=1,
+            measured=True)),
+        VariantSpec("indep_unpadded", DriverConfig(
+            template="independent", programs=4, ntimes=4, reps=1,
+            measured=True)),
+        VariantSpec("indep_padded", DriverConfig(
+            template="independent", programs=4, ntimes=4, reps=1,
+            pad=_TILE_ELEMS, measured=True)),
+    ),
+    ladder=fixed((1 << 14) + 2, "counters_point"),
+    validate=False,
+    derived=_fig10_derived,
+))
+
+
+# -- fig12/14/15: the Jacobi family across layouts --------------------------
+
+register(Workload(
+    name="fig12_jacobi1d",
+    figure="fig12",
+    title="Jacobi 1D under unified / independent / padded layouts",
+    pattern=lambda env: jacobi1d(),
+    variants=(
+        VariantSpec("unified", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2,
+            validate_n=66)),
+        VariantSpec("independent", DriverConfig(
+            template="independent", programs=4, ntimes=8, reps=2,
+            validate_n=66)),
+        VariantSpec("indep_padded", DriverConfig(
+            template="independent", programs=4, ntimes=8, reps=2,
+            pad=_TILE_ELEMS, validate_n=66)),
+    ),
+    ladder=INTERIOR_SETS,
+))
+
+register(Workload(
+    name="fig14_jacobi2d",
+    figure="fig14",
+    title="Jacobi 2D (5-pt star), unified vs independent",
+    pattern=lambda env: jacobi2d(),
+    variants=(
+        VariantSpec("unified", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2,
+            validate_n=18)),
+        VariantSpec("independent", DriverConfig(
+            template="independent", programs=4, ntimes=8, reps=2,
+            validate_n=18)),
+    ),
+    ladder=GRID2,
+))
+
+register(Workload(
+    name="fig15_jacobi3d",
+    figure="fig15",
+    title="Jacobi 3D (7-pt), unified vs independent",
+    pattern=lambda env: jacobi3d(),
+    variants=(
+        VariantSpec("unified", DriverConfig(
+            template="unified", programs=4, ntimes=4, reps=2,
+            validate_n=10)),
+        VariantSpec("independent", DriverConfig(
+            template="independent", programs=4, ntimes=4, reps=2,
+            validate_n=10)),
+    ),
+    ladder=GRID3,
+))
+
+
+# -- spatter_uniform: Spatter-style gather/scatter --------------------------
+# The registry's scenario-diversity payoff: a whole new pattern-as-data
+# suite (Lavin et al.'s UNIFORM:stride mode) in declarative form.
+
+register(Workload(
+    name="spatter_uniform",
+    figure="spatter",
+    title="Spatter UNIFORM:8 gather / scatter / gather-scatter",
+    variants=(
+        VariantSpec("gather", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env: gather(stride=8)),
+        VariantSpec("scatter", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env: scatter(stride=8)),
+        VariantSpec("gather_scatter", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env: gather_scatter(stride=8)),
+    ),
+    ladder=WORKING_SETS,
+))

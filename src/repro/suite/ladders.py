@@ -1,0 +1,77 @@
+"""Named working-set ladders shared by every registered workload.
+
+A :class:`Ladder` is pure data: the quick/full measurement points plus an
+optional per-point transform mapping a ladder *point* (the label the CSV
+reports) to the env ``n`` the driver actually runs (e.g. the Jacobi
+interiors run ``n + 2`` so the interior divides the program count).
+Workloads reference ladders by value, so the suite has one copy of the
+canonical sizes instead of one per ``fig*`` script.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+__all__ = [
+    "Ladder",
+    "fixed",
+    "QUICK_SETS",
+    "FULL_SETS",
+    "QUICK_GRID",
+    "FULL_GRID",
+    "WORKING_SETS",
+    "INTERIOR_SETS",
+    "GRID2",
+    "GRID3",
+]
+
+# Working-set ladder (elements per stream). On the TPU target these cross
+# the VMEM boundary the way the paper's sizes cross L1/L2/L3; on this CPU
+# container they cross L1/L2/LLC — the *shape* of the curves is the
+# reproduction target, and records carry working_set_bytes + level so the
+# table is interpretable on either substrate.
+QUICK_SETS = [1 << 10, 1 << 12, 1 << 14, 1 << 17]
+FULL_SETS = [1 << 10, 1 << 11, 1 << 12, 1 << 13, 1 << 14, 1 << 16,
+             1 << 18, 1 << 20, 1 << 22]
+
+QUICK_GRID = [18, 34]
+FULL_GRID = [18, 34, 66, 130]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ladder:
+    """A named sequence of measurement points.
+
+    ``points`` are what CSV labels report; ``env_n`` maps a point to the
+    driver's working-set parameter (identity unless ``transform`` is
+    set). ``transform`` must be a top-level function (or None) so ladder
+    values stay hashable and comparable.
+    """
+
+    name: str
+    quick: tuple[int, ...]
+    full: tuple[int, ...]
+    transform: Callable[[int], int] | None = None
+
+    def points(self, quick: bool) -> tuple[int, ...]:
+        return self.quick if quick else self.full
+
+    def env_n(self, point: int) -> int:
+        return self.transform(point) if self.transform else point
+
+
+def fixed(n: int, name: str | None = None) -> Ladder:
+    """A single-point ladder (fixed-size experiments like fig07/fig10)."""
+    return Ladder(name or f"fixed{n}", (n,), (n,))
+
+
+def _plus_halo(n: int) -> int:
+    # Jacobi interiors must divide by the program count: n = k*programs + 2
+    return n + 2
+
+
+WORKING_SETS = Ladder("working_sets", tuple(QUICK_SETS), tuple(FULL_SETS))
+INTERIOR_SETS = Ladder("interior_sets", tuple(QUICK_SETS), tuple(FULL_SETS),
+                       transform=_plus_halo)
+GRID2 = Ladder("grid2", tuple(QUICK_GRID), tuple(FULL_GRID))
+GRID3 = Ladder("grid3", (10, 18), (10, 18, 34, 66))

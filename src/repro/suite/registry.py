@@ -1,0 +1,41 @@
+"""The process-wide workload registry.
+
+Registration order is execution order (``benchmarks.run`` iterates
+``names()``), so the suite stays deterministic. Re-registering a name
+overwrites — module reloads and test fixtures stay idempotent.
+"""
+from __future__ import annotations
+
+from .workload import Workload
+
+__all__ = ["register", "workload", "workloads", "names", "load_builtins"]
+
+_REGISTRY: dict[str, Workload] = {}
+
+
+def register(w: Workload) -> Workload:
+    """Register (or re-register) a workload; returns it for chaining."""
+    _REGISTRY[w.name] = w
+    return w
+
+
+def workload(name: str) -> Workload:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no workload {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def workloads() -> tuple[Workload, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def load_builtins() -> None:
+    """Import the built-in declarative entries (idempotent)."""
+    from . import catalog as _builtin  # noqa: F401

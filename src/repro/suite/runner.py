@@ -1,0 +1,112 @@
+"""The one executor every registered workload shares.
+
+Per workload: build one Driver per variant, stage every (variant, point)
+executable up front (XLA compiles overlap on worker threads; parametric
+ladders collapse onto a single executable), validate each variant once
+against the serial oracle, then measure and emit the paper's
+``name,us_per_call,derived`` CSV contract. The per-workload translation
+activity is reported as a cache-delta comment line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import Driver, GLOBAL_CACHE, Record, TranslationCache, precompile
+
+from .registry import load_builtins, workload as _lookup
+from .workload import Workload
+
+__all__ = ["csv_line", "emit", "run_workload", "run_module", "collect_records"]
+
+
+def csv_line(name: str, rec: Record, derived: str | float = "") -> str:
+    if derived == "":
+        derived = f"{rec.gbs:.3f}GB/s"
+    return f"{name},{rec.seconds * 1e6:.2f},{derived}"
+
+
+def emit(lines: list[str]) -> list[str]:
+    for ln in lines:
+        print(ln, flush=True)
+    return lines
+
+
+def _drivers(w: Workload, quick: bool, cache: TranslationCache,
+             parametric: "bool | str | None" = None):
+    """(variant, driver) pairs with the workload's parametric policy
+    applied to configs that left ``parametric`` unset (None); a variant
+    that explicitly pins True/False/"auto" keeps its choice."""
+    out = []
+    policy = w.parametric if parametric is None else parametric
+    for v in w.variant_list(quick):
+        cfg = v.config
+        if cfg.parametric is None:
+            cfg = dataclasses.replace(cfg, parametric=policy)
+        out.append((v, Driver(v.pattern or w.pattern, cfg, cache=cache)))
+    return out
+
+
+def collect_records(
+    w: Workload, quick: bool = True, *,
+    cache: TranslationCache | None = None,
+    parametric: "bool | str | None" = None,
+) -> list[tuple[str, Record]]:
+    """Measure a declarative workload; returns ``(csv_label, record)``
+    pairs. This is the runner's core loop, exposed so tests can compare
+    parametric-vs-specialized executions of every registered workload.
+    """
+    if w.runner is not None:
+        raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
+    cache = cache if cache is not None else GLOBAL_CACHE
+    pts = list(w.ladder.points(quick))
+    ns = [w.ladder.env_n(p) for p in pts]
+    drivers = _drivers(w, quick, cache, parametric)
+    # stage every variant's executables before any timing starts
+    precompile([
+        (lambda d=d: d.prepare(ns, parallel=False)) for _, d in drivers
+    ])
+    out: list[tuple[str, Record]] = []
+    for v, d in drivers:
+        if w.validate and d.cfg.validate_n:
+            d.validate()
+        recs = d.run(ns)
+        if w.validate and d.cfg.validate_n and any(
+                r.extra.get("parametric") for r in recs):
+            # the executable that produced these numbers is the shared
+            # parametric one — oracle-check it too (small points only:
+            # the serial oracle's guarded fallback is O(points) Python);
+            # memoized per ladder, so re-runs don't re-pay it.
+            d.validate_parametric(ns, max_check_n=4096)
+        for p, rec in zip(pts, recs):
+            out.append((f"{w.figure}/{v.label}/n{p}", rec))
+    return out
+
+
+def run_workload(w: Workload, quick: bool = True, *,
+                 cache: TranslationCache | None = None) -> list[str]:
+    """Execute one workload (declarative or custom) and emit its CSV."""
+    if w.runner is not None:
+        return list(w.runner(quick))
+    cache = cache if cache is not None else GLOBAL_CACHE
+    s0 = cache.stats()
+    lines = [
+        csv_line(label, rec, w.derived(rec) if w.derived else "")
+        for label, rec in collect_records(w, quick, cache=cache)
+    ]
+    if w.post is not None:
+        lines.extend(w.post(quick))
+    s1 = cache.stats()
+    print(
+        f"# {w.name} cache: "
+        f"{s1['compile_hits'] - s0['compile_hits']} compile hits / "
+        f"{s1['compile_misses'] - s0['compile_misses']} misses",
+        flush=True,
+    )
+    return emit(lines)
+
+
+def run_module(name: str, quick: bool = True) -> list[str]:
+    """Registry lookup + run — the body of every thin ``fig*`` module."""
+    load_builtins()
+    return run_workload(_lookup(name), quick)

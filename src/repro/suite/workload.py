@@ -1,0 +1,75 @@
+"""The declarative experiment record.
+
+A :class:`Workload` bundles everything the generic runner needs to
+reproduce one paper figure (or any new scenario): a pattern factory, the
+driver-config variants to contrast, the working-set ladder, and the
+validation/parametric policies. Fully custom experiments (e.g. the
+Pallas tile sweep) register a ``runner`` instead and bypass the generic
+loop while still living in the same registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core import DriverConfig, PatternSpec, Record
+
+from .ladders import Ladder
+
+__all__ = ["VariantSpec", "Workload"]
+
+PatternFactory = Callable[[Mapping[str, int]], PatternSpec]
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """One measured configuration of a workload.
+
+    ``pattern`` overrides the workload-level factory (used by sweeps
+    whose pattern changes per variant, e.g. the stream-count sweep).
+    """
+
+    label: str
+    config: DriverConfig
+    pattern: PatternFactory | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One registered experiment.
+
+    Declarative fields drive the shared runner; ``runner`` (if set)
+    replaces it wholesale. ``variants`` may be a callable of ``quick``
+    for sweeps whose variant list depends on the mode.
+
+    ``parametric`` is the ladder-sharing policy applied to variants that
+    leave ``DriverConfig.parametric`` at its default: "auto" (default)
+    shares one executable across the ladder whenever the schedule lowers
+    symbolically, False always specializes, True requires sharing.
+    """
+
+    name: str                                  # registry key
+    figure: str = ""                           # CSV label prefix
+    title: str = ""                            # one-line description
+    pattern: PatternFactory | None = None
+    variants: "tuple[VariantSpec, ...] | Callable[[bool], Sequence[VariantSpec]]" = ()
+    ladder: Ladder | None = None
+    validate: bool = True
+    parametric: bool | str = "auto"
+    derived: Callable[[Record], str] | None = None   # CSV derived column
+    post: Callable[[bool], list[str]] | None = None  # extra lines after ladder
+    runner: Callable[[bool], list[str]] | None = None  # full custom escape
+
+    def variant_list(self, quick: bool) -> tuple[VariantSpec, ...]:
+        v = self.variants(quick) if callable(self.variants) else self.variants
+        return tuple(v)
+
+    def __post_init__(self) -> None:
+        if self.runner is None:
+            if self.pattern is None and not self.variants:
+                raise ValueError(
+                    f"workload {self.name!r} needs either a runner or "
+                    "pattern+variants+ladder"
+                )
+            if self.ladder is None:
+                raise ValueError(f"workload {self.name!r} needs a ladder")

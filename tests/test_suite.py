@@ -1,0 +1,253 @@
+"""Suite-layer + parametric-lowering tests (the PR-2 acceptance contract).
+
+Covers: symbolic lowering equivalence with concrete lowering, the
+parametric executable's value correctness against the serial oracle,
+the one-compile-per-ladder cache property, parametric-vs-specialized
+record equivalence for every registered declarative workload in quick
+mode, registry round-trip against the harness executor, the ladder/CSV
+re-export shim, the Spatter pattern specs, and the disk-cache keying of
+``TranslationCache.stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Affine,
+    Driver,
+    DriverConfig,
+    SymbolicLowerError,
+    TranslationCache,
+    domain,
+    gather,
+    gather_scatter,
+    identity,
+    jacobi1d,
+    scatter,
+    triad,
+)
+from repro import suite
+from repro.suite import collect_records, load_builtins
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))  # make the benchmarks package importable
+
+
+# ---------------------------------------------------------------------------
+# symbolic lowering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sch", [
+    identity(),
+    identity().tile_by_count("i", 4, outer="prog", inner="i"),
+    identity().interleave("i", 2),
+    identity().reverse("i"),
+    identity().tile("i", 8),
+    identity().tile_by_count("i", 4).interchange("i_T", "i_t"),
+])
+def test_symbolic_lowering_concretizes_to_concrete(sch):
+    dom = domain(("i", 1, Affine.of("n") - 1))
+    pnest = sch.lower_symbolic(dom, ("n",))
+    for n in (10, 18, 66, 130):
+        env = {"n": n}
+        if not pnest.admits(env):
+            continue
+        assert pnest.concretize(env) == sch.lower(dom, env), (sch.name, n)
+
+
+def test_symbolic_lowering_records_divisibility_constraints():
+    dom = domain(("i", 0, "n"))
+    pnest = identity().tile_by_count("i", 4).lower_symbolic(dom, ("n",))
+    assert pnest.constraints == ((Affine.of("n"), 4),)
+    assert pnest.admits({"n": 128}) and not pnest.admits({"n": 130})
+
+
+def test_symbolic_lowering_rejects_triangular_domains():
+    dom = domain(("i", 0, "n"), ("j", 0, "i"))
+    with pytest.raises(SymbolicLowerError):
+        identity().lower_symbolic(dom, ("n",))
+
+
+def test_tile_by_count_matches_old_unified_tile():
+    """The unified template's new split must generate the same nest as
+    the old tile(extent // programs) form."""
+    dom = domain(("i", 0, "n"))
+    env = {"n": 64}
+    new = identity().tile_by_count("i", 4, outer="prog", inner="i")
+    old = identity().tile("i", 16, outer="prog", inner="i")
+    assert (list(new.lower(dom, env).executed_points())
+            == list(old.lower(dom, env).executed_points()))
+
+
+# ---------------------------------------------------------------------------
+# parametric pipeline: values + cache economics
+# ---------------------------------------------------------------------------
+
+
+def test_parametric_values_match_oracle_across_templates():
+    for tmpl, factory, ns in [
+        ("unified", triad, [256, 512, 1024]),
+        ("independent", triad, [256, 512]),
+        ("unified", jacobi1d, [258, 514]),
+    ]:
+        d = Driver(
+            lambda env, f=factory: f(),
+            DriverConfig(template=tmpl, programs=4, ntimes=2, reps=1,
+                         parametric="auto"),
+            cache=TranslationCache(),
+        )
+        d.validate_parametric(ns)
+
+
+def test_parametric_ladder_compiles_exactly_once():
+    """A 4-point ladder produces exactly 1 compile (and lower) miss on
+    the parametric path — the whole ladder shares one executable."""
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="unified", programs=4, ntimes=2,
+                            reps=1, parametric="auto"), cache=cache)
+    recs = d.run([256, 512, 1024, 2048])
+    s = cache.stats()
+    assert s["compile_misses"] == 1 and s["lower_misses"] == 1
+    assert s["compile_hits"] == 3 and s["lower_hits"] == 3
+    assert all(r.extra["parametric"] for r in recs)
+    assert {r.extra["capacity"] for r in recs} == {2048}
+    assert [r.n for r in recs] == [256, 512, 1024, 2048]
+
+
+def test_parametric_falls_back_when_constraints_fail():
+    """auto mode: a ladder whose points violate a symbolic divisibility
+    assumption (here tile(48) with 48 ∤ n — the concrete path handles it
+    with guards) silently specializes instead of sharing an executable."""
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=2, ntimes=2,
+                            reps=1, schedule=identity().tile("i", 48),
+                            parametric="auto"), cache=cache)
+    recs = d.run([256, 128])
+    assert not any(r.extra["parametric"] for r in recs)
+    assert cache.stats()["compile_misses"] == 2
+
+
+def test_parametric_true_raises_when_unsupported():
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="unified", programs=4, ntimes=2,
+                            reps=1, backend="pallas", parametric=True),
+               cache=TranslationCache())
+    with pytest.raises(SymbolicLowerError):
+        d.run([256])
+
+
+# ---------------------------------------------------------------------------
+# registered workloads: parametric-vs-specialized record equivalence
+# ---------------------------------------------------------------------------
+
+_IDENTITY_FIELDS = ("pattern", "template", "schedule", "backend", "n",
+                    "working_set_bytes", "programs", "ntimes", "level")
+
+
+def _shrunk(w):
+    """Same workload with a cheap measurement budget (records stay
+    comparable across modes because both use the same configs)."""
+    variants = tuple(
+        dataclasses.replace(
+            v, config=dataclasses.replace(
+                v.config, ntimes=min(v.config.ntimes, 4), reps=1))
+        for v in w.variant_list(True)
+    )
+    return dataclasses.replace(w, variants=variants, post=None)
+
+
+def test_every_registered_workload_parametric_equals_specialized():
+    load_builtins()
+    declarative = [w for w in suite.workloads() if w.runner is None]
+    assert len(declarative) >= 9
+    for w in declarative:
+        ws = _shrunk(w)
+        spec = collect_records(ws, quick=True, cache=TranslationCache(),
+                               parametric=False)
+        par = collect_records(ws, quick=True, cache=TranslationCache(),
+                              parametric="auto")
+        assert [lbl for lbl, _ in spec] == [lbl for lbl, _ in par], w.name
+        for (lbl, rs), (_, rp) in zip(spec, par):
+            for f in _IDENTITY_FIELDS:
+                assert getattr(rs, f) == getattr(rp, f), (w.name, lbl, f)
+
+
+def test_at_least_one_workload_shares_a_single_executable():
+    load_builtins()
+    w = _shrunk(suite.workload("fig05_barriers"))
+    cache = TranslationCache()
+    recs = collect_records(w, quick=True, cache=cache, parametric="auto")
+    n_points = len(w.ladder.points(True))
+    assert n_points >= 4
+    for label, rec in recs:
+        assert rec.extra["parametric"], label
+    # one compile per (variant), not per (variant, point)
+    assert cache.stats()["compile_misses"] == len(w.variant_list(True))
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip + shims
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip_with_harness_executor():
+    from benchmarks.run import registered_names
+
+    names = registered_names()
+    assert names == list(suite.names())
+    for expected in ("fig05_barriers", "fig06_dataspaces", "fig07_streams",
+                     "fig09_interleave", "fig10_counters", "fig12_jacobi1d",
+                     "fig14_jacobi2d", "fig15_jacobi3d", "spatter_uniform",
+                     "fig16_tile_sweep", "roofline"):
+        assert expected in names
+    # lookups resolve and are well-formed
+    for name in names:
+        w = suite.workload(name)
+        assert w.name == name
+        assert w.runner is not None or w.ladder is not None
+
+
+def test_common_shim_reexports_suite_ladders():
+    from benchmarks import common
+    from repro.suite import FULL_SETS, QUICK_GRID, QUICK_SETS, WORKING_SETS
+
+    assert common.QUICK_SETS == QUICK_SETS
+    assert common.sets(True) == QUICK_SETS and common.sets(False) == FULL_SETS
+    assert common.grids(True) == QUICK_GRID
+    assert tuple(QUICK_SETS) == WORKING_SETS.quick
+
+
+# ---------------------------------------------------------------------------
+# Spatter patterns + disk-cache stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("factory", [gather, scatter, gather_scatter])
+@pytest.mark.parametrize("template", ["unified", "independent"])
+def test_spatter_patterns_validate(factory, template):
+    d = Driver(lambda env: factory(stride=4),
+               DriverConfig(template=template, programs=4, ntimes=2,
+                            reps=1), cache=TranslationCache())
+    d.validate()
+
+
+def test_spatter_accounting():
+    pat = gather(stride=8)
+    assert pat.bytes_per_point() == 8  # one read + one write, f32
+    shapes = {s.name: s.concrete_shape({"n": 64}) for s in pat.spaces}
+    assert shapes == {"D": (64,), "S": (512,)}
+
+
+def test_stats_report_disk_cache_counters():
+    s = TranslationCache().stats()
+    assert set(s["disk"]) == {"enabled", "hits", "misses"}
+    assert s["disk"]["hits"] >= 0 and s["disk"]["misses"] >= 0
