@@ -68,6 +68,7 @@ register(Workload(
     name="fig16_tile_sweep",
     figure="fig16",
     title="spatial tile-size sweep for the blocked Jacobi-3D kernels",
+    tags=("paper-figs",),
     runner=_tile_sweep,
 ))
 

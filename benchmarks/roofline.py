@@ -116,6 +116,7 @@ register(Workload(
     name="roofline",
     figure="roofline",
     title="roofline refresh from the dry-run artifacts",
+    tags=("paper-figs",),
     runner=_roofline,
 ))
 

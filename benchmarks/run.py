@@ -1,20 +1,24 @@
 """Benchmark harness entrypoint — a generic executor over the registry.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05,fig16]
+                                            [--tag spatter,mess]
                                             [--smoke] [--list]
                                             [--out BENCH.json]
 
 Every experiment is a declarative ``repro.suite`` Workload (pattern x
-schedule variants x ladder x validation policy) registered by name; this
-module just iterates the registry and prints the paper's machine-parsable
-``name,us_per_call,derived`` CSV contract. ``--list`` prints the
-registered names, ``--only`` filters by name or figure prefix.
+schedule variants x sweep plan x validation policy) registered by name;
+this module just iterates the registry and prints the paper's
+machine-parsable ``name,us_per_call,derived`` CSV contract. ``--list``
+prints the registered names (with tags), ``--only`` filters by name or
+figure prefix, ``--tag`` filters by scenario-family tag (``paper-figs``,
+``spatter``, ``mess``, ``latency``); both filters compose (AND).
 
-``--smoke`` runs every workload in quick mode and writes a JSON perf
-ledger (default ``BENCH_PR2.json`` at the repo root) with per-workload
-wall time plus the process-wide translation-cache hit rate (in-process
-lower/compile counters and the jax disk compile cache), so successive
-PRs can track the harness's own perf trajectory.
+``--smoke`` runs every selected workload in quick mode and writes a JSON
+perf ledger (default ``BENCH_PR3.json`` at the repo root) with
+per-workload wall time plus the process-wide translation-cache hit rate,
+capacity, and evictions (in-process lower/compile counters and the jax
+disk compile cache), so successive PRs can track the harness's own perf
+trajectory.
 """
 from __future__ import annotations
 
@@ -84,11 +88,14 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated workload names or figure prefixes")
+    ap.add_argument("--tag", default="",
+                    help="comma-separated scenario-family tags "
+                         "(paper-figs, spatter, mess, latency)")
     ap.add_argument("--list", action="store_true",
-                    help="print registered workload names and exit")
+                    help="print registered workload names (+tags) and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="quick mode + write a JSON perf ledger")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR2.json"),
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR3.json"),
                     help="ledger path for --smoke")
     args = ap.parse_args(argv)
 
@@ -96,16 +103,33 @@ def main(argv: list[str] | None = None) -> None:
     from repro import suite
 
     names, import_errors = load_registry()
-    if args.list:
-        for name in names:
-            print(name)
-        return
-
     only = set(args.only.split(",")) if args.only else None
+    tags = set(args.tag.split(",")) if args.tag else None
+
+    def tag_selected(name: str) -> bool:
+        if tags is None:
+            return True
+        try:
+            w = suite.workload(name)
+        except KeyError:
+            # import-failed custom module: its tags are unknowable, so
+            # keep it selected — a broken module must fail loud, not
+            # silently pass a tagged smoke run
+            return True
+        return bool(tags & set(w.tags))
 
     def selected(name: str, figure: str = "") -> bool:
-        return (only is None or name in only or figure in only
-                or name.split("_")[0] in only)
+        named = (only is None or name in only or figure in only
+                 or name.split("_")[0] in only)
+        return named and tag_selected(name)
+
+    if args.list:
+        for name in names:
+            if not selected(name, suite.workload(name).figure):
+                continue
+            wtags = ",".join(suite.workload(name).tags)
+            print(f"{name}" + (f"  [{wtags}]" if wtags else ""))
+        return
 
     print("name,us_per_call,derived")
     failures = []

@@ -1,12 +1,14 @@
 """CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR2.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR3.json]
 
-Thin alias for ``benchmarks.run --smoke``: runs the quick-mode ladder of
-every registry workload and writes per-workload wall time plus the
-translation-cache hit rate (in-process and jax disk cache) to the JSON
-ledger, so future PRs can assert the harness's perf trajectory instead
-of guessing.
+Thin alias for ``benchmarks.run --smoke``: runs the quick-mode plan of
+every registry workload (including the multi-axis ``mess_load_sweep``,
+``pointer_chase``, and ``spatter_nonuniform`` scenarios) and writes
+per-workload wall time plus the translation-cache hit rate, capacity,
+and eviction count (in-process and jax disk cache) to the JSON ledger,
+so future PRs can assert the harness's perf trajectory instead of
+guessing.
 """
 from __future__ import annotations
 

@@ -3,14 +3,16 @@
 #
 #   scripts/ci.sh [LEDGER_PATH]
 #
-# Fails on: any pytest failure, any benchmark workload failure, or a
-# process-wide translation-cache hit rate below 0.5 on the smoke suite
-# (the parametric-ladder + staged-pipeline floor this repo maintains).
+# Fails on: any pytest failure, any benchmark workload failure, a missing
+# multi-axis scenario (mess_load_sweep / pointer_chase /
+# spatter_nonuniform must run in smoke mode), or a process-wide
+# translation-cache hit rate below 0.5 on the smoke suite (the
+# parametric-ladder + staged-pipeline floor this repo maintains).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR2.json}"
+LEDGER="${1:-BENCH_PR3.json}"
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q
@@ -26,13 +28,21 @@ ledger = json.load(open(sys.argv[1]))
 failures = ledger["failures"]
 if failures:
     sys.exit(f"FAIL: benchmark workloads failed: {failures}")
+seconds = ledger["module_seconds"]
+missing = [s for s in ("mess_load_sweep", "pointer_chase",
+                       "spatter_nonuniform") if s not in seconds]
+if missing:
+    sys.exit(f"FAIL: multi-axis scenarios did not run: {missing}")
 tc = ledger["translation_cache"]
 rate = tc["hit_rate"]
 print(f"translation-cache hit rate: {rate:.3f} "
       f"(lower {tc['lower_hits']}/{tc['lower_hits']+tc['lower_misses']}, "
       f"compile {tc['compile_hits']}/{tc['compile_hits']+tc['compile_misses']}, "
+      f"evictions {tc['evictions']}/{tc['capacity']}, "
       f"disk {tc['disk']})")
 if rate < 0.5:
     sys.exit(f"FAIL: translation-cache hit rate {rate:.3f} < 0.5")
+for scen in ("mess_load_sweep", "pointer_chase", "spatter_nonuniform"):
+    print(f"{scen}: {seconds[scen]:.1f}s")
 print("OK")
 EOF

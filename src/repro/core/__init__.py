@@ -23,6 +23,7 @@ from .pattern import (
     jacobi2d,
     jacobi3d,
     nstream,
+    pointer_chase,
     scatter,
     stream_copy,
     stream_scale,
@@ -56,7 +57,14 @@ from .drivers import (
     independent_view,
     unified_program_schedule,
 )
-from .measure import Record, classify_level, hlo_counters, tile_traffic, time_fn
+from .measure import (
+    Record,
+    classify_level,
+    hlo_counters,
+    latency_ns,
+    tile_traffic,
+    time_fn,
+)
 from .autotune import SweepResult, Variant, sweep
 
 __all__ = [
@@ -65,7 +73,7 @@ __all__ = [
     "Access", "DataSpace", "PatternSpec", "Statement",
     "triad", "stream_copy", "stream_scale", "stream_sum", "nstream",
     "jacobi1d", "jacobi2d", "jacobi3d",
-    "gather", "scatter", "gather_scatter",
+    "gather", "scatter", "gather_scatter", "pointer_chase",
     "lower_jax", "lower_jax_parametric", "lower_pallas", "serial_oracle",
     "plan_nest", "NestPlan",
     "Lowered", "Compiled", "ParamLowered", "ParamCompiled",
@@ -74,6 +82,7 @@ __all__ = [
     "disk_cache_stats",
     "Driver", "DriverConfig", "Prepared",
     "independent_view", "unified_program_schedule",
-    "Record", "classify_level", "hlo_counters", "tile_traffic", "time_fn",
+    "Record", "classify_level", "hlo_counters", "latency_ns",
+    "tile_traffic", "time_fn",
     "SweepResult", "Variant", "sweep",
 ]

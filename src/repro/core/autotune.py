@@ -5,22 +5,24 @@ The paper's workflow: express a kernel once, then fork schedule variants
 ``sweep`` automates that loop and returns the argmax; the launcher's perf
 pass uses it to pick Pallas block shapes for the model kernels.
 
-Sweeps run through the staged lower/compile pipeline and share one
-translation cache across all variants and working sets: a variant is
-validated once (not per working set), repeated (variant, n) tuples hit
-the compiled-executable cache, and the result carries the cache's
-hit/miss accounting so callers can see what the sweep actually paid for.
+``sweep`` is a thin facade over the suite's plan engine
+(:mod:`repro.suite.engine`): the working sets become a one-env-axis
+:class:`~repro.suite.axes.SweepPlan` and every variant runs it through
+the staged lower/compile pipeline sharing one translation cache — a
+variant is validated once (not per working set), repeated (variant, n)
+tuples hit the compiled-executable cache, and the result carries the
+cache's hit/miss accounting so callers can see what the sweep actually
+paid for.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Mapping, Sequence
 
-from .drivers import Driver, DriverConfig
+from .drivers import DriverConfig
 from .measure import Record
 from .pattern import PatternSpec
-from .schedule import Schedule
-from .staging import GLOBAL_CACHE, TranslationCache, precompile
+from .staging import GLOBAL_CACHE, TranslationCache
 
 __all__ = ["Variant", "SweepResult", "sweep"]
 
@@ -56,19 +58,21 @@ def sweep(
 
     All variants share ``cache`` (default: the process-wide cache), and
     every (variant, working set) executable is staged up front so the
-    XLA compiles overlap before any timing starts.
+    XLA compiles overlap before any timing starts. Executes through the
+    suite plan engine (imported lazily — ``repro.suite`` depends on
+    ``repro.core``, not vice versa at import time).
     """
+    from repro.suite.axes import SweepPlan, env_axis
+    from repro.suite.engine import run_plan
+    from repro.suite.workload import VariantSpec
+
     cache = cache if cache is not None else GLOBAL_CACHE
-    drivers = [Driver(pattern_factory, v.config, cache=cache) for v in variants]
-    precompile([
-        (lambda d=d: d.prepare(working_sets, parallel=False))
-        for d in drivers
-    ])
-    records: list[tuple[str, Record]] = []
-    for v, d in zip(variants, drivers):
-        if validate and v.config.validate_n:
-            d.validate()
-        for rec in d.run(working_sets):
-            records.append((v.name, rec))
+    plan = SweepPlan.product(env_axis(tuple(working_sets)))
+    rows = run_plan(
+        pattern_factory,
+        [VariantSpec(v.name, v.config) for v in variants],
+        plan, quick=True, cache=cache, validate=validate, parametric=None,
+    )
+    records = [(row.variant, row.record) for row in rows]
     best = max(records, key=lambda nr: key(nr[1]))
     return SweepResult(records, best, cache_stats=cache.stats())

@@ -212,6 +212,10 @@ def serial_oracle(
     within a sweep; schedule bijectivity keeps instance writes disjoint).
     ``force_loop=True`` pins the point-by-point reference (tests).
     """
+    if pattern.oracle is not None:
+        # serial-dependent patterns (pointer chase) carry their own
+        # ground truth; the affine replay below cannot express them
+        return pattern.oracle(pattern, arrays, env, ntimes)
     arrays = {k: np.array(v) for k, v in arrays.items()}
     names = pattern.domain.names
     stmt = pattern.statement
@@ -336,6 +340,15 @@ def lower_jax(
     ``plan`` lets the staged pipeline reuse an already-resolved NestPlan
     instead of re-deriving access rows.
     """
+    if pattern.kernel is not None:
+        # serial-dependent patterns replace the generated step wholesale;
+        # schedule transforms would be silently ignored, so refuse them
+        if schedule.transforms:
+            raise ValueError(
+                f"pattern {pattern.name!r} has a custom kernel; schedule "
+                f"{schedule.name!r} cannot be applied to it"
+            )
+        return pattern.kernel(pattern, env)
     if plan is None:
         plan = plan_nest(pattern, schedule, env)
     nest = plan.nest
@@ -514,6 +527,13 @@ def lower_jax_parametric(
     ``ParamNest.admits``: every requested env must satisfy the nest's
     divisibility constraints.
     """
+    if pattern.kernel is not None:
+        from .schedule import SymbolicLowerError
+
+        raise SymbolicLowerError(
+            f"pattern {pattern.name!r} has a custom kernel; the parametric "
+            "path cannot share it (env is baked into the step)"
+        )
     if pnest is None:
         pnest = schedule.lower_symbolic(pattern.domain, params)
     stmt = pattern.statement
@@ -638,6 +658,11 @@ def lower_pallas(
     The output space is aliased to its input so un-iterated elements
     (stencil borders) keep their initial values, matching the oracle.
     """
+    if pattern.kernel is not None:
+        raise NotImplementedError(
+            f"pattern {pattern.name!r} has a custom (jax) kernel; "
+            "the pallas backend cannot lower it"
+        )
     if plan is None:
         plan = plan_nest(pattern, schedule, env)
     nest = plan.nest

@@ -84,6 +84,12 @@ def independent_view(pattern: PatternSpec, programs: int, pad: int = 0) -> Patte
     p = "p"
     if p in pattern.domain.names:
         raise ValueError("pattern already has a 'p' iterator")
+    if pattern.kernel is not None:
+        raise ValueError(
+            f"pattern {pattern.name!r} has a custom kernel; the independent "
+            "template's access rewrite cannot apply to it (use unified with "
+            "programs=1)"
+        )
 
     def pad_shape(shape):
         first = Affine.of(shape[0]) + pad
@@ -268,8 +274,16 @@ class Driver:
         cfg = self.cfg
         if cfg.backend != "jax":
             return False
+        # only the "n" param stays symbolic: points that disagree on any
+        # *other* env entry cannot share one executable
+        rest = {tuple(sorted((k, v) for k, v in e.items() if k != "n"))
+                for e in envs}
+        if len(rest) > 1:
+            return False
         try:
             pat, sch, _ = self._templated(cap_env)
+            if pat.kernel is not None:
+                return False  # custom kernels bake env into the step
             pnest = sch.lower_symbolic(pat.domain, ("n",))
         except SymbolicLowerError:
             return False
@@ -318,10 +332,27 @@ class Driver:
         return (pat, lowered.schedule, lowered.env, compiled,
                 tuple(arrays0[k] for k in names), names)
 
-    def prepare(self, working_sets: Sequence[int],
+    @staticmethod
+    def _point_envs(points: "Sequence[int | Mapping[str, int]]",
+                    env_extra: Mapping[str, int] | None) -> list[dict]:
+        """Normalize measurement points to env dicts: a bare int is the
+        working set ``n`` (the ladder form); a mapping is a full env
+        point (the plan-engine form, any env axes)."""
+        envs = []
+        for p in points:
+            if isinstance(p, Mapping):
+                e = {str(k): int(v) for k, v in p.items()}
+            else:
+                e = {"n": int(p)}
+            e.update({str(k): int(v) for k, v in (env_extra or {}).items()})
+            envs.append(e)
+        return envs
+
+    def prepare(self, working_sets: "Sequence[int | Mapping[str, int]]",
                 env_extra: Mapping[str, int] | None = None,
                 parallel: bool = True) -> list[Prepared]:
-        """Stage all working-set points.
+        """Stage all measurement points (ints = working sets, mappings =
+        full env points).
 
         Parametric path (``cfg.parametric``): the whole ladder maps onto
         ONE ``ParamLowered``/``ParamCompiled`` pair keyed at the ladder's
@@ -331,7 +362,7 @@ class Driver:
         then AOT-compile the points concurrently (XLA releases the GIL).
         """
         cfg = self.cfg
-        envs = [{"n": int(n), **(env_extra or {})} for n in working_sets]
+        envs = self._point_envs(working_sets, env_extra)
         # "auto" only shares when there is a ladder to share across: a
         # single-point run gains nothing from the parametric regime and
         # would pay its chunked-gather overhead for free, so it keeps the
@@ -403,7 +434,7 @@ class Driver:
 
     # -- measurement ---------------------------------------------------------
 
-    def run(self, working_sets: Sequence[int],
+    def run(self, working_sets: "Sequence[int | Mapping[str, int]]",
             env_extra: Mapping[str, int] | None = None) -> list[Record]:
         cfg = self.cfg
         records = []
@@ -445,6 +476,7 @@ class Driver:
                 level=classify_level(ws_bytes),
                 extra={
                     "barrier": cfg.sync_every_rep,
+                    "points": int(pts),
                     "compile_seconds": p.compiled.compile_seconds,
                     "lower_seconds": p.lowered.lower_seconds,
                     "cache_hit": p.compiled.from_cache,
@@ -459,7 +491,8 @@ class Driver:
             records.append(rec)
         return records
 
-    def validate_parametric(self, working_sets: Sequence[int],
+    def validate_parametric(self,
+                            working_sets: "Sequence[int | Mapping[str, int]]",
                             env_extra: Mapping[str, int] | None = None,
                             max_check_n: int | None = None) -> None:
         """Check the ladder-shared executable point-by-point against the
@@ -475,7 +508,7 @@ class Driver:
         checked points) like :meth:`validate`.
         """
         cfg = self.cfg
-        envs = [{"n": int(n), **(env_extra or {})} for n in working_sets]
+        envs = self._point_envs(working_sets, env_extra)
         cap_env = max(envs, key=lambda e: e["n"])
         if not self._parametric_viable(envs, cap_env):
             raise SymbolicLowerError(

@@ -37,6 +37,7 @@ __all__ = [
     "tile_traffic",
     "NATIVE_TILE",
     "Record",
+    "latency_ns",
 ]
 
 # TPU v5e native tile for f32 operands: 8 sublanes x 128 lanes.
@@ -182,6 +183,13 @@ class Record:
     level: str = ""            # which memory level the working set sits in
     extra: dict = dataclasses.field(default_factory=dict)
 
+    @property
+    def axis_point(self) -> dict:
+        """The sweep-plan coordinates that produced this record (axis
+        name -> labelled point), attached by the plan engine; empty for
+        records measured outside a plan."""
+        return dict(self.extra.get("axis_point", {}))
+
     def csv(self) -> str:
         us = self.seconds * 1e6
         return (
@@ -191,6 +199,18 @@ class Record:
 
     def json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
+
+
+def latency_ns(rec: "Record", accesses_per_point: int = 1) -> float:
+    """Per-access time of a record in ns — the latency view of a
+    measurement (``seconds`` covers ``ntimes`` sweeps of
+    ``extra["points"]`` iteration points each). For serially-dependent
+    patterns (pointer chase) this IS load-to-use latency; for throughput
+    patterns it is the Mess-style time-per-access under the record's
+    load point, paired with ``rec.gbs`` for bandwidth–latency curves.
+    """
+    pts = int(rec.extra.get("points", rec.n)) or 1
+    return rec.seconds / (rec.ntimes * pts * accesses_per_point) * 1e9
 
 
 def classify_level(working_set_bytes: int) -> str:

@@ -42,6 +42,7 @@ __all__ = [
     "gather",
     "scatter",
     "gather_scatter",
+    "pointer_chase",
 ]
 
 
@@ -92,6 +93,15 @@ class PatternSpec:
     domain: IterDomain
     # flops executed per iteration point (for arithmetic-intensity reports)
     flops_per_point: int = 1
+    # Serial-dependent patterns (pointer chase) cannot be expressed as an
+    # affine statement over a data-parallel domain. ``kernel(pattern,
+    # env) -> step(arrays) -> arrays`` replaces the generated jax step
+    # wholesale (the schedule must stay the identity — drivers enforce
+    # it), and ``oracle(pattern, arrays, env, ntimes) -> arrays`` is its
+    # numpy ground truth for the validation stage. The affine
+    # ``statement`` remains the accounting source (bytes per point).
+    kernel: Callable | None = None
+    oracle: Callable | None = None
 
     def space(self, name: str) -> DataSpace:
         for s in self.spaces:
@@ -294,6 +304,86 @@ def gather_scatter(stride: int = 8) -> PatternSpec:
         stmt,
         domain(("i", 0, "n")),
         flops_per_point=0,
+    )
+
+
+# -- pointer chase (latency, not bandwidth) ----------------------------------
+#
+# The load-to-use latency probe every memory characterization needs (the
+# lat_mem_rd lineage; Mess pairs exactly this with bandwidth under load):
+# H = P[H] repeated n times per sweep, where P is a single-cycle
+# pseudorandom permutation of [0, n). Every load's address depends on the
+# previous load's *value*, so the chain cannot be overlapped or
+# prefetched — per-step time is the load-to-use latency of whatever
+# level the working set sits in. Serial dependence is inexpressible as
+# an affine statement, so this spec carries a custom ``kernel``/
+# ``oracle`` pair; the affine statement remains for accounting only.
+
+
+def _chase_cycle(i: np.ndarray) -> np.ndarray:
+    """Single-cycle pseudorandom permutation of [0, n): visit elements in
+    a shuffled order and link each to the next. One cycle guarantees the
+    chase touches the whole working set; the shuffle defeats stride
+    prefetchers. Deterministic per size (seeded by n)."""
+    n = int(i.shape[0])
+    order = np.random.default_rng(0xC4A5E ^ n).permutation(n)
+    p = np.empty(n, dtype=np.int32)
+    p[order] = np.roll(order, -1).astype(np.int32)
+    return p
+
+
+def _chase_kernel(pattern: PatternSpec, env: Mapping[str, int]) -> Callable:
+    """``step(arrays)``: chase ``n`` serially-dependent loads through P,
+    parking the running index in the one-element head space H."""
+    steps = int(env["n"])
+
+    def step(arrays):
+        import jax
+
+        arrays = dict(arrays)
+        P = arrays["P"]
+        h = jax.lax.fori_loop(0, steps, lambda _, h: P[h], arrays["H"][0])
+        arrays["H"] = arrays["H"].at[0].set(h)
+        return arrays
+
+    return step
+
+
+def _chase_oracle(pattern: PatternSpec, arrays: Mapping[str, np.ndarray],
+                  env: Mapping[str, int], ntimes: int) -> dict:
+    out = {k: np.array(v) for k, v in arrays.items()}
+    P = out["P"]
+    h = int(out["H"][0])
+    for _ in range(int(ntimes) * int(env["n"])):
+        h = int(P[h])
+    out["H"][0] = h
+    return out
+
+
+def pointer_chase() -> PatternSpec:
+    """Serial pointer chase: H = P[H], n dependent loads per sweep.
+
+    A latency pattern: the derived metric is seconds / (ntimes * n) —
+    load-to-use ns per access — not GB/s (the statement's 8 bytes/point
+    accounting is nominal). Use with ``template="unified"`` and
+    ``programs=1``; the chain is inherently serial.
+    """
+    stmt = Statement(
+        reads=(Access("P", ("i",)),),
+        write=Access("H", (0,)),
+        combine=lambda vals, env: vals[0],
+    )
+    return PatternSpec(
+        "pointer_chase",
+        (
+            DataSpace("P", ("n",), "int32", _chase_cycle),
+            DataSpace("H", (1,), "int32", 0),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+        flops_per_point=0,
+        kernel=_chase_kernel,
+        oracle=_chase_oracle,
     )
 
 

@@ -36,6 +36,7 @@ import dataclasses
 import os
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Mapping, Sequence
 
@@ -135,6 +136,8 @@ def fingerprint_pattern(pattern: PatternSpec) -> tuple:
         _freeze(stmt.combine),
         pattern.domain.dims,
         pattern.flops_per_point,
+        _freeze(pattern.kernel),
+        _freeze(pattern.oracle),
     )
 
 
@@ -443,41 +446,51 @@ def _build_param_compiled(lowered: ParamLowered, ntimes: int,
 
 
 class TranslationCache:
-    """Keyed memo for both pipeline stages, with hit/miss accounting.
+    """Keyed LRU memo for both pipeline stages, with hit/miss accounting.
 
     Thread-safe for concurrent ``precompile`` workers: lookups and
     insertions are locked; builders run outside the lock, and
     concurrent requests for one key deduplicate onto a single in-
     flight build (waiters count as hits — they paid a wait, not a
     compile).
+
+    ``capacity`` bounds each stage's store: multi-axis plan grids
+    (config × pattern × env points) would otherwise pin executables
+    without limit in a long-lived exploration process. The least
+    recently *used* entry is evicted (a grid re-run in plan order keeps
+    its warm tail); evictions are counted in :meth:`stats`. Default:
+    :data:`DEFAULT_CAPACITY` per stage, overridable per instance or —
+    for the process-wide ``GLOBAL_CACHE`` — via ``REPRO_CACHE_CAPACITY``.
     """
 
-    def __init__(self) -> None:
+    DEFAULT_CAPACITY = 1024
+
+    def __init__(self, capacity: int | None = None) -> None:
+        if capacity is None:
+            capacity = self.DEFAULT_CAPACITY
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
         self._lock = threading.Lock()
-        self._lowered: dict[tuple, Lowered] = {}
-        self._compiled: dict[tuple, Compiled] = {}
+        self._lowered: "OrderedDict[tuple, Lowered]" = OrderedDict()
+        self._compiled: "OrderedDict[tuple, Compiled]" = OrderedDict()
         self._inflight: dict[tuple, Future] = {}
         self._validated: set[tuple] = set()
         self.lower_hits = 0
         self.lower_misses = 0
         self.compile_hits = 0
         self.compile_misses = 0
+        self.evictions = 0        # LRU executable/lowering evictions
+        self.validated_drops = 0  # validated-memo clears (separate event)
 
-    # bound the memo the same way schedule._LOWER_MEMO is bounded: a
-    # long-lived autotune/exploration process must not pin executables
-    # without limit. Crossing the cap drops the whole store (simple and
-    # rare) rather than tracking LRU order on the hot path.
-    MAX_ENTRIES_PER_STAGE = 1024
-
-    def _get_or_build(self, store: dict, key, builder,
+    def _get_or_build(self, store: "OrderedDict", key, builder,
                       kind: str) -> tuple[Any, bool]:
         with self._lock:
             hit = store.get(key)
             if hit is not None:
+                store.move_to_end(key)
                 setattr(self, f"{kind}_hits", getattr(self, f"{kind}_hits") + 1)
                 return hit, True
-            if len(store) >= self.MAX_ENTRIES_PER_STAGE:
-                store.clear()
             fut = self._inflight.get(key)
             if fut is None:
                 fut = Future()
@@ -499,6 +512,10 @@ class TranslationCache:
             raise
         with self._lock:
             store[key] = out
+            store.move_to_end(key)
+            while len(store) > self.capacity:
+                store.popitem(last=False)
+                self.evictions += 1
             self._inflight.pop(key, None)
         fut.set_result(out)
         return out, False
@@ -517,6 +534,12 @@ class TranslationCache:
 
     def mark_validated(self, key: tuple) -> None:
         with self._lock:
+            # bound the memo like the stage stores: re-validation is much
+            # cheaper than a compile, so crossing the cap just drops the
+            # set (no LRU bookkeeping on this path)
+            if len(self._validated) >= 4 * self.capacity:
+                self._validated.clear()
+                self.validated_drops += 1
             self._validated.add(key)
 
     # -- introspection -------------------------------------------------------
@@ -532,6 +555,9 @@ class TranslationCache:
                 "compile_hits": self.compile_hits,
                 "compile_misses": self.compile_misses,
                 "entries": len(self._lowered) + len(self._compiled),
+                "capacity": self.capacity,
+                "evictions": self.evictions,
+                "validated_drops": self.validated_drops,
                 "hit_rate": (hits / total) if total else 0.0,
                 "disk": disk_cache_stats(),
             }
@@ -543,9 +569,19 @@ class TranslationCache:
             self._validated.clear()
             self.lower_hits = self.lower_misses = 0
             self.compile_hits = self.compile_misses = 0
+            self.evictions = 0
+            self.validated_drops = 0
 
 
-GLOBAL_CACHE = TranslationCache()
+def _global_capacity() -> int | None:
+    raw = os.environ.get("REPRO_CACHE_CAPACITY", "")
+    try:
+        return int(raw) if raw else None
+    except ValueError:  # pragma: no cover - operator typo
+        return None
+
+
+GLOBAL_CACHE = TranslationCache(capacity=_global_capacity())
 
 
 # ---------------------------------------------------------------------------

@@ -9,12 +9,21 @@ pattern x schedule variants x working-set ladder x validation policy —
 registered by name, and one generic runner executes every entry, so a
 new scenario is ~10 lines of data instead of a hand-rolled script.
 
-    Ladder           named working-set ladders (quick/full points)
-    Workload         one experiment: variants + ladder + policies
+    Axis/SweepPlan   multi-axis sweep dimensions (env / config / pattern)
+    Ladder           named working-set ladders — one-env-axis plans
+    Workload         one experiment: variants + plan (or ladder) + policies
     register/...     the process-wide registry
-    run_workload     the single shared executor (stage -> validate ->
-                     measure -> CSV), parametric-by-default
+    run_plan         the plan engine (stage -> validate -> measure)
+    run_workload     the workload-level executor emitting the CSV contract
 """
+from .axes import (
+    Axis,
+    PlanPoint,
+    SweepPlan,
+    config_axis,
+    env_axis,
+    pattern_axis,
+)
 from .ladders import (
     FULL_GRID,
     FULL_SETS,
@@ -28,15 +37,27 @@ from .ladders import (
     fixed,
 )
 from .workload import VariantSpec, Workload
-from .registry import load_builtins, names, register, workload, workloads
+from .registry import (
+    all_tags,
+    load_builtins,
+    names,
+    register,
+    workload,
+    workloads,
+)
+from .engine import PlanRow, run_plan
 from .runner import collect_records, csv_line, emit, run_module, run_workload
 
 __all__ = [
+    "Axis", "PlanPoint", "SweepPlan",
+    "env_axis", "config_axis", "pattern_axis",
     "Ladder", "fixed",
     "WORKING_SETS", "INTERIOR_SETS", "GRID2", "GRID3",
     "QUICK_SETS", "FULL_SETS", "QUICK_GRID", "FULL_GRID",
     "VariantSpec", "Workload",
-    "register", "workload", "workloads", "names", "load_builtins",
+    "register", "workload", "workloads", "names", "all_tags",
+    "load_builtins",
+    "PlanRow", "run_plan",
     "run_workload", "run_module", "collect_records",
     "csv_line", "emit",
 ]

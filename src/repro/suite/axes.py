@@ -1,0 +1,194 @@
+"""Sweep axes and plans — the multi-axis generalization of ``Ladder``.
+
+AdaptMemBench explores memory behaviour along *application-specific*
+axes, but a :class:`~repro.suite.ladders.Ladder` can only model one of
+them: the working-set size. The scenarios the suite needs next sweep
+other things — Mess-style load points vary ``programs``/``ntimes``
+pressure, Spatter stride ladders vary a pattern-factory kwarg — so the
+sweep dimension itself has to be declarative.
+
+An :class:`Axis` is a named, typed sequence of points. Its ``kind`` says
+where each point lands when a plan point is materialized:
+
+    env       an environment parameter. Every plan needs one env axis
+              targeting the working-set parameter ``n`` (the engine
+              enforces this); further env axes may supply other domain/
+              shape parameters on top. Env axes are the ones the engine
+              can share one parametric executable across (the sharing
+              itself is along ``n``).
+    config    a :class:`~repro.core.DriverConfig` field (``programs``,
+              ``ntimes``, ``pad``, ...). Each distinct value is its own
+              specialized executable.
+    pattern   a keyword argument of the workload's pattern factory
+              (``stride`` for the Spatter ladders). Also specializes.
+
+A :class:`SweepPlan` combines axes by ``product`` (the full grid) or
+``zip`` (lockstep tuples) and expands, per mode, into labelled
+:class:`PlanPoint` values the engine executes. ``Ladder`` is re-expressed
+as a one-env-axis plan (see :meth:`Ladder.plan`), so every pre-existing
+workload runs through the same machinery unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+__all__ = [
+    "Axis",
+    "PlanPoint",
+    "SweepPlan",
+    "env_axis",
+    "config_axis",
+    "pattern_axis",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One named sweep dimension.
+
+    ``quick``/``full`` are the measurement points per mode (``full``
+    defaults to ``quick``). ``field`` is the target name — the env key,
+    DriverConfig field, or factory kwarg — and defaults to ``name``.
+    ``transform`` maps a labelled point to the applied value (the ladder
+    ``env_n`` analogue, e.g. Jacobi's ``n + 2`` halo); labels always
+    report the *un*-transformed point. ``fmt`` overrides the label
+    fragment (default ``f"{name}{point}"``). Both must be top-level
+    functions (or None) so axes stay hashable values.
+    """
+
+    name: str
+    kind: str                       # env | config | pattern
+    quick: tuple
+    full: tuple = ()
+    field: str = ""
+    transform: Callable[[Any], Any] | None = None
+    fmt: Callable[[Any], str] | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("env", "config", "pattern"):
+            raise ValueError(f"axis {self.name!r}: unknown kind {self.kind!r}")
+        if not self.quick:
+            raise ValueError(f"axis {self.name!r} has no points")
+        if not self.full:
+            object.__setattr__(self, "full", tuple(self.quick))
+
+    @property
+    def target(self) -> str:
+        return self.field or self.name
+
+    def points(self, quick: bool) -> tuple:
+        return self.quick if quick else self.full
+
+    def value(self, point):
+        return self.transform(point) if self.transform else point
+
+    def label(self, point) -> str:
+        return self.fmt(point) if self.fmt else f"{self.name}{point}"
+
+
+def env_axis(quick, full=(), *, name: str = "n", field: str = "",
+             transform: Callable | None = None,
+             fmt: Callable | None = None) -> Axis:
+    """An environment-parameter axis (default: the working set ``n``)."""
+    return Axis(name, "env", tuple(quick), tuple(full), field,
+                transform, fmt)
+
+
+def config_axis(name: str, quick, full=(), *, field: str = "",
+                fmt: Callable | None = None) -> Axis:
+    """A DriverConfig-field axis (``programs``, ``ntimes``, ``pad``, ...)."""
+    return Axis(name, "config", tuple(quick), tuple(full), field,
+                None, fmt)
+
+
+def pattern_axis(name: str, quick, full=(), *, field: str = "",
+                 fmt: Callable | None = None) -> Axis:
+    """A pattern-factory keyword axis (``stride`` for Spatter ladders)."""
+    return Axis(name, "pattern", tuple(quick), tuple(full), field,
+                None, fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPoint:
+    """One fully-resolved measurement point of a plan.
+
+    ``coords`` is the self-describing identity (axis name -> labelled
+    point) that lands in ``Record.extra["axis_point"]``; ``env``/
+    ``config``/``pattern_kwargs`` are the applied (transformed) values
+    split by destination. Points sharing ``group_key`` can run on one
+    driver, with their env entries forming the ladder the parametric
+    path may collapse onto a single executable.
+    """
+
+    coords: tuple[tuple[str, Any], ...]
+    env: tuple[tuple[str, Any], ...]
+    config: tuple[tuple[str, Any], ...]
+    pattern_kwargs: tuple[tuple[str, Any], ...]
+    label: str
+
+    def axis_point(self) -> dict:
+        return dict(self.coords)
+
+    @property
+    def group_key(self) -> tuple:
+        return (self.config, self.pattern_kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """A combination of axes: ``product`` (full grid, axis order = label
+    order = iteration order, last axis fastest) or ``zip`` (lockstep —
+    all axes must have equal point counts per mode)."""
+
+    axes: tuple[Axis, ...]
+    mode: str = "product"
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("product", "zip"):
+            raise ValueError(f"unknown plan mode {self.mode!r}")
+        if not self.axes:
+            raise ValueError("a SweepPlan needs at least one axis")
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names in plan: {names}")
+
+    @classmethod
+    def product(cls, *axes: Axis) -> "SweepPlan":
+        return cls(tuple(axes), "product")
+
+    @classmethod
+    def zip(cls, *axes: Axis) -> "SweepPlan":
+        return cls(tuple(axes), "zip")
+
+    @property
+    def env_axes(self) -> tuple[Axis, ...]:
+        return tuple(a for a in self.axes if a.kind == "env")
+
+    def points(self, quick: bool) -> tuple[PlanPoint, ...]:
+        per_axis = [a.points(quick) for a in self.axes]
+        if self.mode == "zip":
+            counts = {len(p) for p in per_axis}
+            if len(counts) != 1:
+                raise ValueError(
+                    "zip plan axes disagree on point counts: "
+                    f"{[(a.name, len(p)) for a, p in zip(self.axes, per_axis)]}"
+                )
+            tuples = zip(*per_axis)
+        else:
+            tuples = itertools.product(*per_axis)
+        out = []
+        for tup in tuples:
+            coords, env, config, pat = [], [], [], []
+            frags = []
+            for a, p in zip(self.axes, tup):
+                coords.append((a.name, p))
+                frags.append(a.label(p))
+                dest = {"env": env, "config": config, "pattern": pat}[a.kind]
+                dest.append((a.target, a.value(p)))
+            out.append(PlanPoint(
+                coords=tuple(coords), env=tuple(env), config=tuple(config),
+                pattern_kwargs=tuple(pat), label="/".join(frags),
+            ))
+        return tuple(out)

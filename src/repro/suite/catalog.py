@@ -2,10 +2,20 @@
 
 Each ``register(Workload(...))`` below replaces a hand-rolled
 ``benchmarks/fig*.py`` script: the pattern, the driver-config variants
-being contrasted, the working-set ladder, and the validation policy are
-*specified*; the shared runner does everything else. The Spatter-style
-``spatter_uniform`` entry is the scenario-diversity proof: a whole new
-gather/scatter suite in a dozen declarative lines.
+being contrasted, the sweep plan (or legacy working-set ladder), and the
+validation policy are *specified*; the shared plan engine does
+everything else. Tags group the scenario families for
+``benchmarks.run --tag``: ``paper-figs`` (the reproduction), ``spatter``
+(gather/scatter pattern ladders), ``mess`` (bandwidth–latency load
+points), ``latency`` (serial-dependence probes).
+
+The multi-axis entries at the bottom are the plan engine's
+scenario-generality proof: ``mess_load_sweep`` sweeps *DriverConfig*
+axes (``programs`` × ``ntimes`` pressure), ``spatter_nonuniform``
+sweeps a *pattern-factory* axis (stride) against the working-set axis,
+and ``pointer_chase`` rides a plain env axis with a serial-dependent
+custom kernel — three sweep dimensions no single-axis ladder could
+express.
 
 Fully custom experiments (the Pallas tile sweep, the roofline refresh)
 register themselves from their ``benchmarks`` modules with a ``runner``.
@@ -21,12 +31,15 @@ from repro.core import (
     jacobi1d,
     jacobi2d,
     jacobi3d,
+    latency_ns,
     nstream,
+    pointer_chase,
     scatter,
     triad,
 )
 from repro.core.measure import NATIVE_TILE_BYTES
 
+from .axes import SweepPlan, config_axis, env_axis, pattern_axis
 from .ladders import GRID2, GRID3, INTERIOR_SETS, WORKING_SETS, fixed
 from .registry import register
 from .workload import VariantSpec, Workload
@@ -42,6 +55,7 @@ register(Workload(
     name="fig05_barriers",
     figure="fig05",
     title="barrier vs fused (nowait) bandwidth per working set",
+    tags=("paper-figs",),
     pattern=lambda env: triad(),
     variants=(
         VariantSpec("barrier", DriverConfig(
@@ -62,6 +76,7 @@ register(Workload(
     name="fig06_dataspaces",
     figure="fig06",
     title="unified vs independent (tile-padded) data spaces for triad",
+    tags=("paper-figs",),
     pattern=lambda env: triad(),
     variants=(
         VariantSpec("unified", DriverConfig(
@@ -95,6 +110,7 @@ register(Workload(
     name="fig07_streams",
     figure="fig07",
     title="bandwidth vs number of concurrent data streams",
+    tags=("paper-figs",),
     variants=_fig07_variants,
     ladder=fixed(1 << 14, "streams_point"),
     validate=False,
@@ -133,6 +149,7 @@ register(Workload(
     name="fig09_interleave",
     figure="fig09",
     title="interleaved triad: schedule engine + dedicated kernels",
+    tags=("paper-figs",),
     pattern=lambda env: triad(),
     variants=tuple(
         VariantSpec(
@@ -164,6 +181,7 @@ register(Workload(
     name="fig10_counters",
     figure="fig10",
     title="false-sharing counters for three Jacobi-1D layouts",
+    tags=("paper-figs",),
     pattern=lambda env: jacobi1d(),
     variants=(
         VariantSpec("unified", DriverConfig(
@@ -188,6 +206,7 @@ register(Workload(
     name="fig12_jacobi1d",
     figure="fig12",
     title="Jacobi 1D under unified / independent / padded layouts",
+    tags=("paper-figs",),
     pattern=lambda env: jacobi1d(),
     variants=(
         VariantSpec("unified", DriverConfig(
@@ -207,6 +226,7 @@ register(Workload(
     name="fig14_jacobi2d",
     figure="fig14",
     title="Jacobi 2D (5-pt star), unified vs independent",
+    tags=("paper-figs",),
     pattern=lambda env: jacobi2d(),
     variants=(
         VariantSpec("unified", DriverConfig(
@@ -223,6 +243,7 @@ register(Workload(
     name="fig15_jacobi3d",
     figure="fig15",
     title="Jacobi 3D (7-pt), unified vs independent",
+    tags=("paper-figs",),
     pattern=lambda env: jacobi3d(),
     variants=(
         VariantSpec("unified", DriverConfig(
@@ -244,6 +265,7 @@ register(Workload(
     name="spatter_uniform",
     figure="spatter",
     title="Spatter UNIFORM:8 gather / scatter / gather-scatter",
+    tags=("spatter",),
     variants=(
         VariantSpec("gather", DriverConfig(
             template="unified", programs=4, ntimes=8, reps=2),
@@ -256,4 +278,100 @@ register(Workload(
             pattern=lambda env: gather_scatter(stride=8)),
     ),
     ladder=WORKING_SETS,
+))
+
+
+# -- mess_load_sweep: bandwidth–latency curve under load ---------------------
+# The Mess benchmark's (arXiv 2405.10170) core plot: how achieved
+# bandwidth AND per-access time move as memory pressure rises. The load
+# point is a *DriverConfig* grid — ``programs`` (concurrent per-program
+# streams; the independent template keeps every program count on the
+# strided fast path, and total footprint scales with the generator
+# count, as Mess's traffic generators do) × ``ntimes`` (burst length
+# between host syncs) — at one per-program working set: two axes the old
+# single-axis Ladder could not express.
+
+def _mess_derived(rec: Record) -> str:
+    # triad touches 3 streams per point: pair GB/s with time-per-access
+    us = latency_ns(rec, accesses_per_point=3) / 1e3
+    return f"{rec.gbs:.3f}GB/s;{us:.6f}us/access"
+
+
+register(Workload(
+    name="mess_load_sweep",
+    figure="mess",
+    title="Mess-style load points: triad under programs x ntimes pressure",
+    tags=("mess",),
+    pattern=lambda env: triad(),
+    variants=(
+        VariantSpec("triad", DriverConfig(template="independent", reps=2)),
+    ),
+    plan=SweepPlan.product(
+        config_axis("programs", (1, 2, 4, 8), (1, 2, 4, 8, 16)),
+        config_axis("ntimes", (8, 32), (8, 32, 128)),
+        env_axis((1 << 16,), (1 << 20,)),
+    ),
+    derived=_mess_derived,
+))
+
+
+# -- pointer_chase: load-to-use latency per working-set level ----------------
+# The serial-dependence probe (lat_mem_rd lineage): H = P[H] through a
+# single-cycle random permutation — no two loads overlap, so per-step
+# time is the latency of the level the working set sits in. The env axis
+# is the classic ladder; the kernel is the new serial-dependent
+# PatternSpec.
+
+def _chase_derived(rec: Record) -> str:
+    return f"{latency_ns(rec):.2f}ns/access;level={rec.level}"
+
+
+register(Workload(
+    name="pointer_chase",
+    figure="latency",
+    title="serial pointer-chase load-to-use latency per working-set level",
+    tags=("latency", "mess"),
+    pattern=lambda env: pointer_chase(),
+    variants=(
+        VariantSpec("chase", DriverConfig(
+            template="unified", programs=1, ntimes=2, reps=2,
+            validate_n=64)),
+    ),
+    plan=SweepPlan.product(
+        env_axis((1 << 10, 1 << 14, 1 << 17),
+                 (1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20)),
+    ),
+    parametric=False,          # custom kernel: env is baked into the step
+    derived=_chase_derived,
+))
+
+
+# -- spatter_nonuniform: stride-ladder axis over gather/scatter --------------
+# Spatter's (arXiv 1811.03743) headline study sweeps the *pattern*, not
+# just the working set: a stride ladder over gather / scatter /
+# gather-scatter index patterns. The stride is a pattern-factory axis
+# (each point builds its own PatternSpec, specialized per stride) crossed
+# with the working-set env axis (parametric: each stride's ladder shares
+# one executable).
+
+register(Workload(
+    name="spatter_nonuniform",
+    figure="spatter",
+    title="Spatter stride ladder over gather / scatter / gather-scatter",
+    tags=("spatter",),
+    variants=(
+        VariantSpec("gather", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env, stride=8: gather(stride=stride)),
+        VariantSpec("scatter", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env, stride=8: scatter(stride=stride)),
+        VariantSpec("gather_scatter", DriverConfig(
+            template="unified", programs=4, ntimes=8, reps=2),
+            pattern=lambda env, stride=8: gather_scatter(stride=stride)),
+    ),
+    plan=SweepPlan.product(
+        pattern_axis("stride", (1, 4, 16, 64), (1, 2, 4, 8, 16, 32, 64, 128)),
+        env_axis((1 << 10, 1 << 14), (1 << 10, 1 << 12, 1 << 14, 1 << 16)),
+    ),
 ))

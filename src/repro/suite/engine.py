@@ -1,0 +1,166 @@
+"""The plan-based execution engine — one executor for every sweep.
+
+Everything that measures (the workload runner, ``autotune.sweep``, the
+registered scenarios) converges here: a :class:`~repro.suite.axes.SweepPlan`
+expands into labelled points, the engine partitions them into *driver
+groups* (all points sharing config overrides and pattern kwargs — i.e.
+differing only along env axes — regardless of axis order; results are
+re-emitted in plan order), and each group executes through the staged
+lower→compile pipeline:
+
+* **env axes** form the group's working-set ladder. Where the schedule
+  lowers symbolically the whole group shares ONE parametric executable
+  (the PR 2 regime); otherwise each env point specializes, with the
+  translation cache deduplicating identical tuples across groups,
+  variants, and re-runs.
+* **config / pattern axes** change the executable's structure, so each
+  distinct combination is its own specialization — staged up front so
+  the XLA compiles overlap on worker threads.
+
+Each distinct executable is validated once against the serial oracle
+(memoized in the cache), and every record is annotated with
+``extra["axis_point"]`` — the axis-name → point mapping — so CSVs stay
+self-describing however many axes a scenario sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.core import Driver, GLOBAL_CACHE, Record, TranslationCache, precompile
+
+from .axes import PlanPoint, SweepPlan
+from .workload import VariantSpec
+
+__all__ = ["PlanRow", "run_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRow:
+    """One measured (variant, plan point) result."""
+
+    variant: str
+    point: PlanPoint
+    record: Record
+
+
+@dataclasses.dataclass
+class _Group:
+    """Plan points differing only along env axes: one driver, one
+    (possibly parametric) prepare/run call. ``order`` holds each point's
+    index in the expanded plan so results can be re-emitted in plan
+    order whatever the axis ordering was."""
+
+    variant: VariantSpec
+    points: list[PlanPoint]
+    order: list[int]
+    driver: Driver
+
+    @property
+    def envs(self) -> list[dict]:
+        return [dict(p.env) for p in self.points]
+
+
+def _wrap_factory(base: Callable, kwargs: tuple) -> Callable:
+    """Bind pattern-axis kwargs onto a factory; identity when empty so
+    kwarg-less legacy factories (``lambda env: triad()``) keep working."""
+    if not kwargs:
+        return base
+    kw = dict(kwargs)
+    return lambda env: base(env, **kw)
+
+
+def _grouped(variant: VariantSpec, base_factory: Callable | None,
+             points: Sequence[PlanPoint], cache: TranslationCache,
+             parametric) -> list[_Group]:
+    """Partition a variant's plan points by (config, pattern) identity.
+
+    Grouping is global, not run-length: an env axis ordered *before* a
+    config/pattern axis still lands all of a combination's env points in
+    one group, so parametric sharing never depends on axis order."""
+    factory = variant.pattern or base_factory
+    if factory is None:
+        raise ValueError(f"variant {variant.label!r} has no pattern factory")
+    groups: dict[tuple, _Group] = {}
+    for i, pt in enumerate(points):
+        if "n" not in dict(pt.env):
+            raise ValueError(
+                f"plan point {pt.label!r} has no 'n' env entry; every plan "
+                "needs an env axis targeting the working-set parameter 'n' "
+                "(further env axes may add other parameters on top)"
+            )
+        g = groups.get(pt.group_key)
+        if g is not None:
+            g.points.append(pt)
+            g.order.append(i)
+            continue
+        cfg = variant.config
+        if pt.config:
+            cfg = dataclasses.replace(cfg, **dict(pt.config))
+        if cfg.parametric is None and parametric is not None:
+            cfg = dataclasses.replace(cfg, parametric=parametric)
+        drv = Driver(_wrap_factory(factory, pt.pattern_kwargs), cfg,
+                     cache=cache)
+        groups[pt.group_key] = _Group(
+            variant=variant, points=[pt], order=[i], driver=drv
+        )
+    return list(groups.values())
+
+
+def run_plan(
+    factory: Callable | None,
+    variants: Sequence[VariantSpec],
+    plan: SweepPlan,
+    *,
+    quick: bool = True,
+    cache: TranslationCache | None = None,
+    validate: bool = True,
+    parametric: "bool | str | None" = None,
+    max_check_n: int = 4096,
+) -> list[PlanRow]:
+    """Execute ``plan`` under every variant; returns rows in
+    variant-major, plan-point order.
+
+    ``parametric`` is the env-axis-sharing policy applied to configs
+    that leave ``DriverConfig.parametric`` unset (None leaves them
+    unset — the driver then specializes). Every group's executables are
+    staged before any timing starts; validation runs once per distinct
+    executable (cache-memoized), with the parametric oracle replay
+    bounded to points ``<= max_check_n``.
+    """
+    cache = cache if cache is not None else GLOBAL_CACHE
+    points = plan.points(quick)
+    per_variant = [(v, _grouped(v, factory, points, cache, parametric))
+                   for v in variants]
+    groups = [g for _, gs in per_variant for g in gs]
+    # stage every group's executables before any timing starts
+    precompile([
+        (lambda g=g: g.driver.prepare(g.envs, parallel=False))
+        for g in groups
+    ])
+    rows: list[PlanRow] = []
+    for v, gs in per_variant:
+        indexed: list[tuple[int, PlanRow]] = []
+        for g in gs:
+            d = g.driver
+            envs = g.envs
+            if validate and d.cfg.validate_n:
+                # non-"n" env entries (extra env axes) must reach the
+                # oracle too; take them from the group's smallest point
+                extra = {k: v for k, v in
+                         min(envs, key=lambda e: e["n"]).items() if k != "n"}
+                d.validate({**extra, "n": d.cfg.validate_n})
+            recs = d.run(envs)
+            if validate and d.cfg.validate_n and any(
+                    r.extra.get("parametric") for r in recs):
+                # the executable that produced these numbers is the shared
+                # parametric one — oracle-check it too (small points only:
+                # the serial oracle's guarded fallback is O(points) Python);
+                # memoized per ladder, so re-runs don't re-pay it.
+                d.validate_parametric(envs, max_check_n=max_check_n)
+            for i, pt, rec in zip(g.order, g.points, recs):
+                rec.extra["axis_point"] = pt.axis_point()
+                indexed.append((i, PlanRow(v.label, pt, rec)))
+        # emit in plan order regardless of how grouping reordered work
+        rows.extend(row for _, row in sorted(indexed, key=lambda t: t[0]))
+    return rows

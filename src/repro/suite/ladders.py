@@ -6,11 +6,18 @@ reports) to the env ``n`` the driver actually runs (e.g. the Jacobi
 interiors run ``n + 2`` so the interior divides the program count).
 Workloads reference ladders by value, so the suite has one copy of the
 canonical sizes instead of one per ``fig*`` script.
+
+Since the multi-axis engine, a ladder is a thin compatibility wrapper: it
+*is* a one-env-axis :class:`~repro.suite.axes.SweepPlan` (see
+:meth:`Ladder.plan`), and every workload — ladder-declared or
+plan-declared — executes through the same plan engine.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
+
+from .axes import SweepPlan, env_axis
 
 __all__ = [
     "Ladder",
@@ -58,6 +65,14 @@ class Ladder:
 
     def env_n(self, point: int) -> int:
         return self.transform(point) if self.transform else point
+
+    def plan(self) -> SweepPlan:
+        """This ladder as a one-env-axis sweep plan (labels stay
+        ``n<point>``, envs stay ``transform(point)`` — byte-identical
+        CSVs through the plan engine)."""
+        return SweepPlan.product(
+            env_axis(self.quick, self.full, transform=self.transform)
+        )
 
 
 def fixed(n: int, name: str | None = None) -> Ladder:

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from .workload import Workload
 
-__all__ = ["register", "workload", "workloads", "names", "load_builtins"]
+__all__ = ["register", "workload", "workloads", "names", "all_tags",
+           "load_builtins"]
 
 _REGISTRY: dict[str, Workload] = {}
 
@@ -34,6 +35,14 @@ def workloads() -> tuple[Workload, ...]:
 
 def names() -> tuple[str, ...]:
     return tuple(_REGISTRY)
+
+
+def all_tags() -> tuple[str, ...]:
+    """Every tag used by a registered workload (sorted)."""
+    out: set[str] = set()
+    for w in _REGISTRY.values():
+        out.update(w.tags)
+    return tuple(sorted(out))
 
 
 def load_builtins() -> None:

@@ -1,19 +1,18 @@
 """The one executor every registered workload shares.
 
-Per workload: build one Driver per variant, stage every (variant, point)
-executable up front (XLA compiles overlap on worker threads; parametric
-ladders collapse onto a single executable), validate each variant once
-against the serial oracle, then measure and emit the paper's
-``name,us_per_call,derived`` CSV contract. The per-workload translation
-activity is reported as a cache-delta comment line.
+Per workload: expand the sweep plan (a legacy ladder is a one-axis
+plan), hand it to the plan engine — which stages every (variant, point)
+executable up front, shares one executable along parametric env axes,
+and validates each distinct executable once against the serial oracle —
+then emit the paper's ``name,us_per_call,derived`` CSV contract. The
+per-workload translation activity is reported as a cache-delta comment
+line.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
+from repro.core import GLOBAL_CACHE, Record, TranslationCache
 
-from repro.core import Driver, GLOBAL_CACHE, Record, TranslationCache, precompile
-
+from .engine import run_plan
 from .registry import load_builtins, workload as _lookup
 from .workload import Workload
 
@@ -32,21 +31,6 @@ def emit(lines: list[str]) -> list[str]:
     return lines
 
 
-def _drivers(w: Workload, quick: bool, cache: TranslationCache,
-             parametric: "bool | str | None" = None):
-    """(variant, driver) pairs with the workload's parametric policy
-    applied to configs that left ``parametric`` unset (None); a variant
-    that explicitly pins True/False/"auto" keeps its choice."""
-    out = []
-    policy = w.parametric if parametric is None else parametric
-    for v in w.variant_list(quick):
-        cfg = v.config
-        if cfg.parametric is None:
-            cfg = dataclasses.replace(cfg, parametric=policy)
-        out.append((v, Driver(v.pattern or w.pattern, cfg, cache=cache)))
-    return out
-
-
 def collect_records(
     w: Workload, quick: bool = True, *,
     cache: TranslationCache | None = None,
@@ -55,32 +39,20 @@ def collect_records(
     """Measure a declarative workload; returns ``(csv_label, record)``
     pairs. This is the runner's core loop, exposed so tests can compare
     parametric-vs-specialized executions of every registered workload.
+    ``parametric`` overrides the workload-level policy (None = use it).
     """
     if w.runner is not None:
         raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
     cache = cache if cache is not None else GLOBAL_CACHE
-    pts = list(w.ladder.points(quick))
-    ns = [w.ladder.env_n(p) for p in pts]
-    drivers = _drivers(w, quick, cache, parametric)
-    # stage every variant's executables before any timing starts
-    precompile([
-        (lambda d=d: d.prepare(ns, parallel=False)) for _, d in drivers
-    ])
-    out: list[tuple[str, Record]] = []
-    for v, d in drivers:
-        if w.validate and d.cfg.validate_n:
-            d.validate()
-        recs = d.run(ns)
-        if w.validate and d.cfg.validate_n and any(
-                r.extra.get("parametric") for r in recs):
-            # the executable that produced these numbers is the shared
-            # parametric one — oracle-check it too (small points only:
-            # the serial oracle's guarded fallback is O(points) Python);
-            # memoized per ladder, so re-runs don't re-pay it.
-            d.validate_parametric(ns, max_check_n=4096)
-        for p, rec in zip(pts, recs):
-            out.append((f"{w.figure}/{v.label}/n{p}", rec))
-    return out
+    rows = run_plan(
+        w.pattern, w.variant_list(quick), w.sweep_plan(),
+        quick=quick, cache=cache, validate=w.validate,
+        parametric=w.parametric if parametric is None else parametric,
+    )
+    return [
+        (f"{w.figure}/{row.variant}/{row.point.label}", row.record)
+        for row in rows
+    ]
 
 
 def run_workload(w: Workload, quick: bool = True, *,

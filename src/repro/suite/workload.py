@@ -1,11 +1,12 @@
 """The declarative experiment record.
 
-A :class:`Workload` bundles everything the generic runner needs to
+A :class:`Workload` bundles everything the plan engine needs to
 reproduce one paper figure (or any new scenario): a pattern factory, the
-driver-config variants to contrast, the working-set ladder, and the
-validation/parametric policies. Fully custom experiments (e.g. the
-Pallas tile sweep) register a ``runner`` instead and bypass the generic
-loop while still living in the same registry.
+driver-config variants to contrast, the sweep plan (or the legacy
+one-axis working-set ladder), and the validation/parametric policies.
+Fully custom experiments (e.g. the Pallas tile sweep) register a
+``runner`` instead and bypass the generic loop while still living in the
+same registry.
 """
 from __future__ import annotations
 
@@ -14,11 +15,12 @@ from typing import Callable, Mapping, Sequence
 
 from repro.core import DriverConfig, PatternSpec, Record
 
+from .axes import SweepPlan
 from .ladders import Ladder
 
 __all__ = ["VariantSpec", "Workload"]
 
-PatternFactory = Callable[[Mapping[str, int]], PatternSpec]
+PatternFactory = Callable[..., PatternSpec]  # factory(env, **pattern_kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +29,8 @@ class VariantSpec:
 
     ``pattern`` overrides the workload-level factory (used by sweeps
     whose pattern changes per variant, e.g. the stream-count sweep).
+    Factories take ``(env, **kwargs)``; pattern-axis points arrive as
+    the keyword arguments.
     """
 
     label: str
@@ -38,14 +42,22 @@ class VariantSpec:
 class Workload:
     """One registered experiment.
 
-    Declarative fields drive the shared runner; ``runner`` (if set)
+    Declarative fields drive the shared plan engine; ``runner`` (if set)
     replaces it wholesale. ``variants`` may be a callable of ``quick``
     for sweeps whose variant list depends on the mode.
 
-    ``parametric`` is the ladder-sharing policy applied to variants that
-    leave ``DriverConfig.parametric`` at its default: "auto" (default)
-    shares one executable across the ladder whenever the schedule lowers
-    symbolically, False always specializes, True requires sharing.
+    Exactly one of ``plan``/``ladder`` describes the sweep: ``plan`` is
+    the general multi-axis form, ``ladder`` the one-working-set-axis
+    compatibility form (internally ``ladder.plan()`` — identical CSVs).
+
+    ``parametric`` is the env-axis-sharing policy applied to variants
+    that leave ``DriverConfig.parametric`` at its default: "auto"
+    (default) shares one executable across the env-axis ladder whenever
+    the schedule lowers symbolically, False always specializes, True
+    requires sharing.
+
+    ``tags`` group scenario families (``paper-figs``, ``spatter``,
+    ``mess``, ``latency``) for ``benchmarks.run --tag`` filtering.
     """
 
     name: str                                  # registry key
@@ -54,22 +66,35 @@ class Workload:
     pattern: PatternFactory | None = None
     variants: "tuple[VariantSpec, ...] | Callable[[bool], Sequence[VariantSpec]]" = ()
     ladder: Ladder | None = None
+    plan: SweepPlan | None = None
+    tags: tuple[str, ...] = ()
     validate: bool = True
     parametric: bool | str = "auto"
     derived: Callable[[Record], str] | None = None   # CSV derived column
-    post: Callable[[bool], list[str]] | None = None  # extra lines after ladder
+    post: Callable[[bool], list[str]] | None = None  # extra lines after sweep
     runner: Callable[[bool], list[str]] | None = None  # full custom escape
 
     def variant_list(self, quick: bool) -> tuple[VariantSpec, ...]:
         v = self.variants(quick) if callable(self.variants) else self.variants
         return tuple(v)
 
+    def sweep_plan(self) -> SweepPlan:
+        """The executed plan: ``plan`` as given, or the ladder's
+        one-axis equivalent."""
+        if self.plan is not None:
+            return self.plan
+        assert self.ladder is not None  # enforced by __post_init__
+        return self.ladder.plan()
+
     def __post_init__(self) -> None:
         if self.runner is None:
             if self.pattern is None and not self.variants:
                 raise ValueError(
                     f"workload {self.name!r} needs either a runner or "
-                    "pattern+variants+ladder"
+                    "pattern+variants+plan"
                 )
-            if self.ladder is None:
-                raise ValueError(f"workload {self.name!r} needs a ladder")
+            if (self.ladder is None) == (self.plan is None):
+                raise ValueError(
+                    f"workload {self.name!r} needs exactly one of "
+                    "ladder/plan"
+                )

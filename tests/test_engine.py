@@ -1,0 +1,410 @@
+"""Plan-engine tests (the PR-3 acceptance contract).
+
+Covers: axis/plan expansion (product vs zip, label round-trip,
+validation errors), ladder-compat equivalence (a Ladder workload
+produces identical labels/records through the plan engine as through
+the pre-engine per-variant loop), the pointer-chase latency oracle and
+its custom-kernel guards, the mess load-sweep record schema
+(``extra.axis_point`` self-description), per-stride specialization +
+per-env parametric sharing in the Spatter stride ladder, the LRU
+translation cache, and ``--tag`` registry filtering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Driver,
+    DriverConfig,
+    SymbolicLowerError,
+    TranslationCache,
+    identity,
+    latency_ns,
+    pointer_chase,
+    stage_lower,
+    triad,
+)
+from repro.core.drivers import independent_view
+from repro import suite
+from repro.suite import (
+    Ladder,
+    SweepPlan,
+    VariantSpec,
+    Workload,
+    collect_records,
+    config_axis,
+    env_axis,
+    load_builtins,
+    pattern_axis,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))  # make the benchmarks package importable
+
+
+# ---------------------------------------------------------------------------
+# axis / plan expansion
+# ---------------------------------------------------------------------------
+
+
+def _halo(p):
+    return p + 2
+
+
+def test_product_plan_expansion_order_and_split():
+    plan = SweepPlan.product(
+        config_axis("programs", (1, 2)),
+        pattern_axis("stride", (4,)),
+        env_axis((256, 512), transform=_halo),
+    )
+    pts = plan.points(quick=True)
+    assert len(pts) == 4  # 2 x 1 x 2, last axis fastest
+    assert [p.label for p in pts] == [
+        "programs1/stride4/n256", "programs1/stride4/n512",
+        "programs2/stride4/n256", "programs2/stride4/n512",
+    ]
+    p0 = pts[0]
+    assert p0.axis_point() == {"programs": 1, "stride": 4, "n": 256}
+    assert dict(p0.config) == {"programs": 1}
+    assert dict(p0.pattern_kwargs) == {"stride": 4}
+    assert dict(p0.env) == {"n": 258}  # transformed; label keeps 256
+    # group key ignores env: pts 0/1 share a driver, 2/3 share another
+    assert p0.group_key == pts[1].group_key
+    assert p0.group_key != pts[2].group_key
+
+
+def test_zip_plan_lockstep_and_mismatch():
+    plan = SweepPlan.zip(
+        config_axis("programs", (1, 2, 4)),
+        env_axis((256, 512, 1024)),
+    )
+    pts = plan.points(quick=True)
+    assert [p.label for p in pts] == ["programs1/n256", "programs2/n512",
+                                     "programs4/n1024"]
+    bad = SweepPlan.zip(config_axis("programs", (1, 2)), env_axis((256,)))
+    with pytest.raises(ValueError, match="disagree"):
+        bad.points(quick=True)
+
+
+def test_axis_quick_full_and_validation():
+    ax = env_axis((256,), (256, 512))
+    assert ax.points(True) == (256,) and ax.points(False) == (256, 512)
+    assert env_axis((8,)).full == (8,)  # full defaults to quick
+    with pytest.raises(ValueError, match="kind"):
+        suite.Axis("x", "nope", (1,))
+    with pytest.raises(ValueError, match="no points"):
+        env_axis(())
+    with pytest.raises(ValueError, match="duplicate"):
+        SweepPlan.product(env_axis((1,)), env_axis((2,)))
+    with pytest.raises(ValueError, match="at least one axis"):
+        SweepPlan.product()
+
+
+def test_ladder_is_a_one_axis_plan():
+    lad = Ladder("t", (256, 512), (256, 512, 1024), transform=_halo)
+    pts = lad.plan().points(quick=False)
+    assert [p.label for p in pts] == ["n256", "n512", "n1024"]
+    assert [dict(p.env)["n"] for p in pts] == [258, 514, 1026]
+
+
+def test_workload_requires_exactly_one_of_ladder_and_plan():
+    lad = Ladder("t", (256,), (256,))
+    plan = lad.plan()
+    kw = dict(name="w", pattern=lambda env: triad(),
+              variants=(VariantSpec("v", DriverConfig()),))
+    with pytest.raises(ValueError, match="exactly one"):
+        Workload(**kw)
+    with pytest.raises(ValueError, match="exactly one"):
+        Workload(**kw, ladder=lad, plan=plan)
+    assert Workload(**kw, ladder=lad).sweep_plan().points(True) \
+        == plan.points(True)
+
+
+# ---------------------------------------------------------------------------
+# ladder-compat equivalence: plan engine vs the pre-engine loop
+# ---------------------------------------------------------------------------
+
+_IDENTITY_FIELDS = ("pattern", "template", "schedule", "backend", "n",
+                    "working_set_bytes", "programs", "ntimes", "level")
+
+
+def _legacy_collect(w, quick, cache, parametric):
+    """The pre-engine runner loop: one Driver per variant over the
+    ladder's env points, labels ``{figure}/{variant}/n{point}``."""
+    pts = list(w.ladder.points(quick))
+    ns = [w.ladder.env_n(p) for p in pts]
+    out = []
+    for v in w.variant_list(quick):
+        cfg = v.config
+        if cfg.parametric is None:
+            cfg = dataclasses.replace(cfg, parametric=parametric)
+        d = Driver(v.pattern or w.pattern, cfg, cache=cache)
+        if w.validate and d.cfg.validate_n:
+            d.validate()
+        for p, rec in zip(pts, d.run(ns)):
+            out.append((f"{w.figure}/{v.label}/n{p}", rec))
+    return out
+
+
+def test_ladder_workload_matches_legacy_loop_through_engine():
+    # halo'd env sizes (p + 2) stay divisible by both program counts
+    lad = Ladder("t", (254, 510), (254, 510), transform=_halo)
+    w = Workload(
+        name="compat", figure="figX",
+        pattern=lambda env: triad(),
+        variants=(
+            VariantSpec("unified", DriverConfig(
+                template="unified", programs=4, ntimes=2, reps=1)),
+            VariantSpec("independent", DriverConfig(
+                template="independent", programs=2, ntimes=2, reps=1)),
+        ),
+        ladder=lad,
+    )
+    legacy = _legacy_collect(w, True, TranslationCache(), "auto")
+    new = collect_records(w, quick=True, cache=TranslationCache())
+    assert [l for l, _ in legacy] == [l for l, _ in new]
+    for (_, a), (lbl, b) in zip(legacy, new):
+        for f in _IDENTITY_FIELDS:
+            assert getattr(a, f) == getattr(b, f), (lbl, f)
+        assert a.extra["parametric"] == b.extra["parametric"], lbl
+    # the engine additionally self-describes each point
+    assert [r.extra["axis_point"] for _, r in new] == [
+        {"n": 254}, {"n": 510}, {"n": 254}, {"n": 510}]
+
+
+# ---------------------------------------------------------------------------
+# pointer chase: oracle + guards
+# ---------------------------------------------------------------------------
+
+
+def test_chase_permutation_is_a_single_cycle():
+    pat = pointer_chase()
+    P = pat.allocate({"n": 64})["P"]
+    seen, h = [], 0
+    for _ in range(64):
+        seen.append(h)
+        h = int(P[h])
+    assert h == 0 and sorted(seen) == list(range(64))
+
+
+def test_pointer_chase_kernel_matches_oracle():
+    d = Driver(lambda env: pointer_chase(),
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, validate_n=96),
+               cache=TranslationCache())
+    d.validate()  # custom oracle replay
+    recs = d.run([128, 256])
+    assert [r.n for r in recs] == [128, 256]
+    for r in recs:
+        assert not r.extra["parametric"]
+        assert r.extra["points"] == r.n
+        assert latency_ns(r) > 0.0
+    # the chase head after one step call is the n-fold image of 0
+    pat = pointer_chase()
+    arrays = pat.allocate({"n": 128})
+    want = pat.oracle(pat, arrays, {"n": 128}, ntimes=1)
+    lowered = d.lower({"n": 128})
+    import jax.numpy as jnp
+
+    got = {k: jnp.asarray(v) for k, v in arrays.items()}
+    got = lowered.step(got)
+    assert int(got["H"][0]) == int(want["H"][0])
+
+
+def test_pointer_chase_guards():
+    pat = pointer_chase()
+    with pytest.raises(ValueError, match="custom kernel"):
+        independent_view(pat, programs=4)
+    d = Driver(lambda env: pointer_chase(),
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, parametric=True),
+               cache=TranslationCache())
+    with pytest.raises(SymbolicLowerError):
+        d.run([128, 256])
+    with pytest.raises(ValueError, match="schedule"):
+        stage_lower(pat, identity().tile("i", 8), {"n": 64})
+
+
+# ---------------------------------------------------------------------------
+# load sweep: record schema
+# ---------------------------------------------------------------------------
+
+
+def test_mess_load_sweep_record_schema():
+    load_builtins()
+    w = suite.workload("mess_load_sweep")
+    assert set(w.tags) == {"mess"}
+    rows = collect_records(w, quick=True, cache=TranslationCache())
+    axes = [a.name for a in w.sweep_plan().axes]
+    assert axes == ["programs", "ntimes", "n"]
+    n_expected = 1
+    for a in w.sweep_plan().axes:
+        n_expected *= len(a.points(True))
+    assert len(rows) == n_expected
+    for lbl, rec in rows:
+        ap = rec.extra["axis_point"]
+        assert set(ap) == {"programs", "ntimes", "n"}
+        # the config axes actually landed in the measured config
+        assert rec.programs == ap["programs"]
+        assert rec.ntimes == ap["ntimes"]
+        assert lbl == (f"mess/triad/programs{ap['programs']}"
+                       f"/ntimes{ap['ntimes']}/n{ap['n']}")
+        derived = w.derived(rec)
+        assert "GB/s" in derived and "us/access" in derived
+
+
+def test_spatter_nonuniform_specializes_strides_shares_envs():
+    load_builtins()
+    w = suite.workload("spatter_nonuniform")
+    one = dataclasses.replace(
+        w, variants=(w.variant_list(True)[0],),
+        plan=SweepPlan.product(
+            pattern_axis("stride", (2, 8)),
+            env_axis((256, 512, 1024)),
+        ),
+    )
+    cache = TranslationCache()
+    rows = collect_records(one, quick=True, cache=cache)
+    assert [r.extra["axis_point"] for _, r in rows] == [
+        {"stride": s, "n": n} for s in (2, 8) for n in (256, 512, 1024)]
+    # each stride is its own pattern (specialized), but its env ladder
+    # shares one parametric executable
+    assert all(r.extra["parametric"] for _, r in rows)
+    assert {r.extra["capacity"] for _, r in rows} == {1024}
+    per_stride = {r.pattern for _, r in rows}
+    assert per_stride == {"gather2", "gather8"}
+
+
+def test_grouping_is_axis_order_independent():
+    """An env axis ordered *before* a config axis must still share one
+    parametric executable per config value, and rows stay in plan order."""
+    w = Workload(
+        name="order", figure="ord",
+        pattern=lambda env: triad(),
+        variants=(VariantSpec("t", DriverConfig(
+            template="unified", ntimes=2, reps=1)),),
+        plan=SweepPlan.product(
+            env_axis((256, 512, 1024)),          # env FIRST (fastest = config)
+            config_axis("programs", (2, 4)),
+        ),
+    )
+    cache = TranslationCache()
+    rows = collect_records(w, quick=True, cache=cache)
+    assert [lbl for lbl, _ in rows] == [
+        f"ord/t/n{n}/programs{p}" for n in (256, 512, 1024) for p in (2, 4)]
+    assert all(r.extra["parametric"] for _, r in rows)
+    # one compile per program count, not per (program, n) point
+    assert cache.stats()["compile_misses"] == 2
+
+
+def _mcopy(env):
+    """copy with an independently-sized source: A[i] = B[i], |B| = m."""
+    from repro.core import Access, DataSpace, PatternSpec, Statement, domain
+
+    stmt = Statement(reads=(Access("B", ("i",)),), write=Access("A", ("i",)),
+                     combine=lambda vals, env: vals[0])
+    return PatternSpec(
+        "mcopy",
+        (DataSpace("A", ("n",), "float32", 0.0),
+         DataSpace("B", ("m",), "float32", 2.0)),
+        stmt, domain(("i", 0, "n")), flops_per_point=0)
+
+
+def test_extra_env_axes_reach_validation():
+    """A second env axis ('m') must be threaded into the oracle env —
+    validation would otherwise fail with unbound symbols."""
+    w = Workload(
+        name="two_env", figure="m",
+        pattern=_mcopy,
+        variants=(VariantSpec("copy", DriverConfig(
+            template="unified", programs=4, ntimes=2, reps=1)),),
+        plan=SweepPlan.zip(
+            env_axis((256, 512)),
+            env_axis((512, 1024), name="m"),
+        ),
+    )
+    rows = collect_records(w, quick=True, cache=TranslationCache())
+    assert [r.extra["axis_point"] for _, r in rows] == [
+        {"n": 256, "m": 512}, {"n": 512, "m": 1024}]
+    # points disagree on m, so they cannot share one parametric executable
+    assert not any(r.extra["parametric"] for _, r in rows)
+
+
+def test_plan_without_n_env_axis_is_rejected():
+    w = Workload(
+        name="no_n", figure="x",
+        pattern=lambda env: triad(),
+        variants=(VariantSpec("t", DriverConfig()),),
+        plan=SweepPlan.product(config_axis("programs", (2,)),
+                               env_axis((64,), name="m")),
+    )
+    with pytest.raises(ValueError, match="env axis targeting"):
+        collect_records(w, quick=True, cache=TranslationCache())
+
+
+# ---------------------------------------------------------------------------
+# LRU translation cache
+# ---------------------------------------------------------------------------
+
+
+def test_translation_cache_lru_eviction_and_stats():
+    cache = TranslationCache(capacity=2)
+    pat = triad()
+    sch = identity()
+
+    def lower(n):
+        return stage_lower(pat, sch, {"n": n}, cache=cache)
+
+    lower(64), lower(128)
+    assert cache.stats()["evictions"] == 0
+    lower(64)                      # refresh 64 -> 128 is now LRU
+    lower(256)                     # evicts 128
+    s = cache.stats()
+    assert s["evictions"] == 1 and s["capacity"] == 2
+    assert s["validated_drops"] == 0  # memo clears are a separate counter
+    base = cache.stats()["lower_misses"]
+    lower(64)                      # survived (recently used)
+    assert cache.stats()["lower_misses"] == base
+    lower(128)                     # was evicted: rebuilt
+    assert cache.stats()["lower_misses"] == base + 1
+    with pytest.raises(ValueError, match="capacity"):
+        TranslationCache(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# tags
+# ---------------------------------------------------------------------------
+
+
+def test_registry_tags_and_tag_filtering():
+    load_builtins()
+    assert set(suite.all_tags()) >= {"paper-figs", "spatter", "mess",
+                                     "latency"}
+    assert "latency" in suite.workload("pointer_chase").tags
+    assert "spatter" in suite.workload("spatter_nonuniform").tags
+    assert "paper-figs" in suite.workload("fig05_barriers").tags
+
+
+def test_run_list_tag_filter(capsys):
+    from benchmarks.run import main
+
+    main(["--list", "--tag", "spatter"])
+    out = capsys.readouterr().out
+    listed = {ln.split()[0] for ln in out.strip().splitlines()}
+    assert listed == {"spatter_uniform", "spatter_nonuniform"}
+    main(["--list", "--tag", "latency,mess"])
+    out = capsys.readouterr().out
+    listed = {ln.split()[0] for ln in out.strip().splitlines()}
+    assert listed == {"mess_load_sweep", "pointer_chase"}
+    # the custom paper-figure runners belong to the family too
+    main(["--list", "--tag", "paper-figs"])
+    out = capsys.readouterr().out
+    listed = {ln.split()[0] for ln in out.strip().splitlines()}
+    assert {"fig16_tile_sweep", "roofline", "fig05_barriers"} <= listed
+    assert "spatter_uniform" not in listed

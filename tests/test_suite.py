@@ -207,13 +207,18 @@ def test_registry_round_trip_with_harness_executor():
     for expected in ("fig05_barriers", "fig06_dataspaces", "fig07_streams",
                      "fig09_interleave", "fig10_counters", "fig12_jacobi1d",
                      "fig14_jacobi2d", "fig15_jacobi3d", "spatter_uniform",
+                     "mess_load_sweep", "pointer_chase", "spatter_nonuniform",
                      "fig16_tile_sweep", "roofline"):
         assert expected in names
-    # lookups resolve and are well-formed
+    # lookups resolve and are well-formed (declarative entries carry a
+    # sweep plan — a multi-axis one or a ladder's one-axis equivalent)
     for name in names:
         w = suite.workload(name)
         assert w.name == name
-        assert w.runner is not None or w.ladder is not None
+        if w.runner is None:
+            assert w.sweep_plan().points(True)
+        else:
+            assert w.ladder is None and w.plan is None
 
 
 def test_common_shim_reexports_suite_ladders():
