@@ -14,11 +14,14 @@ figure prefix, ``--tag`` filters by scenario-family tag (``paper-figs``,
 ``spatter``, ``mess``, ``latency``); both filters compose (AND).
 
 ``--smoke`` runs every selected workload in quick mode and writes a JSON
-perf ledger (default ``BENCH_PR3.json`` at the repo root) with
-per-workload wall time plus the process-wide translation-cache hit rate,
+perf ledger (default ``BENCH_PR4.json`` at the repo root) with
+per-workload wall time, the process-wide translation-cache hit rate,
 capacity, and evictions (in-process lower/compile counters and the jax
-disk compile cache), so successive PRs can track the harness's own perf
-trajectory.
+disk compile cache), and the ``param_path`` probe: for strided-eligible
+ladders, the per-call cost of the strided-parametric regime against the
+specialized strided path (plus the 1-compile-per-ladder assertion), so
+``scripts/ci.sh`` can gate the regime-comparability floor (strided
+≤ 1.5x specialized) that makes ``programs``-axis sweeps trustworthy.
 """
 from __future__ import annotations
 
@@ -63,6 +66,102 @@ CUSTOM_MODULES = [
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def _param_path_probe() -> dict:
+    """Strided-parametric vs specialized per-call cost on catalog-shaped
+    strided-eligible ladders (independent-template streams/stencils —
+    the exact configurations fig06/fig09/fig12 and the mess variants run
+    under the strided regime).
+
+    Wall-clock on this container is noisy (shared cores), so the probe
+    is built to survive it: per rung, the two executables are timed in
+    *interleaved* A/B calls (both see the same load environment) and the
+    per-rung ratio uses min-of-reps (a load spike inflates a call, never
+    deflates it). The gated number is the geometric mean across rungs.
+    Also asserts the regime every record selected and the parametric
+    run's compile misses (must be 1: one executable per ladder).
+    """
+    import dataclasses as _dc
+    import math
+    import time as _time
+
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    from repro.core import (
+        Driver,
+        DriverConfig,
+        TranslationCache,
+        identity,
+        jacobi1d,
+        triad,
+    )
+
+    def _min_times(fns_tups, reps=7):
+        """Interleaved min-of-reps per fn: [(fn, tup), ...] -> [sec, ...]."""
+        for fn, tup in fns_tups:           # warmup both before timing
+            _jax.block_until_ready(fn(tup))
+        best = [float("inf")] * len(fns_tups)
+        for _ in range(reps):
+            for i, (fn, tup) in enumerate(fns_tups):
+                t0 = _time.perf_counter()
+                _jax.block_until_ready(fn(tup))
+                best[i] = min(best[i], _time.perf_counter() - t0)
+        return best
+
+    ladder = [1 << 14, 1 << 16, 1 << 17]
+    probes = {
+        "triad_indep": (lambda env: triad(),
+                        DriverConfig(template="independent", programs=4,
+                                     ntimes=16)),
+        "jacobi1d_indep": (lambda env: jacobi1d(),
+                           DriverConfig(template="independent", programs=4,
+                                        ntimes=16)),
+        "triad_il2_indep": (lambda env: triad(),
+                            DriverConfig(template="independent", programs=2,
+                                         ntimes=16,
+                                         schedule=identity().interleave(
+                                             "i", 2))),
+    }
+    out = {}
+    for name, (fac, cfg) in probes.items():
+        spec_d = Driver(fac, _dc.replace(cfg, parametric=False),
+                        cache=TranslationCache())
+        pcache = TranslationCache()
+        par_d = Driver(fac, _dc.replace(cfg, parametric=True,
+                                        param_path="strided"), cache=pcache)
+        spec_ps = spec_d.prepare(ladder)
+        par_ps = par_d.prepare(ladder)
+        compile_misses = pcache.stats()["compile_misses"]
+        paths = sorted({
+            (p.compiled.param_path if p.parametric else "specialized")
+            for p in par_ps
+        })
+        spec_us, par_us, ratios = [], [], []
+        for sp, pp in zip(spec_ps, par_ps):
+            s_tup = tuple(
+                _jnp.asarray(v) for _, v in sorted(
+                    sp.lowered.pattern.allocate(sp.lowered.env).items()))
+            p_tup = tuple(
+                _jnp.asarray(v) for _, v in sorted(
+                    pp.lowered.pattern.allocate(pp.lowered.env).items()))
+            ts, tp = _min_times([(sp.executable(), s_tup),
+                                 (pp.executable(), p_tup)])
+            spec_us.append(round(ts * 1e6, 2))
+            par_us.append(round(tp * 1e6, 2))
+            ratios.append(tp / ts)
+        out[name] = {
+            "ns": ladder,
+            "specialized_us": spec_us,
+            "strided_us": par_us,
+            "per_point_ratio": [round(x, 3) for x in ratios],
+            "ratio": round(
+                math.exp(sum(math.log(x) for x in ratios) / len(ratios)), 3),
+            "param_path": paths,
+            "compile_misses": compile_misses,
+        }
+    return out
+
+
 def load_registry() -> tuple[list[str], dict[str, str]]:
     """Load all workloads; a custom module that fails to import becomes a
     per-module failure entry instead of killing the whole harness."""
@@ -95,7 +194,7 @@ def main(argv: list[str] | None = None) -> None:
                     help="print registered workload names (+tags) and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="quick mode + write a JSON perf ledger")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR3.json"),
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR4.json"),
                     help="ledger path for --smoke")
     args = ap.parse_args(argv)
 
@@ -158,6 +257,10 @@ def main(argv: list[str] | None = None) -> None:
     if args.smoke:
         from repro.core.staging import GLOBAL_CACHE
 
+        try:
+            probe = _param_path_probe()
+        except Exception as e:  # noqa: BLE001 - a broken probe must gate
+            probe = {"error": f"{type(e).__name__}: {e}"}
         ledger = {
             "suite": "benchmarks.run --smoke",
             "mode": "full" if args.full else "quick",
@@ -165,6 +268,7 @@ def main(argv: list[str] | None = None) -> None:
             "module_seconds": module_seconds,
             "failures": failures,
             "translation_cache": GLOBAL_CACHE.stats(),
+            "param_path_probe": probe,
         }
         out = pathlib.Path(args.out)
         out.write_text(json.dumps(ledger, indent=2) + "\n")

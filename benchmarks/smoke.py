@@ -1,13 +1,16 @@
 """CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR3.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR4.json]
 
 Thin alias for ``benchmarks.run --smoke``: runs the quick-mode plan of
 every registry workload (including the multi-axis ``mess_load_sweep``,
-``pointer_chase``, and ``spatter_nonuniform`` scenarios) and writes
-per-workload wall time plus the translation-cache hit rate, capacity,
-and eviction count (in-process and jax disk cache) to the JSON ledger,
-so future PRs can assert the harness's perf trajectory instead of
+``pointer_chase``, ``spatter_nonuniform``, and zip-mode
+``mess_calibrated`` scenarios) and writes per-workload wall time, the
+translation-cache hit rate / capacity / evictions (in-process and jax
+disk cache), and the ``param_path`` probe — strided-parametric vs
+specialized per-call cost with the 1-compile-per-ladder assertion — to
+the JSON ledger, so future PRs can assert the harness's perf trajectory
+(and the strided regime's ≤ 1.5x comparability floor) instead of
 guessing.
 """
 from __future__ import annotations

@@ -1,21 +1,30 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + the registry smoke suite + harness-perf floor.
+# CI gate: tier-1 tests (fast lane first, slow lane after) + the registry
+# smoke suite + harness-perf floors.
 #
 #   scripts/ci.sh [LEDGER_PATH]
 #
-# Fails on: any pytest failure, any benchmark workload failure, a missing
-# multi-axis scenario (mess_load_sweep / pointer_chase /
-# spatter_nonuniform must run in smoke mode), or a process-wide
-# translation-cache hit rate below 0.5 on the smoke suite (the
-# parametric-ladder + staged-pipeline floor this repo maintains).
+# Fails on: any pytest failure (the fast lane runs first so breakage is
+# loud in seconds; the slow lane — registry-wide conformance and
+# property sweeps — runs after), any benchmark workload failure, a
+# missing multi-axis scenario (mess_load_sweep / pointer_chase /
+# spatter_nonuniform / mess_calibrated must run in smoke mode), a
+# process-wide translation-cache hit rate below 0.5 on the smoke suite,
+# or a param_path probe violation: every strided-eligible probe ladder
+# must run parametric with param_path == "strided" and exactly 1 compile
+# miss, at a geometric-mean per-call cost <= 1.5x the specialized
+# strided path (the regime-comparability floor this repo maintains).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR3.json}"
+LEDGER="${1:-BENCH_PR4.json}"
 
-echo "== tier-1 pytest =="
-python -m pytest -x -q
+echo "== tier-1 pytest (fast lane) =="
+python -m pytest -x -q -m "not slow"
+
+echo "== tier-1 pytest (slow lane: conformance + property sweeps) =="
+python -m pytest -q -m slow
 
 echo "== benchmarks.run --smoke =="
 python -m benchmarks.run --smoke --out "$LEDGER"
@@ -30,7 +39,8 @@ if failures:
     sys.exit(f"FAIL: benchmark workloads failed: {failures}")
 seconds = ledger["module_seconds"]
 missing = [s for s in ("mess_load_sweep", "pointer_chase",
-                       "spatter_nonuniform") if s not in seconds]
+                       "spatter_nonuniform", "mess_calibrated")
+           if s not in seconds]
 if missing:
     sys.exit(f"FAIL: multi-axis scenarios did not run: {missing}")
 tc = ledger["translation_cache"]
@@ -42,7 +52,24 @@ print(f"translation-cache hit rate: {rate:.3f} "
       f"disk {tc['disk']})")
 if rate < 0.5:
     sys.exit(f"FAIL: translation-cache hit rate {rate:.3f} < 0.5")
-for scen in ("mess_load_sweep", "pointer_chase", "spatter_nonuniform"):
+probe = ledger.get("param_path_probe", {})
+if not probe or "error" in probe:
+    sys.exit(f"FAIL: param_path probe did not run: {probe}")
+for name, p in probe.items():
+    print(f"{name}: strided/specialized ratio {p['ratio']:.3f} "
+          f"(per rung {p['per_point_ratio']}), "
+          f"paths {p['param_path']}, compile misses {p['compile_misses']}")
+    if p["param_path"] != ["strided"]:
+        sys.exit(f"FAIL: {name} did not run the strided regime: "
+                 f"{p['param_path']}")
+    if p["compile_misses"] != 1:
+        sys.exit(f"FAIL: {name} ladder compiled {p['compile_misses']}x "
+                 "(expected one shared executable)")
+    if p["ratio"] > 1.5:
+        sys.exit(f"FAIL: {name} strided-parametric per-call cost "
+                 f"{p['ratio']:.3f}x specialized (> 1.5x floor)")
+for scen in ("mess_load_sweep", "pointer_chase", "spatter_nonuniform",
+             "mess_calibrated"):
     print(f"{scen}: {seconds[scen]:.1f}s")
 print("OK")
 EOF

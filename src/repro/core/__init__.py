@@ -32,11 +32,14 @@ from .pattern import (
 )
 from .codegen import (
     NestPlan,
+    ParamStridedPlan,
     lower_jax,
     lower_jax_parametric,
     lower_pallas,
+    param_strided_plan,
     plan_nest,
     serial_oracle,
+    windowed_oracle,
 )
 from .staging import (
     GLOBAL_CACHE,
@@ -75,7 +78,8 @@ __all__ = [
     "jacobi1d", "jacobi2d", "jacobi3d",
     "gather", "scatter", "gather_scatter", "pointer_chase",
     "lower_jax", "lower_jax_parametric", "lower_pallas", "serial_oracle",
-    "plan_nest", "NestPlan",
+    "plan_nest", "NestPlan", "ParamStridedPlan", "param_strided_plan",
+    "windowed_oracle",
     "Lowered", "Compiled", "ParamLowered", "ParamCompiled",
     "TranslationCache", "GLOBAL_CACHE",
     "stage_lower", "stage_lower_parametric", "precompile",

@@ -22,6 +22,16 @@ autotuner can share work through the translation cache (see
     ``lax.broadcasted_iota`` (never embedded as host constants), so large
     grids stay cheap to trace and compile.
 
+``lower_jax_parametric``
+    Shape-polymorphic twin of ``lower_jax``: the working-set parameters
+    become traced operands so one AOT executable serves a whole ladder.
+    Two regimes, selected by ``param_path``: the **strided fast path**
+    (``lax.dynamic_slice``/``dynamic_update_slice`` lane windows, chosen
+    whenever the symbolic nest satisfies the same single-band precondition
+    as the specialized strided path — per-call cost matches it) and the
+    **masked gather/scatter** fallback for everything else (guards,
+    splits, diagonals). ``step.param_path`` reports which one was built.
+
 ``lower_pallas``
     A Pallas kernel per schedule. Loop bands become the ``grid``; vector
     bands become the block. Refs are *unblocked* (whole array) and the
@@ -65,6 +75,7 @@ from .schedule import (
     ParamInstance,
     ParamNest,
     Schedule,
+    _const_int,
 )
 
 __all__ = [
@@ -76,6 +87,11 @@ __all__ = [
     "resolve_access_symbolic",
     "plan_nest",
     "NestPlan",
+    "ParamStridedPlan",
+    "param_strided_plan",
+    "param_strided_in_bounds",
+    "param_strided_window",
+    "windowed_oracle",
 ]
 
 # Indices are now built in-program from broadcasted_iota (no host-side
@@ -503,10 +519,519 @@ def _affine_traced(aff: Affine, scope: Mapping[str, jnp.ndarray]):
     return acc // L if L != 1 else acc
 
 
+# -- parametric strided fast path (dynamic-slice windows) --------------------
+#
+# The third lowering regime: when the symbolic nest satisfies the same
+# precondition as the specialized strided-slice path (single-band affine
+# instance maps with constant integer strides, provably unguarded, one
+# window dim per access, consistent coefficient signs), lane chunks are
+# executed as ``lax.dynamic_slice`` / ``dynamic_update_slice`` windows
+# whose starts are computed from the traced extent operands — per-call
+# cost tracks the specialized path instead of paying the masked
+# gather/scatter tax, so ``programs``-axis sweeps on one executable stay
+# regime-comparable.
+#
+# Window mechanics: the window band is the nest's innermost band. Bands
+# with *static* extents that the write references (the independent
+# template's ``programs`` axis) are vectorized into the window itself —
+# a ``(programs, C)``-shaped dynamic slice per step, so the hot loop
+# matches the specialized path's full-width slice ops instead of
+# serializing programs. Remaining (dynamic-extent) bands contribute
+# point (size-1) dims per loop step.
+#
+# One traced ``fori_loop`` body in one of two emission modes (NEVER a
+# ``lax.cond`` between them: XLA:CPU loses buffer aliasing through
+# conditionals, which resurrects a capacity-sized copy per call and
+# defeats the whole regime):
+#
+# * ``assume_full`` (drivers emit this whenever they can clamp the
+#   chunk to the ladder's smallest window extent — every measurement
+#   chunk is then provably full): the final window of a rung is pulled
+#   back to ``min(ws, ext - C)`` instead of masked — the overlapped
+#   lanes recompute identical values (writes are idempotent), so every
+#   lane is a valid point, no masks, no clamped slices, and the write
+#   is a plain ``dynamic_update_slice``. Calling this executable at an
+#   env with ``ext < C`` is a caller-contract violation.
+# * masked (the default; correct for every rung): windows are anchored
+#   sign-aware — band range ``[ws, ws+C)`` with the start floored at 0
+#   for ascending accesses and allowed to go negative (range
+#   ``[ext-C, ext)``) for descending ones, so slice starts stay at
+#   valid in-bounds positions even when a rung is smaller than one
+#   window — and the write *blends*: lanes outside [0, ext) keep the
+#   target's current contents (they may sit in the independent
+#   template's pad columns, which the oracle checks).
+#
+# Strided accesses (|coeff| > 1) use windows of ``(extent-1)*|coeff|+1``
+# elements (exactly the strided span) and subsample/blend with static
+# strided slices. ``param_strided_in_bounds`` is the exact per-env
+# capacity-bounds check drivers run before committing a ladder to this
+# regime (a clamped dynamic slice would silently misalign, so any env
+# whose windows could leave the capacity shapes falls back to gather),
+# and ``param_strided_window`` is the ladder-level (chunk, assume_full)
+# policy they resolve it with.
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamStridedPlan:
+    """Access-level window plan for the parametric strided regime.
+
+    ``plans[k] = (reads, write, window_sign)`` for instance k; each
+    access is a tuple over its array dims of ``(band, stride, const)``
+    where ``band`` is the driving band (-1 for a constant index),
+    ``stride`` the constant integer coefficient, and ``const`` the
+    symbolic offset (Affine in the params). ``window_sign`` is the shared
+    coefficient sign of the window band across the instance's accesses
+    (sign consistency is part of eligibility), which picks the partial-
+    window anchor. ``window_band`` is the nest's innermost band — the one
+    lane windows run along.
+    """
+
+    window_band: int
+    plans: tuple
+
+
+def param_strided_plan(pattern: PatternSpec,
+                       pnest: ParamNest) -> ParamStridedPlan | None:
+    """The window plan when (pattern, pnest) admits the strided regime,
+    else None (caller falls back to masked gather/scatter).
+
+    On top of :meth:`ParamNest.strided_eligible` (nest-level), every
+    access must be sliceable: at most one band per array dim, constant
+    integer coefficients, consistent signs per band across an instance's
+    accesses, the write referencing the window band, and no access
+    referencing it in more than one dim (diagonals stay on gather).
+    Statements that read their own write space are rejected outright —
+    the min-start window overlap recomputes the final lanes of a rung,
+    and a re-read of already-updated values would corrupt them (the
+    serial oracle's vectorized path guards the same case).
+    """
+    if pattern.kernel is not None or not pnest.strided_eligible():
+        return None
+    stmt = pattern.statement
+    if any(a.space == stmt.write.space for a in stmt.reads):
+        return None
+    iter_names = pattern.domain.names
+    w = pnest.n_bands - 1
+    zero = Affine.of(0)
+    insts = []
+    for inst in pnest.instances:
+        try:
+            raccs = [resolve_access_symbolic(a, pnest, inst, iter_names)
+                     for a in stmt.reads]
+            wacc = resolve_access_symbolic(stmt.write, pnest, inst, iter_names)
+        except KeyError:
+            return None
+        sign: dict[int, int] = {}
+
+        def conv(rows):
+            out, seen = [], set()
+            for row, const in rows:
+                nz = [(b, _const_int(c)) for b, c in enumerate(row)
+                      if c != zero]
+                if not nz:
+                    out.append((-1, 0, const))
+                    continue
+                if len(nz) > 1:
+                    return None
+                b, cf = nz[0]
+                if cf is None or cf == 0:
+                    return None
+                s = 1 if cf > 0 else -1
+                if sign.setdefault(b, s) != s:
+                    return None
+                if b in seen:  # diagonal (one band, two dims): gather
+                    return None
+                seen.add(b)
+                out.append((b, cf, const))
+            return tuple(out)
+
+        w_conv = conv(wacc)
+        if w_conv is None or not any(b == w for b, _, _ in w_conv):
+            return None
+        r_convs = []
+        for rows in raccs:
+            rc = conv(rows)
+            if rc is None:
+                return None
+            r_convs.append(rc)
+        insts.append((tuple(r_convs), w_conv, sign.get(w, 1)))
+    return ParamStridedPlan(window_band=w, plans=tuple(insts))
+
+
+def _static_extents(pnest: ParamNest) -> dict[int, int]:
+    """Bands whose extents are parameter-free: candidates for window
+    vectorization (the independent template's ``programs`` axis)."""
+    out = {}
+    for b, e in enumerate(pnest.band_extents):
+        v = _const_int(e)
+        if v is not None and v > 0:
+            out[b] = v
+    return out
+
+
+def _vector_bands(splan: ParamStridedPlan, static_ext: Mapping[int, int],
+                  ) -> tuple[int, ...]:
+    """Static-extent bands every instance's write references: these are
+    folded into the window shape instead of the chunk loop (all their
+    points execute per step, so the write must cover them — a band the
+    write ignores must stay serial for last-value-wins semantics)."""
+    vec = set(static_ext)
+    for _, wacc, _ in splan.plans:
+        vec &= {b for b, _, _ in wacc if b >= 0}
+    return tuple(sorted(vec))
+
+
+class _WindowPlan:
+    """Shared window geometry for the jax emitter and its numpy mirror.
+
+    Splits bands into the lane window band ``w`` (chunked, dynamic
+    extent), ``vec`` bands (static extents, vectorized into each window)
+    and ``loop`` bands (everything else — one point per chunk step).
+    ``spec(rows, ws, ob)`` computes per-dim dynamic-slice starts/sizes
+    plus the static lane selector and per-dim band tags for one access.
+    """
+
+    def __init__(self, pnest: ParamNest, splan: ParamStridedPlan, C: int):
+        self.w = splan.window_band
+        self.C = C
+        self.static_ext = _static_extents(pnest)
+        self.vec = _vector_bands(splan, self.static_ext)
+        self.loop = tuple(
+            b for b in range(pnest.n_bands)
+            if b != self.w and b not in self.vec
+        )
+
+    def lane_extent(self, b: int) -> int:
+        return self.C if b == self.w else self.static_ext[b]
+
+    def spec(self, rows, ws, ob):
+        """(starts, sizes, selector, per-dim band-or-None) for one access
+        at window start ``ws`` / loop-band coords ``ob``."""
+        starts, sizes, sel, axes = [], [], [], []
+        for b, cf, kc in rows:
+            if b == self.w or b in self.vec:
+                e = self.lane_extent(b)
+                base = ws if b == self.w else 0
+                if cf > 0:
+                    starts.append(cf * base + kc)
+                else:
+                    starts.append(cf * (base + (e - 1)) + kc)
+                sizes.append((e - 1) * abs(cf) + 1)
+                sel.append(slice(None, None, cf))
+                axes.append(b)
+            elif b >= 0:
+                starts.append(cf * ob[b] + kc)
+                sizes.append(1)
+                sel.append(slice(None))
+                axes.append(None)
+            else:
+                starts.append(kc)
+                sizes.append(1)
+                sel.append(slice(None))
+                axes.append(None)
+        return starts, sizes, tuple(sel), axes
+
+    def align(self, waxes):
+        """Return ``fit(v, raxes)`` mapping a read's lane value onto the
+        write's dim layout: banded axes permuted into the write's band
+        order, point axes squeezed, missing bands broadcast as size 1."""
+        worder = [b for b in waxes if b is not None]
+        wshape_of = {b: self.lane_extent(b) for b in worder}
+
+        def fit(xp, v, raxes):
+            perm = [d for b in worder for d, rb in enumerate(raxes)
+                    if rb == b]
+            perm += [d for d, rb in enumerate(raxes) if rb is None]
+            if perm != list(range(len(raxes))):
+                v = xp.transpose(v, tuple(perm))
+            have = {rb for rb in raxes if rb is not None}
+            tshape = tuple(
+                wshape_of[b] if (b is not None and b in have) else 1
+                for b in waxes
+            )
+            return v.reshape(tshape)
+
+        return fit
+
+
+def param_strided_window(
+    pnest: ParamNest, splan: ParamStridedPlan,
+    envs: "list[Mapping[str, int]]", cap_env: Mapping[str, int],
+    chunk: int = _PARAM_CHUNK, floor: int = 1024,
+) -> tuple[int, bool]:
+    """The ladder-level window policy: ``(chunk, assume_full)``.
+
+    When the smallest rung's window extent is at least ``floor`` lanes,
+    the chunk is clamped down to it — every chunk of every rung is then
+    provably full, so the emitter can skip masks and blend reads
+    entirely (the hot mode). Ladders with tinier rungs keep the default
+    chunk and take the masked emission mode instead (tiny windows would
+    cost more in trip count than the mask does).
+    """
+    w = splan.window_band
+    cap_ext = max(1, pnest.band_extents[w].eval(cap_env))
+    exts = []
+    for e in envs:
+        scope = {**{k: int(v) for k, v in cap_env.items()},
+                 **{k: int(v) for k, v in e.items()}}
+        exts.append(max(0, pnest.band_extents[w].eval(scope)))
+    m = min(exts) if exts else 0
+    if m >= floor:
+        return int(min(chunk, m, cap_ext)), True
+    return int(min(chunk, cap_ext)), False
+
+
+def param_strided_in_bounds(
+    pattern: PatternSpec, pnest: ParamNest, splan: ParamStridedPlan,
+    env: Mapping[str, int], cap_env: Mapping[str, int],
+    chunk: int = _PARAM_CHUNK,
+) -> bool:
+    """Exact check that every window the strided step could slice at
+    ``env`` stays inside the capacity-allocated shapes.
+
+    ``lax.dynamic_slice`` silently clamps out-of-range starts, which
+    would *misalign* a window rather than fail — so drivers verify every
+    ladder point here before choosing the strided regime. Real patterns
+    (spans scaling with the working set) always pass; the check guards
+    hand-built specs with fixed-size spaces.
+    """
+    stmt = pattern.statement
+    w = splan.window_band
+    scope = {**{k: int(v) for k, v in cap_env.items()},
+             **{k: int(v) for k, v in env.items()}}
+    try:
+        ext = [max(0, e.eval(scope)) for e in pnest.band_extents]
+    except (KeyError, ValueError):
+        return False
+    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
+    C = int(min(chunk, cap_ext_w))
+    if ext[w] < 1:
+        return True  # zero window chunks: nothing is sliced
+    static_ext = _static_extents(pnest)
+    shapes = {s.name: s.concrete_shape(cap_env) for s in pattern.spaces}
+    for racc, wacc, s_w in splan.plans:
+        # partial-window anchor: [0, C) ascending, [ext-C, ext) descending
+        if ext[w] >= C:
+            blo, bhi = 0, ext[w] - 1
+        else:
+            blo, bhi = (0, C - 1) if s_w > 0 else (ext[w] - C, ext[w] - 1)
+        for acc, rows in zip((*stmt.reads, stmt.write), (*racc, wacc)):
+            dims = shapes[acc.space]
+            for d, (b, cf, kc) in enumerate(rows):
+                try:
+                    k = kc.eval(scope)
+                except (KeyError, ValueError):
+                    return False
+                if b == w:
+                    lo, hi = blo, bhi
+                elif b in static_ext:
+                    lo, hi = 0, static_ext[b] - 1
+                elif b >= 0:
+                    lo, hi = 0, max(0, ext[b] - 1)
+                else:
+                    lo = hi = 0
+                pts = (k + cf * lo, k + cf * hi)
+                if min(pts) < 0 or max(pts) > dims[d] - 1:
+                    return False
+    return True
+
+
+def _lower_param_strided(pattern: PatternSpec, pnest: ParamNest,
+                         splan: ParamStridedPlan,
+                         params: tuple[str, ...],
+                         cap_env: Mapping[str, int], chunk: int,
+                         assume_full: bool = False) -> Callable:
+    """Emit the windowed step: same calling convention as the gather
+    parametric step (capacity-shaped arrays + traced param scalars).
+
+    ``assume_full=True`` emits the mask-free hot mode; the caller must
+    only invoke the step at envs whose window extent is >= the chunk
+    (drivers guarantee this via :func:`param_strided_window`).
+    """
+    stmt = pattern.statement
+    w = splan.window_band
+    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
+    C = int(min(chunk, cap_ext_w))
+    rest_env = {k: int(v) for k, v in cap_env.items() if k not in params}
+    wp = _WindowPlan(pnest, splan, C)
+
+    def step(arrays: dict[str, jnp.ndarray], pvals) -> dict[str, jnp.ndarray]:
+        arrays = dict(arrays)
+        scope = {p: jnp.asarray(v, jnp.int32) for p, v in zip(params, pvals)}
+        cenv = {**rest_env, **scope}
+        ext = [jnp.maximum(_affine_traced(e, scope), 0)
+               for e in pnest.band_extents]
+        ext_w = ext[w]
+        nw = (ext_w + (C - 1)) // C
+        win_lo = ext_w - C
+        total = nw
+        ostrides = {}
+        for b in reversed(wp.loop):
+            ostrides[b] = total
+            total = total * ext[b]
+        # loop-invariant traced offsets, computed once outside the body
+        tr = [
+            (
+                [[(b, cf, _affine_traced(kc, scope)) for b, cf, kc in rows]
+                 for rows in racc],
+                [(b, cf, _affine_traced(kc, scope)) for b, cf, kc in wacc],
+                s_w,
+            )
+            for racc, wacc, s_w in splan.plans
+        ]
+        lane = (None if assume_full
+                else jax.lax.broadcasted_iota(jnp.int32, (C,), 0))
+
+        def instance(arrs, racc, wacc, ws, ob, valid):
+            """One instance's window step at window start ``ws``; lanes
+            where ``valid`` is False (masked mode only) keep the
+            target's current contents."""
+            wstarts, wsizes, wsel, waxes = wp.spec(wacc, ws, ob)
+            fit = wp.align(waxes)
+            vals = []
+            for acc, rows in zip(stmt.reads, racc):
+                starts, sizes, sel, raxes = wp.spec(rows, ws, ob)
+                win = jax.lax.dynamic_slice(arrs[acc.space], starts, sizes)
+                vals.append(fit(jnp, win[sel], raxes))
+            res = stmt.combine(vals, cenv)
+            tgt = arrs[stmt.write.space]
+            lanes = tuple(
+                wp.lane_extent(b) if b is not None else 1 for b in waxes
+            )
+            res = jnp.broadcast_to(jnp.asarray(res).astype(tgt.dtype), lanes)
+            if valid is None and all(cf == 1 for b, cf, _ in wacc if b >= 0):
+                return jax.lax.dynamic_update_slice(tgt, res, wstarts)
+            # strided / reversed / masked write: blend into the window
+            # so gap elements and invalid lanes stay untouched
+            win = jax.lax.dynamic_slice(tgt, wstarts, wsizes)
+            if valid is not None:
+                vshape = tuple(C if b == w else 1 for b in waxes)
+                res = jnp.where(valid.reshape(vshape), res, win[wsel])
+            win = win.at[wsel].set(res)
+            return jax.lax.dynamic_update_slice(tgt, win, wstarts)
+
+        def body(ci, arrs):
+            arrs = dict(arrs)
+            wsq = (ci % nw) * C
+            ob = {b: (ci // ostrides[b]) % ext[b] for b in wp.loop}
+            for racc, wacc, s_w in tr:
+                if assume_full:
+                    # every chunk is a full window: min-start overlap,
+                    # no masks (caller guarantees ext_w >= C)
+                    arrs[stmt.write.space] = instance(
+                        arrs, racc, wacc, jnp.minimum(wsq, win_lo), ob,
+                        None)
+                    continue
+                # sign-aware anchor: ascending accesses floor the start
+                # at 0, descending ones let it go negative so the
+                # partial window sits at [ext-C, ext) — either way slice
+                # starts stay at valid positions
+                ws = jnp.minimum(wsq, win_lo)
+                if s_w > 0:
+                    ws = jnp.maximum(ws, 0)
+                band = ws + lane
+                valid = (band >= 0) & (band < ext_w)
+                arrs[stmt.write.space] = instance(
+                    arrs, racc, wacc, ws, ob, valid)
+            return arrs
+
+        return jax.lax.fori_loop(0, total, body, arrays)
+
+    return step
+
+
+def windowed_oracle(
+    pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
+    cap_env: Mapping[str, int], arrays: dict[str, np.ndarray],
+    ntimes: int = 1, *, params: tuple[str, ...] = ("n",),
+    chunk: int = _PARAM_CHUNK, assume_full: bool = False,
+) -> dict[str, np.ndarray]:
+    """Numpy mirror of the parametric strided regime, window for window.
+
+    Replays the exact chunk decomposition (vectorized static bands,
+    min-start overlap, sign-aware partial-window anchors, strided
+    subsampling, blend writes, tail-lane masking) on capacity-shaped
+    numpy arrays, so tests can prove the window arithmetic against plain
+    semantics — bit-for-bit against the jax step over the *whole*
+    capacity arrays, not just the [0, n) region — without tracing.
+    Raises when (pattern, schedule) is not strided-eligible.
+    """
+    pnest = schedule.lower_symbolic(pattern.domain, tuple(params))
+    splan = param_strided_plan(pattern, pnest)
+    if splan is None:
+        raise ValueError(
+            f"pattern {pattern.name!r} / schedule {schedule.name!r} is not "
+            "strided-eligible; the windowed mirror has nothing to replay"
+        )
+    stmt = pattern.statement
+    w = splan.window_band
+    scope = {**{k: int(v) for k, v in cap_env.items()
+                if k not in params},
+             **{p: int(env[p]) for p in params}}
+    ext = [max(0, e.eval(scope)) for e in pnest.band_extents]
+    ext_w = ext[w]
+    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
+    C = int(min(chunk, cap_ext_w))
+    wp = _WindowPlan(pnest, splan, C)
+    nw = (ext_w + (C - 1)) // C
+    total = nw
+    ostrides = {}
+    for b in reversed(wp.loop):
+        ostrides[b] = total
+        total = total * ext[b]
+    arrays = {k: np.array(v) for k, v in arrays.items()}
+    plans = [
+        (
+            [[(b, cf, kc.eval(scope)) for b, cf, kc in rows] for rows in racc],
+            [(b, cf, kc.eval(scope)) for b, cf, kc in wacc],
+            s_w,
+        )
+        for racc, wacc, s_w in splan.plans
+    ]
+    for _ in range(int(ntimes)):
+        for ci in range(int(total)):
+            ob = {b: (ci // ostrides[b]) % ext[b] for b in wp.loop}
+            wsq = (ci % nw) * C
+            for racc, wacc, s_w in plans:
+                if assume_full:
+                    ws, valid = min(wsq, ext_w - C), None
+                else:
+                    ws = min(wsq, ext_w - C)
+                    if s_w > 0:
+                        ws = max(ws, 0)
+                    band = ws + np.arange(C)
+                    valid = (band >= 0) & (band < ext_w)
+                wstarts, wsizes, wsel, waxes = wp.spec(wacc, ws, ob)
+                fit = wp.align(waxes)
+                vals = []
+                for acc, rows in zip(stmt.reads, racc):
+                    starts, sizes, sel, raxes = wp.spec(rows, ws, ob)
+                    win = arrays[acc.space][tuple(
+                        slice(s, s + z) for s, z in zip(starts, sizes))]
+                    vals.append(fit(np, np.asarray(win[sel]), raxes))
+                res = stmt.combine(vals, dict(scope))
+                tgt = arrays[stmt.write.space]
+                lanes = tuple(
+                    wp.lane_extent(b) if b is not None else 1 for b in waxes
+                )
+                res = np.broadcast_to(
+                    np.asarray(res).astype(tgt.dtype), lanes)
+                osel = tuple(
+                    slice(s, s + z) for s, z in zip(wstarts, wsizes))
+                win = np.array(tgt[osel])
+                if valid is not None:
+                    vshape = tuple(C if b == w else 1 for b in waxes)
+                    res = np.where(valid.reshape(vshape), res, win[wsel])
+                win[wsel] = res
+                tgt[osel] = win
+    return arrays
+
+
 def lower_jax_parametric(
     pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
     *, params: tuple[str, ...] = ("n",), chunk: int = _PARAM_CHUNK,
-    pnest: ParamNest | None = None,
+    pnest: ParamNest | None = None, param_path: str = "auto",
+    assume_full: bool = False,
 ) -> Callable:
     """Build ``step(arrays, pvals) -> arrays`` with the working-set
     parameter(s) as *traced operands* instead of baked constants.
@@ -520,22 +1045,60 @@ def lower_jax_parametric(
     *runtime* working set — a ladder shares one compiled program without
     every rung paying capacity-sized sweeps.
 
-    Reads and the write are gather/scatter over the chunk lanes; lanes
-    past the dynamic point count (or outside the domain, for guarded
-    nests) are masked onto index -1 and dropped, mirroring the
-    specialized gather path. Preconditions checked by the caller via
-    ``ParamNest.admits``: every requested env must satisfy the nest's
-    divisibility constraints.
-    """
-    if pattern.kernel is not None:
-        from .schedule import SymbolicLowerError
+    ``param_path`` picks the lowering regime: ``"auto"`` prefers the
+    strided fast path (dynamic-slice windows — see
+    :func:`param_strided_plan`) and falls back to masked gather/scatter;
+    ``"strided"`` requires the fast path (raises
+    :class:`~repro.core.schedule.SymbolicLowerError` when ineligible);
+    ``"gather"`` pins the masked form (the reference regime the tests
+    compare against). The returned step carries the chosen regime as
+    ``step.param_path``. ``assume_full`` selects the strided emitter's
+    mask-free hot mode — only valid when every env the step will run
+    satisfies ``window extent >= chunk`` (see
+    :func:`param_strided_window`).
 
+    Caller contract of the strided regime: every env the step runs must
+    pass :func:`param_strided_in_bounds` — a window that leaves the
+    capacity shapes is silently *clamped* by ``lax.dynamic_slice``, i.e.
+    misaligned, not an error. ``Driver`` verifies this per ladder before
+    choosing the regime; direct users of this function (with patterns
+    whose spaces do not scale with the working set) must check it
+    themselves or pin ``param_path="gather"``, which is safe at every
+    env that ``ParamNest.admits``.
+
+    On the gather path, reads and the write are gather/scatter over the
+    chunk lanes; lanes past the dynamic point count (or outside the
+    domain, for guarded nests) are masked onto index -1 and dropped,
+    mirroring the specialized gather path. Preconditions checked by the
+    caller via ``ParamNest.admits``: every requested env must satisfy
+    the nest's divisibility constraints.
+    """
+    from .schedule import SymbolicLowerError
+
+    if param_path not in ("auto", "strided", "gather"):
+        raise ValueError(f"unknown param_path {param_path!r}")
+    if pattern.kernel is not None:
         raise SymbolicLowerError(
             f"pattern {pattern.name!r} has a custom kernel; the parametric "
             "path cannot share it (env is baked into the step)"
         )
     if pnest is None:
         pnest = schedule.lower_symbolic(pattern.domain, params)
+    splan = (param_strided_plan(pattern, pnest)
+             if param_path != "gather" else None)
+    if param_path == "strided" and splan is None:
+        raise SymbolicLowerError(
+            f"pattern {pattern.name!r} under schedule {schedule.name!r} is "
+            "not strided-eligible (single-band constant-stride unguarded "
+            "nests only); use param_path='auto' to fall back to gather"
+        )
+    if splan is not None:
+        step = _lower_param_strided(
+            pattern, pnest, splan, tuple(params), cap_env, chunk,
+            assume_full=assume_full,
+        )
+        step.param_path = "strided"
+        return step
     stmt = pattern.statement
     iter_names = pattern.domain.names
     plans = tuple(
@@ -635,6 +1198,7 @@ def lower_jax_parametric(
 
         return jax.lax.fori_loop(0, nchunks, body, arrays)
 
+    step.param_path = "gather"
     return step
 
 

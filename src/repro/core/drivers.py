@@ -172,6 +172,15 @@ class DriverConfig:
     # its divisibility constraints, else fall back; True = require the
     # parametric path (raise if unsupported).
     parametric: bool | str | None = None
+    # Parametric lowering regime: "auto" prefers the strided fast path
+    # (dynamic-slice windows — per-call cost matches the specialized
+    # strided path) and falls back to masked gather/scatter; "strided"
+    # requires the fast path (the ladder specializes — or raises under
+    # parametric=True — when the nest is ineligible); "gather" pins the
+    # masked form (the reference regime conformance tests pin down).
+    # Records report the chosen regime as extra["param_path"]
+    # ("specialized" when the point did not share an executable at all).
+    param_path: str = "auto"
 
 
 @dataclasses.dataclass
@@ -214,6 +223,11 @@ class Driver:
     def __init__(self, pattern_factory: Callable[[Mapping[str, int]], PatternSpec],
                  config: DriverConfig,
                  cache: TranslationCache | None = None):
+        if config.param_path not in ("auto", "strided", "gather"):
+            raise ValueError(
+                f"unknown param_path {config.param_path!r} "
+                "(expected 'auto', 'strided', or 'gather')"
+            )
         self.factory = pattern_factory
         self.cfg = config
         self.cache = cache if cache is not None else GLOBAL_CACHE
@@ -256,13 +270,67 @@ class Driver:
         )
 
     def lower_parametric(self, cap_env: Mapping[str, int],
-                         params: tuple[str, ...] = ("n",)) -> ParamLowered:
+                         params: tuple[str, ...] = ("n",),
+                         param_path: str | None = None,
+                         chunk: int | None = None,
+                         assume_full: bool = False) -> ParamLowered:
         """Stage 1, shape-polymorphic: one artifact for a whole ladder,
-        capacity-allocated at ``cap_env``."""
+        capacity-allocated at ``cap_env``.
+
+        ``param_path``/``chunk``/``assume_full`` are the ladder-resolved
+        regime — ``prepare``/``validate_parametric`` compute them from
+        the concrete envs (including the per-env window-bounds check) so
+        cache keys are deterministic per ladder. A direct call without
+        ``param_path`` gets the **gather** regime: only ladder
+        resolution can prove the strided windows safe for the rungs the
+        caller intends to run, so the capacity-only entry point defaults
+        to the regime that is safe at every admitted env.
+        """
         pat, sch, _ = self._templated(cap_env)
         return stage_lower_parametric(
-            pat, sch, cap_env, params, self.cfg.backend, cache=self.cache
+            pat, sch, cap_env, params, self.cfg.backend,
+            param_path=param_path or "gather", chunk=chunk,
+            assume_full=assume_full, cache=self.cache
         )
+
+    def _resolve_param_path(
+        self, envs: Sequence[Mapping[str, int]],
+        cap_env: Mapping[str, int],
+    ) -> tuple[str, int | None, bool]:
+        """The concrete regime a viable ladder runs, as ``(path, chunk,
+        assume_full)``: the config's preference checked against strided
+        eligibility plus the exact per-env window-bounds test (a window
+        that could leave the capacity shapes would be silently clamped —
+        misaligned — so any such env demotes the whole ladder to
+        gather). For strided ladders, ``param_strided_window`` clamps
+        the chunk to the smallest rung where that keeps windows big,
+        which buys the mask-free hot emitter."""
+        cfg = self.cfg
+        if cfg.param_path == "gather":
+            return "gather", None, False
+        from .codegen import (
+            param_strided_in_bounds,
+            param_strided_plan,
+            param_strided_window,
+        )
+
+        pat, sch, _ = self._templated(cap_env)
+        pnest = sch.lower_symbolic(pat.domain, ("n",))
+        splan = param_strided_plan(pat, pnest)
+        if splan is not None:
+            chunk, full = param_strided_window(pnest, splan, list(envs),
+                                               cap_env)
+            if all(param_strided_in_bounds(pat, pnest, splan, e, cap_env,
+                                           chunk)
+                   for e in envs):
+                return "strided", chunk, full
+        if cfg.param_path == "strided":
+            raise SymbolicLowerError(
+                f"param_path='strided' but the ladder is not strided-"
+                f"eligible under {cfg.template}/"
+                f"{(cfg.schedule or identity()).name}"
+            )
+        return "gather", None, False
 
     def _parametric_viable(self, envs: Sequence[Mapping[str, int]],
                            cap_env: Mapping[str, int]) -> bool:
@@ -372,10 +440,23 @@ class Driver:
         )
         if want_parametric:
             cap_env = max(envs, key=lambda e: e["n"])
+            resolved = None
             if self._parametric_viable(envs, cap_env):
+                try:
+                    # single resolution pass: a forced-strided ladder
+                    # that is not window-safe raises here and falls
+                    # through to specialization (or re-raises under
+                    # parametric=True)
+                    resolved = self._resolve_param_path(envs, cap_env)
+                except SymbolicLowerError:
+                    resolved = None
+            if resolved is not None:
+                path, chunk, full = resolved
                 preps = []
                 for env in envs:
-                    lw = self.lower_parametric(cap_env)
+                    lw = self.lower_parametric(
+                        cap_env, param_path=path, chunk=chunk,
+                        assume_full=full)
                     c = lw.compile(
                         ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
                         cache=self.cache,
@@ -481,6 +562,8 @@ class Driver:
                     "lower_seconds": p.lowered.lower_seconds,
                     "cache_hit": p.compiled.from_cache,
                     "parametric": p.parametric,
+                    "param_path": (p.compiled.param_path if p.parametric
+                                   else "specialized"),
                     **({"capacity": int(p.lowered.cap_env["n"])}
                        if p.parametric else {}),
                 },
@@ -515,10 +598,12 @@ class Driver:
                 f"ladder {list(working_sets)} is not parametric under "
                 f"{cfg.template}"
             )
+        path, chunk, full = self._resolve_param_path(envs, cap_env)
         if max_check_n is not None:
             lo = min(envs, key=lambda e: e["n"])
             envs = [e for e in envs if e["n"] <= max_check_n] or [lo]
-        lw = self.lower_parametric(cap_env)
+        lw = self.lower_parametric(cap_env, param_path=path, chunk=chunk,
+                                   assume_full=full)
         vkey = None
         if lw.key is not None:
             vkey = ("pvalidate", lw.key,

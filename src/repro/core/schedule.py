@@ -157,6 +157,28 @@ class ParamInstance:
     c: tuple[Affine, ...]
 
 
+def _const_int(aff: Affine) -> int | None:
+    """The value of a parameter-free integral Affine, else None."""
+    if not aff.is_const:
+        return None
+    v = aff.const
+    if isinstance(v, int):
+        return v
+    return int(v) if getattr(v, "denominator", 1) == 1 else None
+
+
+def _provably_nonneg(aff: Affine) -> bool:
+    """True when ``aff >= 0`` for every admissible environment.
+
+    Sound under the standing assumption that every parameter is a
+    nonnegative size: a nonnegative constant plus nonnegative
+    coefficients can never go negative. Conservative — expressions like
+    ``n - 4`` (true for all measured ladders) are rejected, and the
+    caller falls back to the masked-gather regime.
+    """
+    return aff.const >= 0 and all(c >= 0 for _, c in aff.coeffs)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParamNest:
     """A lowered nest whose band extents (and instance maps) are affine in
@@ -192,6 +214,72 @@ class ParamNest:
                     return False
             except (KeyError, ValueError):
                 return False
+        return True
+
+    # -- strided-eligibility (the parametric fast-path precondition) ---------
+
+    def strided_bands(self) -> "tuple[tuple[tuple[int, int], ...], ...] | None":
+        """Per instance, per domain dim: ``(band, stride)`` — the symbolic
+        twin of the specialized path's single-band precondition.
+
+        Non-None only when every instance map reads exactly one band per
+        domain dim with a *constant integer* stride (no Fraction chunk
+        coefficients — those come from splits, which also break the
+        one-band shape) and each band feeds at most one dim. This is the
+        nest-level half of the dynamic-slice window regime; the access-
+        level half (per-access window strides) lives in codegen.
+        """
+        out = []
+        for inst in self.instances:
+            rows = []
+            used: dict[int, int] = {}
+            for d in range(self.rank):
+                nz = [(b, _const_int(c)) for b, c in enumerate(inst.A[d])
+                      if c != Affine.of(0)]
+                if len(nz) != 1:
+                    return None
+                b, stride = nz[0]
+                if stride is None or stride == 0 or b in used:
+                    return None
+                used[b] = d
+                rows.append((b, stride))
+            out.append(tuple(rows))
+        return tuple(out)
+
+    def window_spans(self) -> "tuple[tuple[tuple[Affine, Affine], ...], ...] | None":
+        """Per instance, per dim: symbolic ``(lo, hi)`` index span over the
+        band box (inclusive), as Affines in the params. None when the
+        nest is not single-band (see :meth:`strided_bands`)."""
+        bands = self.strided_bands()
+        if bands is None:
+            return None
+        spans = []
+        for inst, rows in zip(self.instances, bands):
+            per_dim = []
+            for d, (b, stride) in enumerate(rows):
+                span = (self.band_extents[b] - 1) * stride
+                lo = inst.c[d] + (span if stride < 0 else 0)
+                hi = inst.c[d] + (span if stride > 0 else 0)
+                per_dim.append((lo, hi))
+            spans.append(tuple(per_dim))
+        return tuple(spans)
+
+    def strided_eligible(self) -> bool:
+        """True when every instance is single-band with constant integer
+        strides AND the nest is *provably* unguarded: each instance's
+        symbolic index span stays inside the domain for every admissible
+        env (checked with the conservative nonnegativity test — a span
+        the test cannot prove in bounds falls back to the gather regime,
+        never the other way around)."""
+        spans = self.window_spans()
+        if spans is None:
+            return False
+        for per_dim in spans:
+            for d, (lo, hi) in enumerate(per_dim):
+                if not _provably_nonneg(lo - self.domain_lo[d]):
+                    return False
+                if not _provably_nonneg(self.domain_hi[d] - 1 - hi):
+                    return False
         return True
 
     def concretize(self, env: Mapping[str, int]) -> LoweredNest:

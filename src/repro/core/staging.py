@@ -33,6 +33,7 @@ stages explicit (the JaCe ``lower().compile()`` discipline):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import threading
 import time
@@ -327,6 +328,10 @@ class ParamLowered:
     pnest: Any                      # ParamNest
     key: tuple | None
     lower_seconds: float
+    # which lowering regime the step was built with: "strided" (dynamic-
+    # slice windows, per-call cost matching the specialized path) or
+    # "gather" (masked gather/scatter fallback)
+    param_path: str = "gather"
     cache: "TranslationCache | None" = None
 
     # Driver.run treats lowered.env as the allocation env; for the
@@ -374,7 +379,15 @@ class ParamLowered:
 class ParamCompiled:
     """One executable repetition loop shared by a whole working-set
     ladder: ``run(tup, pvals)`` executes ``ntimes`` sweeps at the working
-    set named by the ``pvals`` scalars."""
+    set named by the ``pvals`` scalars.
+
+    The array operands are **donated**: without donation every call pays
+    a capacity-sized buffer copy (the executable's shapes are the
+    ladder's capacity, not the rung), which is exactly the
+    pattern-independent overhead the strided regime exists to avoid.
+    Consequence: a ``tup`` passed to ``run`` is consumed — reuse the
+    *returned* tuple instead (:meth:`bind` does this threading for the
+    measurement loop automatically)."""
 
     lowered: ParamLowered
     names: tuple[str, ...]
@@ -389,19 +402,71 @@ class ParamCompiled:
     def param_names(self) -> tuple[str, ...]:
         return self.lowered.params
 
+    @property
+    def param_path(self) -> str:
+        """Lowering regime of the shared executable ("strided"/"gather")."""
+        return self.lowered.param_path
+
     def __call__(self, tup, pvals):
         return self.run(tup, pvals)
 
     def bind(self, env: Mapping[str, int]) -> Callable:
-        """Close over one ladder point: returns ``fn(tup) -> tup``."""
+        """Close over one ladder point: returns ``fn(tup) -> tup``.
+
+        The wrapper threads the donated buffers: repeated calls (the
+        timing loop) feed each call's output tuple into the next, so the
+        caller's original ``tup`` is only consumed once — which means a
+        *different* tuple passed to a later call would be silently
+        ignored. That is a measurement-loop contract (the loop re-passes
+        the same seed tuple every rep), so passing anything else raises
+        instead of computing on stale state."""
         pvals = tuple(np.int32(env[p]) for p in self.param_names)
-        return lambda tup: self.run(tup, pvals)
+        state: dict = {}
+
+        def fn(tup):
+            if "tup" in state:
+                if tup is not state["seed"] and tup is not state["tup"]:
+                    raise ValueError(
+                        "bound parametric executable already threads its "
+                        "donated buffers; a new input tuple would be "
+                        "ignored — call bind() again for a fresh stream"
+                    )
+                tup = state["tup"]
+            else:
+                state["seed"] = tup
+            out = self.run(tup, pvals)
+            state["tup"] = out
+            return out
+
+        return fn
 
     def cost_analysis(self) -> dict:
         ca = self.executable.cost_analysis() or {}
         if isinstance(ca, (list, tuple)):
             ca = ca[0] if ca else {}
         return ca
+
+
+# Donated executables and jax's persistent compilation cache do not mix
+# on this jaxlib: a donated executable *deserialized* from the disk
+# cache segfaults at call time. The cache cannot be suspended per
+# compile either — jax latches its use-the-cache decision once per
+# process (``compilation_cache.is_cache_used``), so toggling the config
+# around one compile either does nothing or kills the cache for every
+# compile that follows (observed: the smoke suite's disk traffic
+# dropped to zero). Instead, each donated compile gets a process-unique
+# module name: the name is part of the cache key, so a donated
+# executable can never be *retrieved* from disk (no deserialization, no
+# segfault) while specialized compiles keep their cross-run cache hits.
+# Cost: donated compiles write never-reused entries (~one per ladder).
+_donated_serial = itertools.count()
+
+
+def _compile_donated(fn, avals, pavals):
+    fn.__name__ = (
+        f"{fn.__name__}_donated_{os.getpid()}_{next(_donated_serial)}"
+    )
+    return jax.jit(fn, donate_argnums=(0,)).lower(avals, pavals).compile()
 
 
 def _build_param_compiled(lowered: ParamLowered, ntimes: int,
@@ -416,8 +481,11 @@ def _build_param_compiled(lowered: ParamLowered, ntimes: int,
 
     avals, pavals = lowered.avals()
     t0 = time.perf_counter()
+    # donate the array operands: undonated calls copy the full
+    # capacity-shaped buffers on every invocation, a cost proportional to
+    # the ladder *capacity* rather than the rung being measured
     if sync_every_rep:
-        exe = jax.jit(step_t).lower(avals, pavals).compile()
+        exe = _compile_donated(step_t, avals, pavals)
 
         def run(tup, pvals):
             for _ in range(ntimes):
@@ -430,7 +498,7 @@ def _build_param_compiled(lowered: ParamLowered, ntimes: int,
                 0, ntimes, lambda _, t: step_t(t, pvals), tup
             )
 
-        exe = jax.jit(fused).lower(avals, pavals).compile()
+        exe = _compile_donated(fused, avals, pavals)
         run = exe
     compile_seconds = time.perf_counter() - t0
     return ParamCompiled(
@@ -639,15 +707,20 @@ def stage_lower(
 def stage_lower_parametric(
     pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
     params: tuple[str, ...] = ("n",), backend: str = "jax", *,
+    param_path: str = "auto", chunk: int | None = None,
+    assume_full: bool = False,
     cache: TranslationCache | None = None,
 ) -> ParamLowered:
     """Shape-polymorphic stage 1: keep ``params`` symbolic, through the
     cache. The key deliberately omits the per-point env — every ladder
-    point maps onto one entry, which is the whole point.
+    point maps onto one entry, which is the whole point — but it *does*
+    fingerprint the requested ``param_path`` regime, so a forced-gather
+    artifact never masquerades as the strided one (and vice versa).
 
     Raises :class:`~repro.core.schedule.SymbolicLowerError` when a
-    transform genuinely needs concrete extents; callers fall back to
-    per-size :func:`stage_lower` specialization.
+    transform genuinely needs concrete extents (or ``param_path=
+    "strided"`` is requested for an ineligible nest); callers fall back
+    to per-size :func:`stage_lower` specialization.
     """
     from . import codegen
 
@@ -663,7 +736,7 @@ def stage_lower_parametric(
         key = (
             "plower", fingerprint_pattern(pattern),
             fingerprint_schedule(schedule), backend, params,
-            _env_key(cap_env),
+            str(param_path), chunk, bool(assume_full), _env_key(cap_env),
         )
     except Exception:
         key = None
@@ -671,13 +744,16 @@ def stage_lower_parametric(
     def builder() -> ParamLowered:
         t0 = time.perf_counter()
         pnest = schedule.lower_symbolic(pattern.domain, params)
+        kw = {} if chunk is None else {"chunk": int(chunk)}
         step = codegen.lower_jax_parametric(
-            pattern, schedule, cap_env, params=params, pnest=pnest
+            pattern, schedule, cap_env, params=params, pnest=pnest,
+            param_path=param_path, assume_full=assume_full, **kw,
         )
         return ParamLowered(
             pattern=pattern, schedule=schedule, cap_env=cap_env,
             params=params, backend=backend, step=step, pnest=pnest,
-            key=key, lower_seconds=time.perf_counter() - t0, cache=cache,
+            key=key, lower_seconds=time.perf_counter() - t0,
+            param_path=getattr(step, "param_path", "gather"), cache=cache,
         )
 
     if cache is None or key is None:

@@ -13,9 +13,10 @@ The multi-axis entries at the bottom are the plan engine's
 scenario-generality proof: ``mess_load_sweep`` sweeps *DriverConfig*
 axes (``programs`` × ``ntimes`` pressure), ``spatter_nonuniform``
 sweeps a *pattern-factory* axis (stride) against the working-set axis,
-and ``pointer_chase`` rides a plain env axis with a serial-dependent
-custom kernel — three sweep dimensions no single-axis ladder could
-express.
+``pointer_chase`` rides a plain env axis with a serial-dependent
+custom kernel, and ``mess_calibrated`` zips working set against burst
+length so a latency variant and a bandwidth variant sample the same
+pressure points — sweep shapes no single-axis ladder could express.
 
 Fully custom experiments (the Pallas tile sweep, the roofline refresh)
 register themselves from their ``benchmarks`` modules with a ``runner``.
@@ -343,6 +344,48 @@ register(Workload(
     ),
     parametric=False,          # custom kernel: env is baked into the step
     derived=_chase_derived,
+))
+
+
+# -- mess_calibrated: latency and bandwidth at matched pressure points -------
+# Mess calibrates its bandwidth–latency curves by measuring both at the
+# same load point. The zip-mode plan delivers the pairing declaratively:
+# working set and burst length (ntimes) rise in lockstep, and each zipped
+# point runs BOTH variants — the serial pointer chase (load-to-use
+# ns/access) and the independent-template triad (achieved GB/s) — so
+# records pairing off on identical ``extra.axis_point`` coordinates are
+# the calibrated (latency, bandwidth) sample for that pressure point.
+# The chase keeps its custom-kernel constraints (programs=1, specialized
+# lowering); the triad rides the strided-parametric regime wherever the
+# ladder shares an executable.
+
+def _calibrated_derived(rec: Record) -> str:
+    if rec.pattern == "pointer_chase":
+        return f"{latency_ns(rec):.2f}ns/access;level={rec.level}"
+    us = latency_ns(rec, accesses_per_point=3) / 1e3
+    return f"{rec.gbs:.3f}GB/s;{us:.6f}us/access"
+
+
+register(Workload(
+    name="mess_calibrated",
+    figure="mess",
+    title="Mess calibration: chase latency + triad bandwidth, matched points",
+    tags=("mess", "latency"),
+    variants=(
+        VariantSpec("latency", DriverConfig(
+            template="unified", programs=1, reps=2, validate_n=64,
+            parametric=False),
+            pattern=lambda env: pointer_chase()),
+        VariantSpec("bandwidth", DriverConfig(
+            template="independent", programs=4, reps=2),
+            pattern=lambda env: triad()),
+    ),
+    plan=SweepPlan.zip(
+        env_axis((1 << 10, 1 << 14, 1 << 17),
+                 (1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20)),
+        config_axis("ntimes", (2, 4, 8), (2, 2, 4, 4, 8, 8)),
+    ),
+    derived=_calibrated_derived,
 ))
 
 

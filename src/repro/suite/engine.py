@@ -72,7 +72,7 @@ def _wrap_factory(base: Callable, kwargs: tuple) -> Callable:
 
 def _grouped(variant: VariantSpec, base_factory: Callable | None,
              points: Sequence[PlanPoint], cache: TranslationCache,
-             parametric) -> list[_Group]:
+             parametric, param_path: str | None) -> list[_Group]:
     """Partition a variant's plan points by (config, pattern) identity.
 
     Grouping is global, not run-length: an env axis ordered *before* a
@@ -99,6 +99,8 @@ def _grouped(variant: VariantSpec, base_factory: Callable | None,
             cfg = dataclasses.replace(cfg, **dict(pt.config))
         if cfg.parametric is None and parametric is not None:
             cfg = dataclasses.replace(cfg, parametric=parametric)
+        if param_path is not None and cfg.param_path == "auto":
+            cfg = dataclasses.replace(cfg, param_path=param_path)
         drv = Driver(_wrap_factory(factory, pt.pattern_kwargs), cfg,
                      cache=cache)
         groups[pt.group_key] = _Group(
@@ -116,6 +118,7 @@ def run_plan(
     cache: TranslationCache | None = None,
     validate: bool = True,
     parametric: "bool | str | None" = None,
+    param_path: str | None = None,
     max_check_n: int = 4096,
 ) -> list[PlanRow]:
     """Execute ``plan`` under every variant; returns rows in
@@ -123,15 +126,20 @@ def run_plan(
 
     ``parametric`` is the env-axis-sharing policy applied to configs
     that leave ``DriverConfig.parametric`` unset (None leaves them
-    unset — the driver then specializes). Every group's executables are
-    staged before any timing starts; validation runs once per distinct
+    unset — the driver then specializes). ``param_path`` likewise pins
+    the parametric lowering regime ("strided"/"gather") on configs that
+    leave it at "auto" — the conformance tests use it to run a whole
+    registry under one regime. Every group's executables are staged
+    before any timing starts; validation runs once per distinct
     executable (cache-memoized), with the parametric oracle replay
     bounded to points ``<= max_check_n``.
     """
     cache = cache if cache is not None else GLOBAL_CACHE
     points = plan.points(quick)
-    per_variant = [(v, _grouped(v, factory, points, cache, parametric))
-                   for v in variants]
+    per_variant = [
+        (v, _grouped(v, factory, points, cache, parametric, param_path))
+        for v in variants
+    ]
     groups = [g for _, gs in per_variant for g in gs]
     # stage every group's executables before any timing starts
     precompile([

@@ -35,11 +35,15 @@ def collect_records(
     w: Workload, quick: bool = True, *,
     cache: TranslationCache | None = None,
     parametric: "bool | str | None" = None,
+    param_path: str | None = None,
 ) -> list[tuple[str, Record]]:
     """Measure a declarative workload; returns ``(csv_label, record)``
     pairs. This is the runner's core loop, exposed so tests can compare
     parametric-vs-specialized executions of every registered workload.
-    ``parametric`` overrides the workload-level policy (None = use it).
+    ``parametric`` overrides the workload-level policy (None = use it);
+    ``param_path`` pins the parametric lowering regime on configs that
+    leave it at "auto" (the regime-conformance tests run every workload
+    under "gather" and "strided" and demand identical records).
     """
     if w.runner is not None:
         raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
@@ -48,6 +52,7 @@ def collect_records(
         w.pattern, w.variant_list(quick), w.sweep_plan(),
         quick=quick, cache=cache, validate=w.validate,
         parametric=w.parametric if parametric is None else parametric,
+        param_path=param_path,
     )
     return [
         (f"{w.figure}/{row.variant}/{row.point.label}", row.record)

@@ -259,6 +259,57 @@ def test_mess_load_sweep_record_schema():
         assert "GB/s" in derived and "us/access" in derived
 
 
+def test_mess_calibrated_zip_pairs_latency_with_bandwidth():
+    """The zip-mode calibration scenario: each zipped pressure point
+    (working set, burst length) must yield exactly one latency record
+    and one bandwidth record with IDENTICAL axis_point coordinates, so
+    downstream pairing is a dict join — the Mess calibration contract."""
+    load_builtins()
+    w = suite.workload("mess_calibrated")
+    assert set(w.tags) == {"mess", "latency"}
+    # zip-length validation: quick and full modes must stay in lockstep
+    for quick in (True, False):
+        counts = {len(a.points(quick)) for a in w.sweep_plan().axes}
+        assert len(counts) == 1, (quick, counts)
+    rows = collect_records(w, quick=True, cache=TranslationCache())
+    pts = w.sweep_plan().points(True)
+    assert len(rows) == 2 * len(pts)
+    by_point: dict = {}
+    for lbl, rec in rows:
+        ap = rec.extra["axis_point"]
+        assert set(ap) == {"n", "ntimes"}
+        assert rec.ntimes == ap["ntimes"]     # config axis landed
+        assert rec.n == ap["n"]
+        variant = lbl.split("/")[1]
+        by_point.setdefault(tuple(sorted(ap.items())), {})[variant] = rec
+        derived = w.derived(rec)
+        if variant == "latency":
+            assert rec.pattern == "pointer_chase"
+            assert "ns/access" in derived
+            assert rec.extra["param_path"] == "specialized"
+        else:
+            assert rec.pattern.startswith("triad")  # triad.indep4
+            assert "GB/s" in derived and "us/access" in derived
+    for key, pair in by_point.items():
+        assert set(pair) == {"latency", "bandwidth"}, key
+        # matched pressure: both variants measured the same point
+        assert pair["latency"].n == pair["bandwidth"].n
+        assert pair["latency"].ntimes == pair["bandwidth"].ntimes
+        assert latency_ns(pair["latency"]) > 0.0, key
+
+
+def test_mess_calibrated_zip_mismatch_is_loud():
+    """A zip plan whose axes disagree on point counts must fail at
+    expansion, not mid-measurement."""
+    load_builtins()
+    w = suite.workload("mess_calibrated")
+    bad = dataclasses.replace(
+        w, plan=SweepPlan.zip(env_axis((256, 512)),
+                              config_axis("ntimes", (2,))))
+    with pytest.raises(ValueError, match="disagree"):
+        collect_records(bad, quick=True, cache=TranslationCache())
+
+
 def test_spatter_nonuniform_specializes_strides_shares_envs():
     load_builtins()
     w = suite.workload("spatter_nonuniform")
@@ -401,7 +452,7 @@ def test_run_list_tag_filter(capsys):
     main(["--list", "--tag", "latency,mess"])
     out = capsys.readouterr().out
     listed = {ln.split()[0] for ln in out.strip().splitlines()}
-    assert listed == {"mess_load_sweep", "pointer_chase"}
+    assert listed == {"mess_load_sweep", "pointer_chase", "mess_calibrated"}
     # the custom paper-figure runners belong to the family too
     main(["--list", "--tag", "paper-figs"])
     out = capsys.readouterr().out

@@ -1,0 +1,508 @@
+"""Lowering-regime equivalence layer (the PR-4 acceptance contract).
+
+Property-based (hypothesis, or the deterministic stub when it is
+absent): over randomized pattern/stride/offset/extent/schedule/programs
+combinations, every regime must agree —
+
+    specialized strided  ==  parametric strided  ==  parametric gather
+                         ==  serial oracle       ==  numpy window mirror
+
+with the mirror compared bit-for-bit over the *whole* capacity arrays
+(tail lanes, pad columns and all), not just the measured region. The
+non-property tests pin the precondition edge cases: forced regimes,
+indivisible tiles, zero-stride (constant-index) reads, negative strides,
+mixed-sign and diagonal accesses, fixed-size spaces that fail the
+window-bounds check, and single-point-ladder fallback — each reporting
+its regime through ``extra.param_path``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Access,
+    Affine,
+    DataSpace,
+    Driver,
+    DriverConfig,
+    PatternSpec,
+    Statement,
+    SymbolicLowerError,
+    TranslationCache,
+    domain,
+    gather,
+    gather_scatter,
+    identity,
+    jacobi1d,
+    nstream,
+    param_strided_plan,
+    scatter,
+    triad,
+    windowed_oracle,
+)
+from repro.core.codegen import (
+    lower_jax,
+    lower_jax_parametric,
+    param_strided_in_bounds,
+    plan_nest,
+    serial_oracle,
+)
+from repro.core.drivers import independent_view
+from repro.core.staging import stage_lower_parametric
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _offset_stream(off: int) -> PatternSpec:
+    """A[i] = 2 * B[i + off] — exercises constant index offsets."""
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("B", (i + off,)),),
+        write=Access("A", (i,)),
+        combine=lambda vals, env: vals[0] * np.float32(2.0),
+    )
+    return PatternSpec(
+        f"ostream{off}",
+        (
+            DataSpace("A", ("n",), "float32", 0.0),
+            DataSpace("B", (Affine.of("n") + off,), "float32",
+                      lambda i: (i % 13).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+
+
+def _run_param(pat, sch, env, cap_env, chunk, path):
+    """Two sweeps of the parametric step at ``env`` on capacity arrays."""
+    step = lower_jax_parametric(
+        pat, sch, cap_env, chunk=chunk, param_path=path
+    )
+    assert step.param_path == path
+    got = {k: jnp.asarray(v) for k, v in pat.allocate(cap_env).items()}
+    pv = (np.int32(env["n"]),)
+    for _ in range(2):
+        got = step(got, pv)
+    return {k: np.asarray(v) for k, v in got.items()}
+
+
+def _assert_region(pat, env, got, want, label):
+    for k in want:
+        region = tuple(slice(0, d) for d in pat.space(k).concrete_shape(env))
+        np.testing.assert_allclose(
+            got[k][region], want[k], rtol=1e-5, atol=1e-5,
+            err_msg=f"{label}: space {k} diverged at n={env['n']}",
+        )
+
+
+def _check_all_regimes(pat, sch, env, cap_env, chunk):
+    """The four-way (plus mirror) agreement check for one case."""
+    pnest = sch.lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    assert splan is not None, (pat.name, sch.name)
+    assert param_strided_in_bounds(pat, pnest, splan, env, cap_env, chunk)
+
+    nest = sch.lower(pat.domain, env)
+    arrays = pat.allocate(env)
+    want = serial_oracle(pat, nest, arrays, env, ntimes=2)
+
+    # specialized path (strided-slice fast form whenever the plan admits it)
+    step = lower_jax(pat, sch, env)
+    got = {k: jnp.asarray(v) for k, v in arrays.items()}
+    for _ in range(2):
+        got = step(got)
+    _assert_region(pat, env, {k: np.asarray(v) for k, v in got.items()},
+                   want, "specialized")
+
+    strided = _run_param(pat, sch, env, cap_env, chunk, "strided")
+    _assert_region(pat, env, strided, want, "parametric-strided")
+    gathered = _run_param(pat, sch, env, cap_env, chunk, "gather")
+    _assert_region(pat, env, gathered, want, "parametric-gather")
+
+    # the numpy mirror must agree with the jax strided step on the WHOLE
+    # capacity arrays — tail lanes and untouched slack included
+    mirror = windowed_oracle(pat, sch, env, cap_env, pat.allocate(cap_env),
+                             ntimes=2, chunk=chunk)
+    for k in mirror:
+        np.testing.assert_allclose(
+            strided[k], mirror[k], rtol=1e-5, atol=1e-5,
+            err_msg=f"mirror: space {k} diverged at n={env['n']}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# the property: all regimes agree on random cases
+# ---------------------------------------------------------------------------
+
+# base unit divisible by every interleave/unroll factor and program count
+# drawn below, so divisibility constraints hold by construction
+_M = 12
+
+_params = st.composite
+
+
+@_params
+def _cases(draw):
+    kind = draw(st.sampled_from(
+        ["triad", "nstream", "gather", "scatter", "gather_scatter",
+         "jacobi1d", "ostream"]))
+    if kind == "triad":
+        pat, halo = triad(), 0
+    elif kind == "nstream":
+        pat, halo = nstream(draw(st.integers(1, 4))), 0
+    elif kind == "gather":
+        pat, halo = gather(stride=draw(st.integers(1, 5))), 0
+    elif kind == "scatter":
+        pat, halo = scatter(stride=draw(st.integers(1, 5))), 0
+    elif kind == "gather_scatter":
+        pat, halo = gather_scatter(stride=draw(st.integers(1, 5))), 0
+    elif kind == "ostream":
+        pat, halo = _offset_stream(draw(st.integers(0, 4))), 0
+    else:
+        pat, halo = jacobi1d(), 2
+
+    programs = draw(st.sampled_from([1, 2, 4]))
+    if programs > 1 and kind != "jacobi1d":
+        # the independent template rewrite (jacobi's halo'd interior
+        # would need transformed ladder points; keep it single-program)
+        pat = independent_view(pat, programs)
+
+    sched = draw(st.sampled_from(["identity", "reverse", "interleave",
+                                  "unroll"]))
+    sch = identity()
+    if sched == "reverse":
+        sch = sch.reverse("i")
+    elif sched == "interleave":
+        sch = sch.interleave("i", draw(st.sampled_from([2, 3])))
+    elif sched == "unroll":
+        sch = sch.unroll("i", draw(st.sampled_from([2, 3])))
+
+    n = _M * draw(st.integers(1, 4)) + halo
+    cap = n + _M * draw(st.integers(0, 3))
+    chunk = draw(st.sampled_from([4, 8, 16, 64]))
+    return pat, sch, {"n": n}, {"n": cap}, chunk
+
+
+@pytest.mark.slow
+@settings(max_examples=12, deadline=None)
+@given(_cases())
+def test_all_regimes_agree_on_random_cases(case):
+    pat, sch, env, cap_env, chunk = case
+    _check_all_regimes(pat, sch, env, cap_env, chunk)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 11), st.sampled_from([4, 16]))
+def test_partial_windows_agree(n, chunk):
+    """Rungs smaller than one window take the masked branch for every
+    pattern shape — including the padded independent template whose pad
+    columns must keep their init values."""
+    _check_all_regimes(triad(), identity(), {"n": n}, {"n": 48}, chunk)
+    _check_all_regimes(triad(), identity().reverse("i"), {"n": n},
+                       {"n": 48}, chunk)
+    pad = independent_view(triad(), 2, pad=5)
+    _check_all_regimes(pad, identity(), {"n": n}, {"n": 48}, chunk)
+
+
+# ---------------------------------------------------------------------------
+# precondition edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_forced_strided_raises_on_ineligible_nest():
+    pat = triad()
+    sch = identity().tile_by_count("i", 4, outer="prog", inner="i")
+    with pytest.raises(SymbolicLowerError, match="strided-eligible"):
+        lower_jax_parametric(pat, sch, {"n": 64}, param_path="strided")
+    # auto on the same nest silently takes the gather regime
+    step = lower_jax_parametric(pat, sch, {"n": 64}, param_path="auto")
+    assert step.param_path == "gather"
+    with pytest.raises(ValueError, match="param_path"):
+        lower_jax_parametric(pat, identity(), {"n": 64}, param_path="nope")
+
+
+def test_param_path_flows_through_staging():
+    lw = stage_lower_parametric(triad(), identity(), {"n": 256})
+    assert lw.param_path == "strided"
+    c = lw.compile(ntimes=2)
+    assert c.param_path == "strided"
+    lw2 = stage_lower_parametric(triad(), identity(), {"n": 256},
+                                 param_path="gather")
+    assert lw2.param_path == "gather"
+
+
+def test_indivisible_tile_falls_back_to_specialized():
+    """A ladder violating a symbolic divisibility constraint cannot share
+    an executable at all — records report param_path='specialized'."""
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=2, ntimes=2,
+                            reps=1, schedule=identity().tile("i", 48),
+                            parametric="auto"), cache=TranslationCache())
+    recs = d.run([256, 128])
+    assert [r.extra["param_path"] for r in recs] == ["specialized"] * 2
+
+
+def test_single_point_ladder_reports_specialized():
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=2, ntimes=2,
+                            reps=1, parametric="auto"),
+               cache=TranslationCache())
+    (rec,) = d.run([512])
+    assert rec.extra["param_path"] == "specialized"
+    assert not rec.extra["parametric"]
+
+
+def test_zero_stride_read_broadcasts():
+    """A constant-index (stride-0) read is a broadcast lane, not a window
+    — still strided-eligible."""
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("B", (i,)), Access("S", (0,))),
+        write=Access("A", (i,)),
+        combine=lambda vals, env: vals[0] + vals[1],
+    )
+    pat = PatternSpec(
+        "bias_stream",
+        (
+            DataSpace("A", ("n",), "float32", 0.0),
+            DataSpace("B", ("n",), "float32",
+                      lambda i: (i % 7).astype(np.float32)),
+            DataSpace("S", (1,), "float32", 2.5),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+    _check_all_regimes(pat, identity(), {"n": 24}, {"n": 36}, 8)
+    _check_all_regimes(pat, identity(), {"n": 5}, {"n": 36}, 8)
+
+
+def test_negative_stride_windows_via_reverse():
+    """reverse() negates every access uniformly, so a reversed Spatter
+    gather runs descending |stride|=2 windows with symbolic offsets —
+    strided-eligible, unlike a hand-mixed-sign statement (below)."""
+    _check_all_regimes(gather(stride=2), identity().reverse("i"),
+                       {"n": 24}, {"n": 36}, 8)
+    _check_all_regimes(gather(stride=2), identity().reverse("i"),
+                       {"n": 6}, {"n": 36}, 16)
+    _check_all_regimes(scatter(stride=3), identity().reverse("i"),
+                       {"n": 24}, {"n": 36}, 8)
+
+
+def test_mixed_sign_accesses_fall_back_to_gather():
+    """S[i] and T[n-1-i] in one statement disagree on the band sign —
+    unsliceable, so auto takes the gather regime (and still validates)."""
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("S", (i,)), Access("T", (Affine.of("n") - 1 - i,))),
+        write=Access("D", (i,)),
+        combine=lambda vals, env: vals[0] + vals[1],
+    )
+    pat = PatternSpec(
+        "fold",
+        (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("S", ("n",), "float32",
+                      lambda i: (i % 5).astype(np.float32)),
+            DataSpace("T", ("n",), "float32",
+                      lambda i: (i % 3).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+    pnest = identity().lower_symbolic(pat.domain, ("n",))
+    assert param_strided_plan(pat, pnest) is None
+    env, cap = {"n": 24}, {"n": 32}
+    want = serial_oracle(pat, identity().lower(pat.domain, env),
+                         pat.allocate(env), env, ntimes=2)
+    got = _run_param(pat, identity(), env, cap, 8, "gather")
+    _assert_region(pat, env, got, want, "mixed-sign gather")
+
+
+def test_self_aliasing_statement_falls_back_to_gather():
+    """A[i] = A[i] + B[i] reads its own write space: the min-start window
+    overlap would re-read updated lanes, so the strided regime must
+    refuse it (the gather regime visits every lane exactly once and
+    still matches the oracle)."""
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("A", (i,)), Access("B", (i,))),
+        write=Access("A", (i,)),
+        combine=lambda vals, env: vals[0] + vals[1],
+    )
+    pat = PatternSpec(
+        "accum",
+        (
+            DataSpace("A", ("n",), "float32", 1.0),
+            DataSpace("B", ("n",), "float32",
+                      lambda i: (i % 3).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+    pnest = identity().lower_symbolic(pat.domain, ("n",))
+    assert param_strided_plan(pat, pnest) is None
+    env, cap = {"n": 10}, {"n": 16}
+    want = serial_oracle(pat, identity().lower(pat.domain, env),
+                         pat.allocate(env), env, ntimes=2)
+    got = _run_param(pat, identity(), env, cap, 4, "gather")
+    _assert_region(pat, env, got, want, "self-aliasing gather")
+    d = Driver(lambda env: pat,
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, parametric="auto"),
+               cache=TranslationCache())
+    recs = d.run([256, 512])
+    assert {r.extra["param_path"] for r in recs} == {"gather"}
+
+
+def test_unknown_param_path_raises_at_construction():
+    with pytest.raises(ValueError, match="param_path"):
+        Driver(lambda env: triad(), DriverConfig(param_path="Strided"))
+
+
+def test_diagonal_access_falls_back_to_gather():
+    """M[i, i] references one band in two dims — never window-sliceable."""
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("M", (i, i)),),
+        write=Access("D", (i,)),
+        combine=lambda vals, env: vals[0],
+    )
+    pat = PatternSpec(
+        "diag",
+        (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("M", ("n", "n"), "float32",
+                      lambda i, j: (i * 2 + j).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+    pnest = identity().lower_symbolic(pat.domain, ("n",))
+    assert param_strided_plan(pat, pnest) is None
+    step = lower_jax_parametric(pat, identity(), {"n": 16})
+    assert step.param_path == "gather"
+
+
+def test_bounds_check_demotes_fixed_size_spaces():
+    """A tail-anchored read of a FIXED-size buffer (A[i] = B[K - n + i],
+    reading B's last n elements): rungs smaller than one window would
+    slice past B's end — those envs fail the exact bounds check, so the
+    driver demotes that ladder to gather, while a ladder of window-safe
+    rungs keeps the strided regime."""
+    K = 40
+    i = Affine.of("i")
+    stmt = Statement(
+        reads=(Access("B", (i + K - Affine.of("n"),)),),
+        write=Access("A", (i,)),
+        combine=lambda vals, env: vals[0],
+    )
+    pat = PatternSpec(
+        "tailstream",
+        (
+            DataSpace("A", ("n",), "float32", 0.0),
+            DataSpace("B", (K,), "float32",
+                      lambda i: (i % 11).astype(np.float32)),
+        ),
+        stmt,
+        domain(("i", 0, "n")),
+    )
+    pnest = identity().lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    assert splan is not None
+    cap = {"n": 32}
+    chunk = 16  # C = 16: a rung of 8 reads window [K-8, K-8+16) past B
+    assert param_strided_in_bounds(pat, pnest, splan, {"n": 16}, cap, chunk)
+    assert param_strided_in_bounds(pat, pnest, splan, {"n": 32}, cap, chunk)
+    assert not param_strided_in_bounds(pat, pnest, splan, {"n": 8}, cap,
+                                       chunk)
+    # through the driver (default chunk: C = capacity extent = 32, so
+    # every partial rung overruns B): auto demotes the ladder to gather
+    # — measured, validated, just not window-sliced
+    cache = TranslationCache()
+    d = Driver(lambda env: pat,
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, parametric="auto"), cache=cache)
+    recs = d.run([8, 16, 32])
+    assert {r.extra["param_path"] for r in recs} == {"gather"}
+    # and the gather fallback still matches the oracle at the risky rung
+    d.validate_parametric([8, 16, 32])
+
+
+def test_assume_full_mode_matches_masked_mode():
+    """The mask-free hot emitter (every chunk provably full) must agree
+    with the masked emitter and its mirror wherever its caller contract
+    holds (window extent >= chunk at every env)."""
+    for pat, sch in [
+        (triad(), identity()),
+        (triad(), identity().reverse("i")),
+        (independent_view(triad(), 2, pad=5), identity()),
+        (gather(stride=3), identity()),
+    ]:
+        env, cap_env, chunk = {"n": 24}, {"n": 48}, 8
+        want = _run_param(pat, sch, env, cap_env, chunk, "strided")
+        step = lower_jax_parametric(pat, sch, cap_env, chunk=chunk,
+                                    param_path="strided", assume_full=True)
+        got = {k: jnp.asarray(v) for k, v in pat.allocate(cap_env).items()}
+        pv = (np.int32(env["n"]),)
+        for _ in range(2):
+            got = step(got, pv)
+        mirror = windowed_oracle(pat, sch, env, cap_env,
+                                 pat.allocate(cap_env), ntimes=2,
+                                 chunk=chunk, assume_full=True)
+        for k in want:
+            np.testing.assert_allclose(np.asarray(got[k]), want[k],
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"assume_full {pat.name}/{k}")
+            np.testing.assert_allclose(np.asarray(got[k]), mirror[k],
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"full-mirror {pat.name}/{k}")
+
+
+def test_driver_clamps_chunk_for_full_ladders():
+    """A ladder whose smallest rung is >= the clamp floor resolves to
+    the mask-free emitter with the chunk clamped to that rung."""
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=4, ntimes=2,
+                            reps=1, parametric="auto"),
+               cache=TranslationCache())
+    envs = d._point_envs([1 << 10, 1 << 12], None)
+    path, chunk, full = d._resolve_param_path(envs, {"n": 1 << 12})
+    assert (path, chunk, full) == ("strided", 1 << 10, True)
+    # a sub-floor rung keeps the default chunk and the masked emitter
+    envs = d._point_envs([256, 1 << 12], None)
+    path, chunk, full = d._resolve_param_path(envs, {"n": 1 << 12})
+    assert path == "strided" and full is False and chunk == 1 << 12
+
+
+def test_windowed_oracle_rejects_ineligible():
+    pat = triad()
+    sch = identity().tile_by_count("i", 4, outer="prog", inner="i")
+    with pytest.raises(ValueError, match="strided-eligible"):
+        windowed_oracle(pat, sch, {"n": 16}, {"n": 64}, pat.allocate({"n": 64}))
+
+
+def test_strided_ladder_compiles_once_and_reports_path():
+    """The acceptance property: a strided-eligible ladder shares ONE
+    executable (1 compile + 1 lower miss), every record says so, and the
+    specialized fast-path plan agrees the nest is strided territory."""
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=4, ntimes=2,
+                            reps=1, parametric="auto"), cache=cache)
+    recs = d.run([256, 512, 1024, 2048])
+    s = cache.stats()
+    assert s["compile_misses"] == 1 and s["lower_misses"] == 1
+    assert all(r.extra["param_path"] == "strided" for r in recs)
+    assert all(r.extra["parametric"] for r in recs)
+    plan = plan_nest(independent_view(triad(), 4), identity(), {"n": 256})
+    assert plan.fast

@@ -1,12 +1,14 @@
-"""Suite-layer + parametric-lowering tests (the PR-2 acceptance contract).
+"""Suite-layer + parametric-lowering tests (the PR-2/PR-4 contracts).
 
 Covers: symbolic lowering equivalence with concrete lowering, the
 parametric executable's value correctness against the serial oracle,
-the one-compile-per-ladder cache property, parametric-vs-specialized
-record equivalence for every registered declarative workload in quick
-mode, registry round-trip against the harness executor, the ladder/CSV
-re-export shim, the Spatter pattern specs, and the disk-cache keying of
-``TranslationCache.stats()``.
+the one-compile-per-ladder cache property, the registry-wide lowering-
+regime conformance sweep (every declarative workload record-equivalent
+under parametric=False/"auto"/True, with the regime each one selects —
+``extra.param_path`` — pinned by an explicit policy table), the
+param_path override lever, registry round-trip against the harness
+executor, the ladder/CSV re-export shim, the Spatter pattern specs, and
+the disk-cache keying of ``TranslationCache.stats()``.
 """
 from __future__ import annotations
 
@@ -146,11 +148,38 @@ def test_parametric_true_raises_when_unsupported():
 
 
 # ---------------------------------------------------------------------------
-# registered workloads: parametric-vs-specialized record equivalence
+# registered workloads: regime conformance (False / "auto" / True)
 # ---------------------------------------------------------------------------
 
 _IDENTITY_FIELDS = ("pattern", "template", "schedule", "backend", "n",
                     "working_set_bytes", "programs", "ntimes", "level")
+
+# Which lowering regime every (workload, variant) is expected to select
+# under parametric="auto" in quick mode. This is the auto policy's
+# contract: unified programs>1 splits the outer band (multi-band nest ->
+# gather), the independent template is single-band (-> strided), custom
+# kernels and single-env-point groups cannot share an executable at all
+# (-> specialized). A regression in the policy shows up here by name.
+_EXPECTED_PATHS = {
+    "fig05_barriers": {"barrier": "gather", "nowait": "gather"},
+    "fig06_dataspaces": {"unified": "gather", "independent": "strided"},
+    "fig07_streams": {None: "specialized"},        # single-point ladder
+    "fig09_interleave": {None: "strided"},         # independent + interleave
+    "fig10_counters": {None: "specialized"},       # single-point ladder
+    "fig12_jacobi1d": {"unified": "gather", "independent": "strided",
+                       "indep_padded": "strided"},
+    "fig14_jacobi2d": {"unified": "gather", "independent": "strided"},
+    "fig15_jacobi3d": {"unified": "gather", "independent": "strided"},
+    "spatter_uniform": {None: "gather"},           # unified programs=4
+    "mess_load_sweep": {None: "specialized"},      # one env point per group
+    "pointer_chase": {None: "specialized"},        # custom kernel
+    "spatter_nonuniform": {None: "gather"},        # unified programs=4
+    "mess_calibrated": {None: "specialized"},      # zip: one env point/group
+}
+
+# parametric=True must raise for these (custom kernel with no
+# variant-level parametric pin)
+_TRUE_RAISES = {"pointer_chase"}
 
 
 def _shrunk(w):
@@ -165,24 +194,58 @@ def _shrunk(w):
     return dataclasses.replace(w, variants=variants, post=None)
 
 
-def test_every_registered_workload_parametric_equals_specialized():
+def _variant_of(label: str) -> str:
+    return label.split("/")[1]
+
+
+@pytest.mark.slow
+def test_registry_conformance_across_lowering_regimes():
+    """Every cataloged workload must produce record-equivalent results
+    (same CSV labels, same identity fields) under parametric=False,
+    "auto", and True — and auto must select exactly the regime the
+    policy table above promises, reported via extra.param_path."""
     load_builtins()
     declarative = [w for w in suite.workloads() if w.runner is None]
-    assert len(declarative) >= 9
+    assert len(declarative) >= 10
+    assert {w.name for w in declarative} == set(_EXPECTED_PATHS)
     for w in declarative:
         ws = _shrunk(w)
-        spec = collect_records(ws, quick=True, cache=TranslationCache(),
+        # one shared cache: the specialized executables the False pass
+        # builds are exactly what auto's fallback groups re-use
+        cache = TranslationCache()
+        spec = collect_records(ws, quick=True, cache=cache,
                                parametric=False)
-        par = collect_records(ws, quick=True, cache=TranslationCache(),
-                              parametric="auto")
-        assert [lbl for lbl, _ in spec] == [lbl for lbl, _ in par], w.name
-        for (lbl, rs), (_, rp) in zip(spec, par):
+        auto = collect_records(ws, quick=True, cache=cache,
+                               parametric="auto")
+        assert [lbl for lbl, _ in spec] == [lbl for lbl, _ in auto], w.name
+        for (lbl, rs), (_, rp) in zip(spec, auto):
             for f in _IDENTITY_FIELDS:
                 assert getattr(rs, f) == getattr(rp, f), (w.name, lbl, f)
+            assert rs.extra["param_path"] == "specialized", (w.name, lbl)
+        expect = _EXPECTED_PATHS[w.name]
+        for lbl, rp in auto:
+            want = expect.get(_variant_of(lbl), expect.get(None))
+            assert rp.extra["param_path"] == want, (w.name, lbl)
+        if w.name in _TRUE_RAISES:
+            with pytest.raises(SymbolicLowerError):
+                collect_records(ws, quick=True, cache=cache,
+                                parametric=True)
+            continue
+        true = collect_records(ws, quick=True, cache=cache,
+                               parametric=True)
+        assert [lbl for lbl, _ in spec] == [lbl for lbl, _ in true], w.name
+        for (lbl, rs), (_, rt) in zip(spec, true):
+            for f in _IDENTITY_FIELDS:
+                assert getattr(rs, f) == getattr(rt, f), (w.name, lbl, f)
+            # True forces sharing wherever a variant leaves the policy
+            # unset — including single-point groups
+            if rt.extra["parametric"]:
+                assert rt.extra["param_path"] in ("strided", "gather")
 
 
-def test_at_least_one_workload_shares_a_single_executable():
+def test_workloads_share_single_executables_per_regime():
     load_builtins()
+    # unified programs=4: the whole ladder shares one GATHER executable
     w = _shrunk(suite.workload("fig05_barriers"))
     cache = TranslationCache()
     recs = collect_records(w, quick=True, cache=cache, parametric="auto")
@@ -190,8 +253,44 @@ def test_at_least_one_workload_shares_a_single_executable():
     assert n_points >= 4
     for label, rec in recs:
         assert rec.extra["parametric"], label
+        assert rec.extra["param_path"] == "gather", label
     # one compile per (variant), not per (variant, point)
     assert cache.stats()["compile_misses"] == len(w.variant_list(True))
+    # the independent template shares one STRIDED executable: 1 compile
+    # miss for its whole ladder
+    w6 = _shrunk(suite.workload("fig06_dataspaces"))
+    indep = dataclasses.replace(
+        w6, variants=tuple(v for v in w6.variant_list(True)
+                           if v.label == "independent"))
+    cache6 = TranslationCache()
+    recs6 = collect_records(indep, quick=True, cache=cache6,
+                            parametric="auto")
+    assert [r.extra["param_path"] for _, r in recs6] \
+        == ["strided"] * n_points
+    assert cache6.stats()["compile_misses"] == 1
+
+
+def test_param_path_override_pins_the_regime():
+    """collect_records(param_path=...) pins the regime on auto configs —
+    the conformance lever: forcing fig06's independent ladder onto
+    gather must reproduce the strided records' identity fields."""
+    load_builtins()
+    w6 = _shrunk(suite.workload("fig06_dataspaces"))
+    indep = dataclasses.replace(
+        w6, variants=tuple(v for v in w6.variant_list(True)
+                           if v.label == "independent"))
+    cache = TranslationCache()
+    strided = collect_records(indep, quick=True, cache=cache,
+                              parametric="auto", param_path="strided")
+    gathered = collect_records(indep, quick=True, cache=cache,
+                               parametric="auto", param_path="gather")
+    assert [r.extra["param_path"] for _, r in strided] \
+        == ["strided"] * len(strided)
+    assert [r.extra["param_path"] for _, r in gathered] \
+        == ["gather"] * len(gathered)
+    for (lbl, rs), (_, rg) in zip(strided, gathered):
+        for f in _IDENTITY_FIELDS:
+            assert getattr(rs, f) == getattr(rg, f), (lbl, f)
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +307,7 @@ def test_registry_round_trip_with_harness_executor():
                      "fig09_interleave", "fig10_counters", "fig12_jacobi1d",
                      "fig14_jacobi2d", "fig15_jacobi3d", "spatter_uniform",
                      "mess_load_sweep", "pointer_chase", "spatter_nonuniform",
-                     "fig16_tile_sweep", "roofline"):
+                     "mess_calibrated", "fig16_tile_sweep", "roofline"):
         assert expected in names
     # lookups resolve and are well-formed (declarative entries carry a
     # sweep plan — a multi-axis one or a ladder's one-axis equivalent)
