@@ -1,24 +1,28 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 tests (fast lane first, slow lane after) + the registry
-# smoke suite + harness-perf floors.
+# smoke suite + harness-perf floors + docs drift.
 #
 #   scripts/ci.sh [LEDGER_PATH]
 #
 # Fails on: any pytest failure (the fast lane runs first so breakage is
 # loud in seconds; the slow lane — registry-wide conformance and
-# property sweeps — runs after), any benchmark workload failure, a
-# missing multi-axis scenario (mess_load_sweep / pointer_chase /
-# spatter_nonuniform / mess_calibrated must run in smoke mode), a
-# process-wide translation-cache hit rate below 0.5 on the smoke suite,
-# or a param_path probe violation: every strided-eligible probe ladder
-# must run parametric with param_path == "strided" and exactly 1 compile
-# miss, at a geometric-mean per-call cost <= 1.5x the specialized
-# strided path (the regime-comparability floor this repo maintains).
+# property sweeps — runs after), a docs-drift violation (every
+# registered workload must appear in docs/PAPER_MAP.md), any benchmark
+# workload failure, a missing multi-axis scenario (mess_load_sweep /
+# pointer_chase / spatter_nonuniform / mess_calibrated must run in smoke
+# mode), a process-wide translation-cache hit rate below 0.5 on the
+# smoke suite, or a param_path probe violation: every strided-eligible
+# probe ladder must run parametric with param_path == "strided" and
+# exactly 1 compile miss, at a geometric-mean per-call cost <= 1.5x the
+# specialized strided path (the regime-comparability floor this repo
+# maintains — both sides donated, so the comparison is copy-free), with
+# the 2D stencil ladder (jacobi2d_indep) additionally required to run
+# rank-2 N-D windows.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR4.json}"
+LEDGER="${1:-BENCH_PR5.json}"
 
 echo "== tier-1 pytest (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -26,11 +30,30 @@ python -m pytest -x -q -m "not slow"
 echo "== tier-1 pytest (slow lane: conformance + property sweeps) =="
 python -m pytest -q -m slow
 
+echo "== docs drift (docs/PAPER_MAP.md covers the registry) =="
+python - <<'EOF2'
+import pathlib, sys
+
+from benchmarks.run import registered_names
+
+doc = pathlib.Path("docs/PAPER_MAP.md")
+if not doc.exists():
+    sys.exit("FAIL: docs/PAPER_MAP.md is missing")
+text = doc.read_text()
+orphans = [n for n in registered_names() if f"`{n}`" not in text]
+if orphans:
+    sys.exit(
+        "FAIL: registered workloads missing from docs/PAPER_MAP.md: "
+        f"{orphans} — add a row per workload (name in backticks)"
+    )
+print(f"docs/PAPER_MAP.md covers all {len(registered_names())} workloads")
+EOF2
+
 echo "== benchmarks.run --smoke =="
 python -m benchmarks.run --smoke --out "$LEDGER"
 
 echo "== ledger gates ($LEDGER) =="
-python - "$LEDGER" <<'EOF'
+python - "$LEDGER" <<'EOF2'
 import json, sys
 
 ledger = json.load(open(sys.argv[1]))
@@ -55,10 +78,16 @@ if rate < 0.5:
 probe = ledger.get("param_path_probe", {})
 if not probe or "error" in probe:
     sys.exit(f"FAIL: param_path probe did not run: {probe}")
+# the 2D stencil ladder must be probed, and with N-D (rank-2) windows
+WANT_RANKS = {"jacobi2d_indep": [2]}
+for name in WANT_RANKS:
+    if name not in probe:
+        sys.exit(f"FAIL: probe ladder {name} missing from the ledger")
 for name, p in probe.items():
     print(f"{name}: strided/specialized ratio {p['ratio']:.3f} "
           f"(per rung {p['per_point_ratio']}), "
-          f"paths {p['param_path']}, compile misses {p['compile_misses']}")
+          f"paths {p['param_path']}, rank {p.get('window_rank')}, "
+          f"compile misses {p['compile_misses']}")
     if p["param_path"] != ["strided"]:
         sys.exit(f"FAIL: {name} did not run the strided regime: "
                  f"{p['param_path']}")
@@ -68,8 +97,12 @@ for name, p in probe.items():
     if p["ratio"] > 1.5:
         sys.exit(f"FAIL: {name} strided-parametric per-call cost "
                  f"{p['ratio']:.3f}x specialized (> 1.5x floor)")
+    want = WANT_RANKS.get(name)
+    if want is not None and p.get("window_rank") != want:
+        sys.exit(f"FAIL: {name} expected window rank {want}, got "
+                 f"{p.get('window_rank')} (N-D windows regressed)")
 for scen in ("mess_load_sweep", "pointer_chase", "spatter_nonuniform",
              "mess_calibrated"):
     print(f"{scen}: {seconds[scen]:.1f}s")
 print("OK")
-EOF
+EOF2

@@ -26,11 +26,15 @@ autotuner can share work through the translation cache (see
     Shape-polymorphic twin of ``lower_jax``: the working-set parameters
     become traced operands so one AOT executable serves a whole ladder.
     Two regimes, selected by ``param_path``: the **strided fast path**
-    (``lax.dynamic_slice``/``dynamic_update_slice`` lane windows, chosen
+    (``lax.dynamic_slice``/``dynamic_update_slice`` windows, chosen
     whenever the symbolic nest satisfies the same single-band precondition
-    as the specialized strided path — per-call cost matches it) and the
-    **masked gather/scatter** fallback for everything else (guards,
-    splits, diagonals). ``step.param_path`` reports which one was built.
+    as the specialized strided path — per-call cost matches it; windows
+    are **multi-dimensional** for stencil nests, covering an
+    (i-chunk x j-chunk x ...) box per step over every dynamic band the
+    write references, with stencil reads fused into one halo'd hull
+    slice per space) and the **masked gather/scatter** fallback for
+    everything else (guards, splits, diagonals). ``step.param_path`` /
+    ``step.param_window_rank`` report what was built.
 
 ``lower_pallas``
     A Pallas kernel per schedule. Loop bands become the ``grid``; vector
@@ -91,6 +95,7 @@ __all__ = [
     "param_strided_plan",
     "param_strided_in_bounds",
     "param_strided_window",
+    "param_window_bands",
     "windowed_oracle",
 ]
 
@@ -531,13 +536,21 @@ def _affine_traced(aff: Affine, scope: Mapping[str, jnp.ndarray]):
 # gather/scatter tax, so ``programs``-axis sweeps on one executable stay
 # regime-comparable.
 #
-# Window mechanics: the window band is the nest's innermost band. Bands
-# with *static* extents that the write references (the independent
-# template's ``programs`` axis) are vectorized into the window itself —
-# a ``(programs, C)``-shaped dynamic slice per step, so the hot loop
-# matches the specialized path's full-width slice ops instead of
-# serializing programs. Remaining (dynamic-extent) bands contribute
-# point (size-1) dims per loop step.
+# Window mechanics: windows are **multi-dimensional**. Every
+# dynamic-extent band that the write references is a *window band* — the
+# innermost (lane) band always, plus, for stencil nests lowered under an
+# N-D spec, the outer i/j bands of jacobi2d/3d — and one
+# ``lax.dynamic_slice`` covers an (i-chunk x j-chunk x ...) box per loop
+# step instead of a row per step. Bands with *static* extents that the
+# write references (the independent template's ``programs`` axis) are
+# vectorized into the window itself — a ``(programs, Ci, Cj)``-shaped
+# dynamic slice per step, so the hot loop matches the specialized path's
+# full-width slice ops instead of serializing programs. Dynamic bands
+# the write ignores stay serial loop bands (last-value-wins) and
+# contribute point (size-1) dims per loop step. The window geometry is
+# resolved per ladder by :func:`param_strided_window` into either a
+# plain int (rank-1: the legacy lane chunk) or a ``((band, C), ...)``
+# spec; ``param_window_bands`` names the candidate bands.
 #
 # One traced ``fori_loop`` body in one of two emission modes (NEVER a
 # ``lax.cond`` between them: XLA:CPU loses buffer aliasing through
@@ -681,37 +694,90 @@ def _vector_bands(splan: ParamStridedPlan, static_ext: Mapping[int, int],
     return tuple(sorted(vec))
 
 
+def param_window_bands(pnest: ParamNest,
+                       splan: ParamStridedPlan) -> tuple[int, ...]:
+    """Ordered (outer -> inner) window-band candidates of the strided
+    regime: every *dynamic*-extent band that the write of every instance
+    references — the dims an N-D dynamic window may span — always ending
+    with the innermost lane band. Dynamic bands the write ignores must
+    stay serial loop bands (a window over them would collapse their
+    last-value-wins writes), and static-extent bands are vectorized into
+    the window shape instead (see :func:`_vector_bands`)."""
+    static = _static_extents(pnest)
+    cands = set(range(pnest.n_bands)) - set(static)
+    for _, wacc, _ in splan.plans:
+        cands &= {b for b, _, _ in wacc if b >= 0}
+    cands.add(splan.window_band)
+    return tuple(sorted(cands))
+
+
+def _window_chunks(pnest: ParamNest, splan: ParamStridedPlan,
+                   cap_env: Mapping[str, int], chunk,
+                   ) -> tuple[tuple[int, ...], dict[int, int]]:
+    """Normalize a window spec into ``(window bands, {band: chunk})``.
+
+    An int is the legacy rank-1 form: the lane band alone is windowed
+    (clamped to the capacity extent) and every other dynamic band loops.
+    A ``((band, C), ...)`` tuple is the explicit N-D geometry the ladder
+    policy (:func:`param_strided_window`) resolved — pairs in band
+    order, ending with the lane band. All three window consumers (the
+    jax emitter, the numpy mirror, the bounds check) normalize through
+    here, so their geometry can never drift apart.
+    """
+    w = splan.window_band
+    if isinstance(chunk, (tuple, list)):
+        bands = tuple(int(b) for b, _ in chunk)
+        if not bands or bands[-1] != w or list(bands) != sorted(set(bands)):
+            raise ValueError(
+                f"window spec {tuple(chunk)!r} must list distinct "
+                f"(band, chunk) pairs in band order ending with the lane "
+                f"band {w}"
+            )
+        return bands, {int(b): max(1, int(c)) for b, c in chunk}
+    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
+    return (w,), {w: int(min(chunk, cap_ext_w))}
+
+
 class _WindowPlan:
     """Shared window geometry for the jax emitter and its numpy mirror.
 
-    Splits bands into the lane window band ``w`` (chunked, dynamic
-    extent), ``vec`` bands (static extents, vectorized into each window)
-    and ``loop`` bands (everything else — one point per chunk step).
-    ``spec(rows, ws, ob)`` computes per-dim dynamic-slice starts/sizes
-    plus the static lane selector and per-dim band tags for one access.
+    Splits bands into ``wins`` — the window bands (dynamic extents,
+    chunked; the innermost lane band ``w`` always, plus any outer
+    dynamic bands an N-D spec promotes) — ``vec`` bands (static extents,
+    vectorized into each window) and ``loop`` bands (everything else —
+    one point per chunk step). ``spec(rows, ws, ob)`` computes per-dim
+    dynamic-slice starts/sizes plus the static lane selector and per-dim
+    band tags for one access, with ``ws`` mapping each window band to
+    its traced start.
     """
 
-    def __init__(self, pnest: ParamNest, splan: ParamStridedPlan, C: int):
+    def __init__(self, pnest: ParamNest, splan: ParamStridedPlan,
+                 wins: tuple[int, ...], chunks: Mapping[int, int]):
         self.w = splan.window_band
-        self.C = C
+        self.wins = tuple(wins)
+        self.Cs = {int(b): int(chunks[b]) for b in wins}
+        self.C = self.Cs[self.w]
         self.static_ext = _static_extents(pnest)
-        self.vec = _vector_bands(splan, self.static_ext)
+        self.vec = tuple(
+            b for b in _vector_bands(splan, self.static_ext)
+            if b not in self.Cs
+        )
         self.loop = tuple(
             b for b in range(pnest.n_bands)
-            if b != self.w and b not in self.vec
+            if b not in self.Cs and b not in self.vec
         )
 
     def lane_extent(self, b: int) -> int:
-        return self.C if b == self.w else self.static_ext[b]
+        return self.Cs[b] if b in self.Cs else self.static_ext[b]
 
     def spec(self, rows, ws, ob):
         """(starts, sizes, selector, per-dim band-or-None) for one access
-        at window start ``ws`` / loop-band coords ``ob``."""
+        at window starts ``ws`` (band -> start) / loop-band coords ``ob``."""
         starts, sizes, sel, axes = [], [], [], []
         for b, cf, kc in rows:
-            if b == self.w or b in self.vec:
+            if b in self.Cs or b in self.vec:
                 e = self.lane_extent(b)
-                base = ws if b == self.w else 0
+                base = ws[b] if b in self.Cs else 0
                 if cf > 0:
                     starts.append(cf * base + kc)
                 else:
@@ -754,46 +820,149 @@ class _WindowPlan:
         return fit
 
 
+def _read_hulls(stmt, racc_sym):
+    """Group an instance's reads into per-space *hull* windows.
+
+    Stencil statements read the same space at several constant offsets
+    (``B[i-1], B[i], B[i+1]``). Slicing each one dynamically costs a
+    materialized temporary per read; the specialized path instead takes
+    static slices of one array, which XLA fuses. The hull is the
+    parametric analogue: reads that agree on ``(band, stride)`` per dim
+    and differ only by *constant* index offsets share one dynamic slice
+    of their union span (the halo'd window), and each member becomes a
+    static subslice of the hull — same elements, same values, one
+    dynamic op per space.
+
+    Returns ``[(space, hull_rows, spans, members), ...]`` where
+    ``hull_rows`` are symbolic ``(band, stride, const)`` rows at the
+    hull's minimal offset, ``spans[d]`` is the extra static extent the
+    union adds per dim, and ``members`` maps each original read index to
+    its static offsets inside the hull.
+    """
+    groups: list[dict] = []
+    for ridx, (acc, rows) in enumerate(zip(stmt.reads, racc_sym)):
+        placed = False
+        for g in groups:
+            if g["space"] != acc.space or len(g["rows"]) != len(rows):
+                continue
+            deltas = []
+            for (b0, cf0, k0), (b, cf, kc) in zip(g["rows"], rows):
+                if b != b0 or cf != cf0:
+                    deltas = None
+                    break
+                dv = _const_int(Affine.of(kc - k0))
+                if dv is None:
+                    deltas = None
+                    break
+                deltas.append(dv)
+            if deltas is not None:
+                g["members"].append((ridx, tuple(deltas)))
+                placed = True
+                break
+        if not placed:
+            groups.append({
+                "space": acc.space,
+                "rows": tuple(rows),
+                "members": [(ridx, (0,) * len(rows))],
+            })
+    out = []
+    for g in groups:
+        rank = len(g["rows"])
+        lo = [min(d[i] for _, d in g["members"]) for i in range(rank)]
+        hi = [max(d[i] for _, d in g["members"]) for i in range(rank)]
+        hull_rows = tuple(
+            (b, cf, kc + l) for (b, cf, kc), l in zip(g["rows"], lo)
+        )
+        spans = tuple(h - l for l, h in zip(lo, hi))
+        members = tuple(
+            (ridx, tuple(d - l for d, l in zip(deltas, lo)))
+            for ridx, deltas in g["members"]
+        )
+        out.append((g["space"], hull_rows, spans, members))
+    return out
+
+
 def param_strided_window(
     pnest: ParamNest, splan: ParamStridedPlan,
     envs: "list[Mapping[str, int]]", cap_env: Mapping[str, int],
     chunk: int = _PARAM_CHUNK, floor: int = 1024,
-) -> tuple[int, bool]:
-    """The ladder-level window policy: ``(chunk, assume_full)``.
+) -> "tuple[int | tuple, bool]":
+    """The ladder-level window policy: ``(window_spec, assume_full)``.
 
-    When the smallest rung's window extent is at least ``floor`` lanes,
-    the chunk is clamped down to it — every chunk of every rung is then
-    provably full, so the emitter can skip masks and blend reads
-    entirely (the hot mode). Ladders with tinier rungs keep the default
-    chunk and take the masked emission mode instead (tiny windows would
-    cost more in trip count than the mask does).
+    Rank 1 (the lane band is the only windowable dynamic band): the
+    PR-4 policy, unchanged — when the smallest rung's window extent is
+    at least ``floor`` lanes, the chunk is clamped down to it, so every
+    chunk of every rung is provably full and the emitter skips masks
+    and blend reads entirely (the hot mode); ladders with tinier rungs
+    keep the default chunk and take the masked emission mode instead.
+    The spec stays a plain int.
+
+    Rank >= 2 (outer dynamic bands the write references — stencil
+    nests): the spec is a ``((band, C), ...)`` tuple. Outer window
+    bands are clamped to the ladder's smallest rung extent, so their
+    windows are provably full at every declared env (min-start overlap,
+    never a mask; an outer band some rung zeroes out is left as a loop
+    band). The lane band joins the mask-free mode when the smallest
+    rung's whole window — window-band chunks times vectorized static
+    extents — carries at least ``floor`` points (an N-D window is big
+    even when each per-band chunk is small); otherwise it keeps the
+    capacity-extent chunk and the sign-anchored masked emission. The
+    ``chunk`` budget bounds the window's total dynamic-lane count,
+    distributed innermost-first.
     """
     w = splan.window_band
-    cap_ext = max(1, pnest.band_extents[w].eval(cap_env))
-    exts = []
-    for e in envs:
-        scope = {**{k: int(v) for k, v in cap_env.items()},
-                 **{k: int(v) for k, v in e.items()}}
-        exts.append(max(0, pnest.band_extents[w].eval(scope)))
-    m = min(exts) if exts else 0
-    if m >= floor:
-        return int(min(chunk, m, cap_ext)), True
-    return int(min(chunk, cap_ext)), False
+    cap_scope = {k: int(v) for k, v in cap_env.items()}
+    scopes = [{**cap_scope, **{k: int(v) for k, v in e.items()}}
+              for e in envs]
+    bands = param_window_bands(pnest, splan)
+    m = {
+        b: (min(max(0, pnest.band_extents[b].eval(s)) for s in scopes)
+            if scopes else 0)
+        for b in bands
+    }
+    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
+    outer = [b for b in bands[:-1] if m[b] >= 1]
+    if not outer:
+        if m[w] >= floor:
+            return int(min(chunk, m[w], cap_ext_w)), True
+        return int(min(chunk, cap_ext_w)), False
+    static_ext = _static_extents(pnest)
+    lanes = max(0, m[w])
+    for b in outer:
+        lanes *= m[b]
+    for b in _vector_bands(splan, static_ext):
+        if b not in bands:
+            lanes *= static_ext[b]
+    full = lanes >= floor and m[w] >= 1
+    cw = int(min(chunk, m[w], cap_ext_w)) if full \
+        else int(min(chunk, cap_ext_w))
+    spec = [(w, max(1, cw))]
+    used = max(1, cw)
+    for b in reversed(outer):
+        cb = int(max(1, min(m[b], chunk // used)))
+        spec.append((b, cb))
+        used *= cb
+    return tuple(sorted(spec)), full
 
 
 def param_strided_in_bounds(
     pattern: PatternSpec, pnest: ParamNest, splan: ParamStridedPlan,
     env: Mapping[str, int], cap_env: Mapping[str, int],
-    chunk: int = _PARAM_CHUNK,
+    chunk: "int | tuple" = _PARAM_CHUNK,
 ) -> bool:
     """Exact check that every window the strided step could slice at
     ``env`` stays inside the capacity-allocated shapes.
 
     ``lax.dynamic_slice`` silently clamps out-of-range starts, which
     would *misalign* a window rather than fail — so drivers verify every
-    ladder point here before choosing the strided regime. Real patterns
-    (spans scaling with the working set) always pass; the check guards
-    hand-built specs with fixed-size spaces.
+    ladder point here before choosing the strided regime, and any unsafe
+    env demotes its whole ladder to the gather regime. ``chunk`` is the
+    resolved window spec (int or N-D tuple — see
+    :func:`_window_chunks`); for N-D specs every window band's anchor
+    range is checked, including the negative start an outer band smaller
+    than its chunk would take. Real patterns (spans scaling with the
+    working set) always pass; the check guards hand-built specs with
+    fixed-size spaces and mis-sized ladders.
     """
     stmt = pattern.statement
     w = splan.window_band
@@ -803,18 +972,26 @@ def param_strided_in_bounds(
         ext = [max(0, e.eval(scope)) for e in pnest.band_extents]
     except (KeyError, ValueError):
         return False
-    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
-    C = int(min(chunk, cap_ext_w))
-    if ext[w] < 1:
-        return True  # zero window chunks: nothing is sliced
+    wins, Cs = _window_chunks(pnest, splan, cap_env, chunk)
+    if any(ext[b] < 1 for b in wins):
+        return True  # a zero-extent window band: the trip count is 0
     static_ext = _static_extents(pnest)
     shapes = {s.name: s.concrete_shape(cap_env) for s in pattern.spaces}
     for racc, wacc, s_w in splan.plans:
-        # partial-window anchor: [0, C) ascending, [ext-C, ext) descending
-        if ext[w] >= C:
-            blo, bhi = 0, ext[w] - 1
-        else:
-            blo, bhi = (0, C - 1) if s_w > 0 else (ext[w] - C, ext[w] - 1)
+        anchors = {}
+        for b in wins:
+            C = Cs[b]
+            if ext[b] >= C:
+                anchors[b] = (0, ext[b] - 1)
+            elif b == w:
+                # lane partial-window anchor: [0, C) ascending,
+                # [ext-C, ext) descending
+                anchors[b] = ((0, C - 1) if s_w > 0
+                              else (ext[b] - C, ext[b] - 1))
+            else:
+                # outer windows are always full-anchored: a rung smaller
+                # than its chunk starts at ext-C < 0 (and is demoted)
+                anchors[b] = (ext[b] - C, ext[b] - 1)
         for acc, rows in zip((*stmt.reads, stmt.write), (*racc, wacc)):
             dims = shapes[acc.space]
             for d, (b, cf, kc) in enumerate(rows):
@@ -822,8 +999,8 @@ def param_strided_in_bounds(
                     k = kc.eval(scope)
                 except (KeyError, ValueError):
                     return False
-                if b == w:
-                    lo, hi = blo, bhi
+                if b in anchors:
+                    lo, hi = anchors[b]
                 elif b in static_ext:
                     lo, hi = 0, static_ext[b] - 1
                 elif b >= 0:
@@ -839,7 +1016,7 @@ def param_strided_in_bounds(
 def _lower_param_strided(pattern: PatternSpec, pnest: ParamNest,
                          splan: ParamStridedPlan,
                          params: tuple[str, ...],
-                         cap_env: Mapping[str, int], chunk: int,
+                         cap_env: Mapping[str, int], chunk,
                          assume_full: bool = False) -> Callable:
     """Emit the windowed step: same calling convention as the gather
     parametric step (capacity-shaped arrays + traced param scalars).
@@ -850,10 +1027,18 @@ def _lower_param_strided(pattern: PatternSpec, pnest: ParamNest,
     """
     stmt = pattern.statement
     w = splan.window_band
-    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
-    C = int(min(chunk, cap_ext_w))
+    wins, Cs = _window_chunks(pnest, splan, cap_env, chunk)
+    C = Cs[w]
     rest_env = {k: int(v) for k, v in cap_env.items() if k not in params}
-    wp = _WindowPlan(pnest, splan, C)
+    wp = _WindowPlan(pnest, splan, wins, Cs)
+    outer_wins = wins[:-1]
+    # per instance: reads fused into per-space hull windows (one dynamic
+    # slice per space, static subslices per stencil offset — see
+    # _read_hulls), resolved symbolically once at lower time
+    grouped = [
+        (_read_hulls(stmt, racc), wacc, s_w)
+        for racc, wacc, s_w in splan.plans
+    ]
 
     def step(arrays: dict[str, jnp.ndarray], pvals) -> dict[str, jnp.ndarray]:
         arrays = dict(arrays)
@@ -862,37 +1047,51 @@ def _lower_param_strided(pattern: PatternSpec, pnest: ParamNest,
         ext = [jnp.maximum(_affine_traced(e, scope), 0)
                for e in pnest.band_extents]
         ext_w = ext[w]
-        nw = (ext_w + (C - 1)) // C
-        win_lo = ext_w - C
-        total = nw
-        ostrides = {}
-        for b in reversed(wp.loop):
-            ostrides[b] = total
-            total = total * ext[b]
+        nw = {b: (ext[b] + (Cs[b] - 1)) // Cs[b] for b in wins}
+        win_lo = {b: ext[b] - Cs[b] for b in wins}
+        # mixed-radix trip space: serial loop bands outermost, window
+        # bands (outer -> inner) innermost, so the lane band varies
+        # fastest — identical decomposition to the numpy mirror
+        radii = [(b, ext[b]) for b in wp.loop] + [(b, nw[b]) for b in wins]
+        strides = {}
+        total = jnp.int32(1)
+        for b, r in reversed(radii):
+            strides[b] = total
+            total = total * r
         # loop-invariant traced offsets, computed once outside the body
         tr = [
             (
-                [[(b, cf, _affine_traced(kc, scope)) for b, cf, kc in rows]
-                 for rows in racc],
+                [
+                    (space,
+                     [(b, cf, _affine_traced(kc, scope))
+                      for b, cf, kc in hull_rows],
+                     spans, members)
+                    for space, hull_rows, spans, members in groups
+                ],
                 [(b, cf, _affine_traced(kc, scope)) for b, cf, kc in wacc],
                 s_w,
             )
-            for racc, wacc, s_w in splan.plans
+            for groups, wacc, s_w in grouped
         ]
         lane = (None if assume_full
                 else jax.lax.broadcasted_iota(jnp.int32, (C,), 0))
 
-        def instance(arrs, racc, wacc, ws, ob, valid):
-            """One instance's window step at window start ``ws``; lanes
-            where ``valid`` is False (masked mode only) keep the
-            target's current contents."""
+        def instance(arrs, groups, wacc, ws, ob, valid):
+            """One instance's window step at window starts ``ws`` (band
+            -> start); lanes where ``valid`` is False (masked lane mode
+            only) keep the target's current contents."""
             wstarts, wsizes, wsel, waxes = wp.spec(wacc, ws, ob)
             fit = wp.align(waxes)
-            vals = []
-            for acc, rows in zip(stmt.reads, racc):
-                starts, sizes, sel, raxes = wp.spec(rows, ws, ob)
-                win = jax.lax.dynamic_slice(arrs[acc.space], starts, sizes)
-                vals.append(fit(jnp, win[sel], raxes))
+            vals: list = [None] * len(stmt.reads)
+            for space, hull_rows, spans, members in groups:
+                starts, sizes, sel, raxes = wp.spec(hull_rows, ws, ob)
+                hsizes = [s + sp for s, sp in zip(sizes, spans)]
+                hull = jax.lax.dynamic_slice(arrs[space], starts, hsizes)
+                for ridx, offs in members:
+                    sub = hull[tuple(
+                        slice(o, o + s) for o, s in zip(offs, sizes)
+                    )]
+                    vals[ridx] = fit(jnp, sub[sel], raxes)
             res = stmt.combine(vals, cenv)
             tgt = arrs[stmt.write.space]
             lanes = tuple(
@@ -912,31 +1111,41 @@ def _lower_param_strided(pattern: PatternSpec, pnest: ParamNest,
 
         def body(ci, arrs):
             arrs = dict(arrs)
-            wsq = (ci % nw) * C
-            ob = {b: (ci // ostrides[b]) % ext[b] for b in wp.loop}
-            for racc, wacc, s_w in tr:
+            idx = {b: (ci // strides[b]) % r for b, r in radii}
+            ob = {b: idx[b] for b in wp.loop}
+            # outer window bands always take full windows: their chunks
+            # are clamped to the ladder's smallest rung, so the min-
+            # start overlap keeps every slice in bounds with no masks
+            ws0 = {b: jnp.minimum(idx[b] * Cs[b], win_lo[b])
+                   for b in outer_wins}
+            wsq = idx[w] * C
+            for groups, wacc, s_w in tr:
                 if assume_full:
-                    # every chunk is a full window: min-start overlap,
-                    # no masks (caller guarantees ext_w >= C)
+                    # every lane chunk is a full window too: min-start
+                    # overlap, no masks (caller guarantees ext_w >= C)
+                    ws = dict(ws0)
+                    ws[w] = jnp.minimum(wsq, win_lo[w])
                     arrs[stmt.write.space] = instance(
-                        arrs, racc, wacc, jnp.minimum(wsq, win_lo), ob,
-                        None)
+                        arrs, groups, wacc, ws, ob, None)
                     continue
-                # sign-aware anchor: ascending accesses floor the start
-                # at 0, descending ones let it go negative so the
+                # sign-aware lane anchor: ascending accesses floor the
+                # start at 0, descending ones let it go negative so the
                 # partial window sits at [ext-C, ext) — either way slice
                 # starts stay at valid positions
-                ws = jnp.minimum(wsq, win_lo)
+                wsl = jnp.minimum(wsq, win_lo[w])
                 if s_w > 0:
-                    ws = jnp.maximum(ws, 0)
-                band = ws + lane
+                    wsl = jnp.maximum(wsl, 0)
+                band = wsl + lane
                 valid = (band >= 0) & (band < ext_w)
+                ws = dict(ws0)
+                ws[w] = wsl
                 arrs[stmt.write.space] = instance(
-                    arrs, racc, wacc, ws, ob, valid)
+                    arrs, groups, wacc, ws, ob, valid)
             return arrs
 
         return jax.lax.fori_loop(0, total, body, arrays)
 
+    step.param_window_rank = len(wins)
     return step
 
 
@@ -944,17 +1153,20 @@ def windowed_oracle(
     pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
     cap_env: Mapping[str, int], arrays: dict[str, np.ndarray],
     ntimes: int = 1, *, params: tuple[str, ...] = ("n",),
-    chunk: int = _PARAM_CHUNK, assume_full: bool = False,
+    chunk: "int | tuple" = _PARAM_CHUNK, assume_full: bool = False,
 ) -> dict[str, np.ndarray]:
     """Numpy mirror of the parametric strided regime, window for window.
 
     Replays the exact chunk decomposition (vectorized static bands,
-    min-start overlap, sign-aware partial-window anchors, strided
-    subsampling, blend writes, tail-lane masking) on capacity-shaped
-    numpy arrays, so tests can prove the window arithmetic against plain
-    semantics — bit-for-bit against the jax step over the *whole*
-    capacity arrays, not just the [0, n) region — without tracing.
-    Raises when (pattern, schedule) is not strided-eligible.
+    N-D window boxes with per-band min-start overlap, sign-aware
+    partial-window anchors, strided subsampling, blend writes, tail-lane
+    masking) on capacity-shaped numpy arrays, so tests can prove the
+    window arithmetic against plain semantics — bit-for-bit against the
+    jax step over the *whole* capacity arrays, not just the [0, n)
+    region — without tracing. ``chunk`` accepts the same int / N-D
+    ``((band, C), ...)`` window specs as the jax emitter and mirrors
+    whichever geometry it names. Raises when (pattern, schedule) is not
+    strided-eligible.
     """
     pnest = schedule.lower_symbolic(pattern.domain, tuple(params))
     splan = param_strided_plan(pattern, pnest)
@@ -970,15 +1182,17 @@ def windowed_oracle(
              **{p: int(env[p]) for p in params}}
     ext = [max(0, e.eval(scope)) for e in pnest.band_extents]
     ext_w = ext[w]
-    cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
-    C = int(min(chunk, cap_ext_w))
-    wp = _WindowPlan(pnest, splan, C)
-    nw = (ext_w + (C - 1)) // C
-    total = nw
-    ostrides = {}
-    for b in reversed(wp.loop):
-        ostrides[b] = total
-        total = total * ext[b]
+    wins, Cs = _window_chunks(pnest, splan, cap_env, chunk)
+    C = Cs[w]
+    wp = _WindowPlan(pnest, splan, wins, Cs)
+    outer_wins = wins[:-1]
+    nw = {b: -(-ext[b] // Cs[b]) if ext[b] else 0 for b in wins}
+    radii = [(b, ext[b]) for b in wp.loop] + [(b, nw[b]) for b in wins]
+    strides = {}
+    total = 1
+    for b, r in reversed(radii):
+        strides[b] = total
+        total = total * int(r)
     arrays = {k: np.array(v) for k, v in arrays.items()}
     plans = [
         (
@@ -990,16 +1204,21 @@ def windowed_oracle(
     ]
     for _ in range(int(ntimes)):
         for ci in range(int(total)):
-            ob = {b: (ci // ostrides[b]) % ext[b] for b in wp.loop}
-            wsq = (ci % nw) * C
+            idx = {b: (ci // strides[b]) % int(r) for b, r in radii}
+            ob = {b: idx[b] for b in wp.loop}
+            ws0 = {b: min(idx[b] * Cs[b], ext[b] - Cs[b])
+                   for b in outer_wins}
+            wsq = idx[w] * C
             for racc, wacc, s_w in plans:
+                ws = dict(ws0)
                 if assume_full:
-                    ws, valid = min(wsq, ext_w - C), None
+                    ws[w], valid = min(wsq, ext_w - C), None
                 else:
-                    ws = min(wsq, ext_w - C)
+                    wsl = min(wsq, ext_w - C)
                     if s_w > 0:
-                        ws = max(ws, 0)
-                    band = ws + np.arange(C)
+                        wsl = max(wsl, 0)
+                    ws[w] = wsl
+                    band = wsl + np.arange(C)
                     valid = (band >= 0) & (band < ext_w)
                 wstarts, wsizes, wsel, waxes = wp.spec(wacc, ws, ob)
                 fit = wp.align(waxes)
@@ -1029,7 +1248,7 @@ def windowed_oracle(
 
 def lower_jax_parametric(
     pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
-    *, params: tuple[str, ...] = ("n",), chunk: int = _PARAM_CHUNK,
+    *, params: tuple[str, ...] = ("n",), chunk: "int | tuple" = _PARAM_CHUNK,
     pnest: ParamNest | None = None, param_path: str = "auto",
     assume_full: bool = False,
 ) -> Callable:
@@ -1052,10 +1271,16 @@ def lower_jax_parametric(
     :class:`~repro.core.schedule.SymbolicLowerError` when ineligible);
     ``"gather"`` pins the masked form (the reference regime the tests
     compare against). The returned step carries the chosen regime as
-    ``step.param_path``. ``assume_full`` selects the strided emitter's
-    mask-free hot mode — only valid when every env the step will run
-    satisfies ``window extent >= chunk`` (see
-    :func:`param_strided_window`).
+    ``step.param_path`` and its window dimensionality as
+    ``step.param_window_rank`` (0 on the gather path). On the strided
+    path, ``chunk`` is either a lane-chunk int (rank-1 windows, outer
+    dynamic bands loop serially) or a ``((band, C), ...)`` N-D window
+    spec from :func:`param_strided_window` (stencil nests window an
+    (i-chunk x j-chunk x ...) box per step). ``assume_full`` selects the
+    strided emitter's mask-free hot mode — only valid when every env the
+    step will run satisfies ``lane window extent >= lane chunk`` (outer
+    N-D window bands are clamped by the ladder policy, so they are
+    always full).
 
     Caller contract of the strided regime: every env the step runs must
     pass :func:`param_strided_in_bounds` — a window that leaves the
@@ -1099,6 +1324,10 @@ def lower_jax_parametric(
         )
         step.param_path = "strided"
         return step
+    if not isinstance(chunk, int):
+        # an N-D window spec only means something to the strided
+        # emitter; the gather fallback keeps its default lane chunk
+        chunk = _PARAM_CHUNK
     stmt = pattern.statement
     iter_names = pattern.domain.names
     plans = tuple(
@@ -1199,6 +1428,7 @@ def lower_jax_parametric(
         return jax.lax.fori_loop(0, nchunks, body, arrays)
 
     step.param_path = "gather"
+    step.param_window_rank = 0
     return step
 
 

@@ -23,6 +23,16 @@ A driver owns the repetition loop. ``sync_every_rep=False`` fuses all
 analogue (no host round-trip / no dispatch barrier between sweeps);
 ``True`` dispatches one sweep per call and fences, reproducing the
 per-iteration barrier of Listing 1.
+
+Measurement invariants: ``prepare``/``run`` stage through the
+translation cache (identical tuples never lower or compile twice), the
+executables they time are **donated** on the jax backend (no per-call
+buffer copy on either the specialized or the parametric side — see
+``staging``), ladders resolve one lowering regime up front
+(``_resolve_param_path``: specialized / strided / gather, with the
+exact per-env window-bounds check), and every record self-describes via
+``extra`` (``param_path``, ``param_window_rank``, ``donated``,
+``cache_hit``, ...).
 """
 from __future__ import annotations
 
@@ -201,10 +211,15 @@ class Prepared:
         return isinstance(self.lowered, ParamLowered)
 
     def executable(self) -> Callable:
-        """A ``fn(tup) -> tup`` for this point (binds params if needed)."""
+        """A ``fn(tup) -> tup`` for this point (binds params if needed).
+
+        Both paths thread donated buffers: the parametric bind closes
+        over this point's param scalars, the specialized bind (donated
+        measurement executables) threads each call's output tuple into
+        the next so the timing loop never touches a consumed buffer."""
         if self.parametric:
             return self.compiled.bind(self.env)
-        return self.compiled
+        return self.compiled.bind()
 
 
 class Driver:
@@ -272,7 +287,7 @@ class Driver:
     def lower_parametric(self, cap_env: Mapping[str, int],
                          params: tuple[str, ...] = ("n",),
                          param_path: str | None = None,
-                         chunk: int | None = None,
+                         chunk: "int | tuple | None" = None,
                          assume_full: bool = False) -> ParamLowered:
         """Stage 1, shape-polymorphic: one artifact for a whole ladder,
         capacity-allocated at ``cap_env``.
@@ -296,15 +311,18 @@ class Driver:
     def _resolve_param_path(
         self, envs: Sequence[Mapping[str, int]],
         cap_env: Mapping[str, int],
-    ) -> tuple[str, int | None, bool]:
+    ) -> "tuple[str, int | tuple | None, bool]":
         """The concrete regime a viable ladder runs, as ``(path, chunk,
         assume_full)``: the config's preference checked against strided
         eligibility plus the exact per-env window-bounds test (a window
         that could leave the capacity shapes would be silently clamped —
         misaligned — so any such env demotes the whole ladder to
-        gather). For strided ladders, ``param_strided_window`` clamps
-        the chunk to the smallest rung where that keeps windows big,
-        which buys the mask-free hot emitter."""
+        gather). For strided ladders, ``param_strided_window`` resolves
+        the window geometry: a lane-chunk int clamped to the smallest
+        rung (1-D nests), or an N-D ``((band, C), ...)`` spec whose
+        outer chunks are clamped to the smallest rung's extents (stencil
+        nests) — either way buying the mask-free hot emitter wherever
+        the ladder's smallest windows stay big."""
         cfg = self.cfg
         if cfg.param_path == "gather":
             return "gather", None, False
@@ -470,10 +488,17 @@ class Driver:
                     f"{(cfg.schedule or identity()).name}"
                 )
         lowereds = [(env, self.lower(env)) for env in envs]
+        # measurement executables donate their buffers (no per-call
+        # working-set-sized copy — the same copy-free economics as the
+        # parametric path, so strided-vs-specialized comparisons are
+        # fair on both sides); Prepared.executable() threads the
+        # consumed tuples. The pallas backend keeps undonated compiles
+        # (its calls already alias the output in place).
+        donate = cfg.backend == "jax"
         thunks = [
             (lambda lw=lw: lw.compile(
                 ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
-                cache=self.cache,
+                donate=donate, cache=self.cache,
             ))
             for _, lw in lowereds
         ]
@@ -564,7 +589,10 @@ class Driver:
                     "parametric": p.parametric,
                     "param_path": (p.compiled.param_path if p.parametric
                                    else "specialized"),
-                    **({"capacity": int(p.lowered.cap_env["n"])}
+                    "donated": bool(getattr(p.compiled, "donated", True)),
+                    **({"capacity": int(p.lowered.cap_env["n"]),
+                        "param_window_rank": int(
+                            p.compiled.param_window_rank)}
                        if p.parametric else {}),
                 },
             )

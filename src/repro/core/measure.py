@@ -64,6 +64,12 @@ def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2,
     then — the first call only absorbs dispatch warm-up, compilation
     already happened — and thread its measured ``compile_seconds``
     through so records can report translation cost separately.
+
+    Donated executables must arrive *bound* (``Compiled.bind()`` /
+    ``ParamCompiled.bind(env)`` — what ``Prepared.executable()``
+    returns): the timing loop re-passes the same seed tuple every rep,
+    and the bound wrapper threads each call's output buffers into the
+    next call, so the consumed donation stream stays valid.
     """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

@@ -29,6 +29,15 @@ stages explicit (the JaCe ``lower().compile()`` discipline):
     Compiles many staged variants concurrently. XLA's backend compile
     releases the GIL, so a small thread pool overlaps the compiles of a
     sweep's variants even though tracing stays serial.
+
+Donation invariant: every *measurement* executable — ``ParamCompiled``
+always, ``Compiled`` when built with ``donate=True`` (what
+``Driver.prepare`` requests) — donates its array operands, so a call
+consumes its input tuple instead of paying a buffer copy; the ``bind``
+methods thread outputs into subsequent calls, and donated compiles
+carry process-unique module names so jax's persistent cache can never
+hand back a deserialized donated executable (which segfaults on this
+jaxlib — see ``_compile_donated``).
 """
 from __future__ import annotations
 
@@ -235,13 +244,24 @@ class Lowered:
         )
 
     def compile(self, *, ntimes: int, sync_every_rep: bool = False,
+                donate: bool = False,
                 cache: "TranslationCache | None" = None) -> "Compiled":
-        """Stage 2: trace + AOT-compile the ``ntimes``-sweep repetition loop."""
+        """Stage 2: trace + AOT-compile the ``ntimes``-sweep repetition loop.
+
+        ``donate=True`` donates the array operands (no per-call buffer
+        copy — the measurement-loop mode ``Driver.prepare`` requests);
+        donated executables consume their input tuple, so callers must
+        go through :meth:`Compiled.bind` to thread outputs into
+        subsequent calls. The flag is part of the cache key: a donated
+        executable never masquerades as the re-callable one.
+        """
         cache = cache or self.cache
         key = None
         if self.key is not None:
-            key = ("exec", self.key, int(ntimes), bool(sync_every_rep))
-        builder = lambda: _build_compiled(self, ntimes, sync_every_rep)
+            key = ("exec", self.key, int(ntimes), bool(sync_every_rep),
+                   bool(donate))
+        builder = lambda: _build_compiled(self, ntimes, sync_every_rep,
+                                          donate)
         if cache is None or key is None:
             return builder()
         out, hit = cache._compiled_get_or_build(key, builder)
@@ -252,7 +272,15 @@ class Lowered:
 
 @dataclasses.dataclass
 class Compiled:
-    """Stage 3 handle: an executable repetition loop + its cost metadata."""
+    """Stage 3 handle: an executable repetition loop + its cost metadata.
+
+    When ``donated`` is True the array operands are donated: a call
+    consumes its input tuple in place of paying a working-set-sized
+    buffer copy (the same economics as the parametric executables —
+    copy-free on both sides of a strided-vs-specialized comparison).
+    Donated handles must be driven through :meth:`bind`, which threads
+    each call's output tuple into the next; calling ``run`` twice with
+    the same tuple raises inside jax (the buffers are gone)."""
 
     lowered: Lowered
     names: tuple[str, ...]
@@ -262,9 +290,40 @@ class Compiled:
     sync_every_rep: bool
     compile_seconds: float
     from_cache: bool = False
+    donated: bool = False
 
     def __call__(self, tup):
         return self.run(tup)
+
+    def bind(self) -> Callable:
+        """A ``fn(tup) -> tup`` for the measurement loop.
+
+        Undonated executables are re-callable as-is. Donated ones get
+        the same buffer-threading wrapper as
+        :meth:`ParamCompiled.bind`: repeated calls (the timing loop)
+        feed each call's output tuple into the next, so the caller's
+        seed tuple is only consumed once — and a *different* tuple
+        passed later raises instead of being silently ignored."""
+        if not self.donated:
+            return self.run
+        state: dict = {}
+
+        def fn(tup):
+            if "tup" in state:
+                if tup is not state["seed"] and tup is not state["tup"]:
+                    raise ValueError(
+                        "donated executable already threads its buffers; "
+                        "a new input tuple would be ignored — call bind() "
+                        "again for a fresh stream"
+                    )
+                tup = state["tup"]
+            else:
+                state["seed"] = tup
+            out = self.run(tup)
+            state["tup"] = out
+            return out
+
+        return fn
 
     def cost_analysis(self) -> dict:
         ca = self.executable.cost_analysis() or {}
@@ -274,7 +333,7 @@ class Compiled:
 
 
 def _build_compiled(lowered: Lowered, ntimes: int,
-                    sync_every_rep: bool) -> Compiled:
+                    sync_every_rep: bool, donate: bool = False) -> Compiled:
     names = lowered.space_names
     step = lowered.step
 
@@ -284,9 +343,11 @@ def _build_compiled(lowered: Lowered, ntimes: int,
         return tuple(d[k] for k in names)
 
     avals = lowered.avals()
+    compile_one = (_compile_donated if donate
+                   else lambda fn, *a: jax.jit(fn).lower(*a).compile())
     t0 = time.perf_counter()
     if sync_every_rep:
-        exe = jax.jit(step_t).lower(avals).compile()
+        exe = compile_one(step_t, avals)
 
         def run(tup):
             for _ in range(ntimes):
@@ -297,13 +358,13 @@ def _build_compiled(lowered: Lowered, ntimes: int,
         def fused(tup):
             return jax.lax.fori_loop(0, ntimes, lambda _, t: step_t(t), tup)
 
-        exe = jax.jit(fused).lower(avals).compile()
+        exe = compile_one(fused, avals)
         run = exe
     compile_seconds = time.perf_counter() - t0
     return Compiled(
         lowered=lowered, names=names, run=run, executable=exe,
         ntimes=ntimes, sync_every_rep=sync_every_rep,
-        compile_seconds=compile_seconds,
+        compile_seconds=compile_seconds, donated=donate,
     )
 
 
@@ -332,6 +393,9 @@ class ParamLowered:
     # slice windows, per-call cost matching the specialized path) or
     # "gather" (masked gather/scatter fallback)
     param_path: str = "gather"
+    # how many dynamic bands the strided windows span (1 = lane windows,
+    # 2/3 = the stencil (i x j[, k]) boxes; 0 on the gather path)
+    param_window_rank: int = 0
     cache: "TranslationCache | None" = None
 
     # Driver.run treats lowered.env as the allocation env; for the
@@ -407,6 +471,11 @@ class ParamCompiled:
         """Lowering regime of the shared executable ("strided"/"gather")."""
         return self.lowered.param_path
 
+    @property
+    def param_window_rank(self) -> int:
+        """Window dimensionality of the strided regime (0 on gather)."""
+        return self.lowered.param_window_rank
+
     def __call__(self, tup, pvals):
         return self.run(tup, pvals)
 
@@ -454,19 +523,22 @@ class ParamCompiled:
 # process (``compilation_cache.is_cache_used``), so toggling the config
 # around one compile either does nothing or kills the cache for every
 # compile that follows (observed: the smoke suite's disk traffic
-# dropped to zero). Instead, each donated compile gets a process-unique
+# dropped to zero). Instead, each donated compile — parametric AND the
+# donated specialized measurement executables — gets a process-unique
 # module name: the name is part of the cache key, so a donated
 # executable can never be *retrieved* from disk (no deserialization, no
-# segfault) while specialized compiles keep their cross-run cache hits.
-# Cost: donated compiles write never-reused entries (~one per ladder).
+# segfault) while undonated compiles keep their cross-run cache hits.
+# Cost: donated compiles write never-reused entries (one per distinct
+# measurement executable); the in-process TranslationCache still
+# deduplicates them within a run.
 _donated_serial = itertools.count()
 
 
-def _compile_donated(fn, avals, pavals):
+def _compile_donated(fn, *aval_groups):
     fn.__name__ = (
         f"{fn.__name__}_donated_{os.getpid()}_{next(_donated_serial)}"
     )
-    return jax.jit(fn, donate_argnums=(0,)).lower(avals, pavals).compile()
+    return jax.jit(fn, donate_argnums=(0,)).lower(*aval_groups).compile()
 
 
 def _build_param_compiled(lowered: ParamLowered, ntimes: int,
@@ -707,7 +779,7 @@ def stage_lower(
 def stage_lower_parametric(
     pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
     params: tuple[str, ...] = ("n",), backend: str = "jax", *,
-    param_path: str = "auto", chunk: int | None = None,
+    param_path: str = "auto", chunk: "int | tuple | None" = None,
     assume_full: bool = False,
     cache: TranslationCache | None = None,
 ) -> ParamLowered:
@@ -732,6 +804,10 @@ def stage_lower_parametric(
         )
     cap_env = dict(cap_env)
     params = tuple(params)
+    # chunk is either a lane-chunk int or an N-D ((band, C), ...) window
+    # spec resolved by the ladder policy; both fingerprint into the key
+    if chunk is not None and not isinstance(chunk, int):
+        chunk = tuple((int(b), int(c)) for b, c in chunk)
     try:
         key = (
             "plower", fingerprint_pattern(pattern),
@@ -744,7 +820,7 @@ def stage_lower_parametric(
     def builder() -> ParamLowered:
         t0 = time.perf_counter()
         pnest = schedule.lower_symbolic(pattern.domain, params)
-        kw = {} if chunk is None else {"chunk": int(chunk)}
+        kw = {} if chunk is None else {"chunk": chunk}
         step = codegen.lower_jax_parametric(
             pattern, schedule, cap_env, params=params, pnest=pnest,
             param_path=param_path, assume_full=assume_full, **kw,
@@ -753,7 +829,9 @@ def stage_lower_parametric(
             pattern=pattern, schedule=schedule, cap_env=cap_env,
             params=params, backend=backend, step=step, pnest=pnest,
             key=key, lower_seconds=time.perf_counter() - t0,
-            param_path=getattr(step, "param_path", "gather"), cache=cache,
+            param_path=getattr(step, "param_path", "gather"),
+            param_window_rank=getattr(step, "param_window_rank", 0),
+            cache=cache,
         )
 
     if cache is None or key is None:

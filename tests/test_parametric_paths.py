@@ -40,6 +40,8 @@ from repro.core import (
     gather_scatter,
     identity,
     jacobi1d,
+    jacobi2d,
+    jacobi3d,
     nstream,
     param_strided_plan,
     scatter,
@@ -50,6 +52,8 @@ from repro.core.codegen import (
     lower_jax,
     lower_jax_parametric,
     param_strided_in_bounds,
+    param_strided_window,
+    param_window_bands,
     plan_nest,
     serial_oracle,
 )
@@ -482,6 +486,171 @@ def test_driver_clamps_chunk_for_full_ladders():
     envs = d._point_envs([256, 1 << 12], None)
     path, chunk, full = d._resolve_param_path(envs, {"n": 1 << 12})
     assert path == "strided" and full is False and chunk == 1 << 12
+
+
+# ---------------------------------------------------------------------------
+# N-D windows (multi-dimensional stencil nests)
+# ---------------------------------------------------------------------------
+
+
+def _check_nd_windows(pat, sch, envs, cap_env, want_rank):
+    """Resolve the ladder's N-D window spec, then prove the jax step
+    bit-identical to the numpy mirror over the WHOLE capacity arrays and
+    to the specialized path / serial oracle over the [0, n) region."""
+    pnest = sch.lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    assert splan is not None, (pat.name, sch.name)
+    assert len(param_window_bands(pnest, splan)) == want_rank
+    spec, full = param_strided_window(pnest, splan, envs, cap_env)
+    assert isinstance(spec, tuple) and len(spec) == want_rank
+    step = lower_jax_parametric(pat, sch, cap_env, chunk=spec,
+                                param_path="strided", assume_full=full)
+    assert step.param_path == "strided"
+    assert step.param_window_rank == want_rank
+    for env in envs:
+        assert param_strided_in_bounds(pat, pnest, splan, env, cap_env,
+                                       spec)
+        got = {k: jnp.asarray(v) for k, v in pat.allocate(cap_env).items()}
+        pv = (np.int32(env["n"]),)
+        for _ in range(2):
+            got = step(got, pv)
+        got = {k: np.asarray(v) for k, v in got.items()}
+        mirror = windowed_oracle(pat, sch, env, cap_env,
+                                 pat.allocate(cap_env), ntimes=2,
+                                 chunk=spec, assume_full=full)
+        for k in mirror:
+            np.testing.assert_array_equal(
+                got[k], mirror[k],
+                err_msg=f"N-D mirror: {k} not bit-identical at n={env['n']}",
+            )
+        # specialized path over the measured region: bit-identical too
+        spec_step = lower_jax(pat, sch, env)
+        sgot = {k: jnp.asarray(v) for k, v in pat.allocate(env).items()}
+        for _ in range(2):
+            sgot = spec_step(sgot)
+        for k in got:
+            region = tuple(
+                slice(0, d) for d in pat.space(k).concrete_shape(env)
+            )
+            np.testing.assert_array_equal(
+                got[k][region], np.asarray(sgot[k]),
+                err_msg=f"N-D vs specialized: {k} diverged at n={env['n']}",
+            )
+        # and the serial oracle (plain numpy semantics)
+        want = serial_oracle(pat, sch.lower(pat.domain, env),
+                             pat.allocate(env), env, ntimes=2)
+        _assert_region(pat, env, got, want, "N-D strided")
+
+
+def test_nd_windows_jacobi2d_bit_exact():
+    """The headline case: independent-template jacobi2d windows an
+    (i-chunk x j-chunk) box per step — rank-2 windows, full ladder
+    bit-identical to the mirror, the specialized path, and the oracle."""
+    pat = independent_view(jacobi2d(), 4)
+    _check_nd_windows(pat, identity(), [{"n": 18}, {"n": 34}], {"n": 34},
+                      want_rank=2)
+
+
+def test_nd_windows_jacobi2d_unaligned_rungs():
+    """Rung extents that do NOT divide the window chunks exercise the
+    per-band min-start overlap (overlapped lanes recompute identical
+    values)."""
+    pat = independent_view(jacobi2d(), 2)
+    _check_nd_windows(pat, identity(),
+                      [{"n": 18}, {"n": 23}, {"n": 29}], {"n": 29},
+                      want_rank=2)
+
+
+@pytest.mark.slow
+def test_nd_windows_jacobi3d_bit_exact():
+    pat = independent_view(jacobi3d(), 2)
+    _check_nd_windows(pat, identity(), [{"n": 10}, {"n": 18}], {"n": 18},
+                      want_rank=3)
+
+
+def test_nd_windows_masked_lane_tiny_rungs():
+    """A 2D ladder under the mask-free floor keeps N-D outer windows
+    (always full via min-start overlap) while the lane band takes the
+    sign-anchored masked emission — including a rung smaller than one
+    lane window."""
+    pat = jacobi2d()
+    sch = identity()
+    pnest = sch.lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    envs = [{"n": 6}, {"n": 10}]
+    spec, full = param_strided_window(pnest, splan, envs, {"n": 10})
+    assert isinstance(spec, tuple) and full is False
+    _check_nd_windows(pat, sch, envs, {"n": 10}, want_rank=2)
+
+
+def test_nd_window_policy_through_driver():
+    """The driver resolves stencil ladders to an N-D window spec, runs
+    them strided with one shared executable, and stamps the window rank
+    into every record."""
+    cache = TranslationCache()
+    d = Driver(lambda env: jacobi2d(),
+               DriverConfig(template="independent", programs=4, ntimes=2,
+                            reps=1, validate_n=18, parametric="auto"),
+               cache=cache)
+    envs = d._point_envs([18, 34], None)
+    path, spec, full = d._resolve_param_path(envs, {"n": 34})
+    assert path == "strided" and full is True
+    assert isinstance(spec, tuple) and len(spec) == 2
+    recs = d.run([18, 34])
+    assert cache.stats()["compile_misses"] == 1
+    assert [r.extra["param_path"] for r in recs] == ["strided"] * 2
+    assert [r.extra["param_window_rank"] for r in recs] == [2, 2]
+    d.validate_parametric([18, 34])
+
+
+def test_nd_window_bands_exclude_unwritten_dims():
+    """A dynamic band the write ignores must stay a serial loop band
+    (windowing it would collapse its last-value-wins writes):
+    D[i] = M[k, i] over an outer k loop keeps only the final k row —
+    the k band is read but never written, so it must not be windowed."""
+    i, k = Affine.of("i"), Affine.of("k")
+    stmt = Statement(
+        reads=(Access("M", (k, i)),),
+        write=Access("D", (i,)),
+        combine=lambda vals, env: vals[0],
+    )
+    pat = PatternSpec(
+        "rowlast",
+        (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("M", ("n", "n"), "float32",
+                      lambda k, i: (i + 3 * k % 7).astype(np.float32)),
+        ),
+        stmt,
+        domain(("k", 0, "n"), ("i", 0, "n")),
+    )
+    pnest = identity().lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    assert splan is not None
+    # only the innermost (lane) band is windowable; k stays a loop band
+    assert param_window_bands(pnest, splan) == (1,)
+    spec, _ = param_strided_window(pnest, splan,
+                                   [{"n": 8}, {"n": 12}], {"n": 12})
+    assert isinstance(spec, int)  # rank-1 ladders keep the legacy form
+    # the serial loop band executes k in order: the strided step and its
+    # mirror must agree with the point-by-point oracle (last k wins) —
+    # the vectorized oracle cannot express a band-collapsing write, so
+    # diff against the forced point loop
+    env, cap = {"n": 8}, {"n": 12}
+    step = lower_jax_parametric(pat, identity(), cap, chunk=spec,
+                                param_path="strided")
+    assert step.param_window_rank == 1
+    got = {k: jnp.asarray(v) for k, v in pat.allocate(cap).items()}
+    for _ in range(2):
+        got = step(got, (np.int32(env["n"]),))
+    got = {k: np.asarray(v) for k, v in got.items()}
+    mirror = windowed_oracle(pat, identity(), env, cap, pat.allocate(cap),
+                             ntimes=2, chunk=spec)
+    for k in mirror:
+        np.testing.assert_array_equal(got[k], mirror[k])
+    want = serial_oracle(pat, identity().lower(pat.domain, env),
+                         pat.allocate(env), env, ntimes=2, force_loop=True)
+    _assert_region(pat, env, got, want, "loop-band strided")
 
 
 def test_windowed_oracle_rejects_ineligible():

@@ -219,3 +219,79 @@ def test_vectorized_oracle_matches_point_loop(factory, sch, env):
     slow = serial_oracle(pat, nest, arrays, env, ntimes=2, force_loop=True)
     for k in slow:
         np.testing.assert_allclose(fast[k], slow[k], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# donated specialized measurement executables (PR-5)
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_donates_specialized_executables():
+    """Measurement executables from ``prepare`` donate their buffers: a
+    call consumes its input tuple (no working-set-sized copy survives to
+    be observed), ``bind`` threads outputs into subsequent calls, and a
+    foreign tuple mid-stream raises instead of being silently ignored."""
+    import jax.numpy as jnp
+
+    d = Driver(lambda env: triad(), _cfg(parametric=False),
+               cache=TranslationCache())
+    (p,) = d.prepare([512])
+    assert p.compiled.donated and not p.parametric
+    arrays = p.lowered.pattern.allocate(p.lowered.env)
+    tup = tuple(jnp.asarray(arrays[k]) for k in p.compiled.names)
+    fn = p.executable()
+    out1 = fn(tup)
+    out2 = fn(tup)          # timing loop re-passes the seed: threads out1
+    assert all(o.shape == t.shape for o, t in zip(out2, out1))
+    # the seed tuple's buffers were donated away on the first call
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(tup[0])
+    # a brand-new tuple cannot join an existing donated stream
+    fresh = tuple(jnp.asarray(v) for v in
+                  (np.zeros(512, np.float32),) * len(tup))
+    with pytest.raises(ValueError, match="threads its buffers"):
+        fn(fresh)
+    # and calling the raw executable with consumed buffers fails loudly
+    with pytest.raises(Exception):
+        p.compiled.run(tup)
+
+
+def test_build_stays_undonated_and_recallable():
+    """``Driver.build`` keeps the re-callable undonated compile (library
+    callers replay tuples), and the donate flag is part of the cache
+    key, so the two executables never collide."""
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(), _cfg(parametric=False), cache=cache)
+    _, _, _, compiled, tup, _ = d.build({"n": 512})
+    assert compiled.donated is False
+    a = compiled(tup)
+    b = compiled(tup)       # same tuple twice: undonated must allow it
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    d.prepare([512])        # donated twin compiles separately
+    assert cache.stats()["compile_misses"] == 2
+
+
+def test_donated_records_match_undonated_records():
+    """Donation must not change what is measured: records from the
+    donated measurement path carry the same identity fields and values
+    as a run through the undonated executable."""
+    import jax.numpy as jnp
+
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(), _cfg(parametric=False), cache=cache)
+    (rec,) = d.run([1024])
+    assert rec.extra["param_path"] == "specialized"
+    assert rec.extra["donated"] is True
+    # undonated twin executed by hand on the same arrays
+    lw = d.lower({"n": 1024})
+    c = lw.compile(ntimes=d.cfg.ntimes, donate=False, cache=cache)
+    arrays = lw.pattern.allocate(lw.env)
+    tup = tuple(jnp.asarray(arrays[k]) for k in c.names)
+    out = c(tup)
+    donated = d.prepare([1024])[0]
+    arrays2 = donated.lowered.pattern.allocate(donated.lowered.env)
+    tup2 = tuple(jnp.asarray(arrays2[k]) for k in donated.compiled.names)
+    out2 = donated.executable()(tup2)
+    for x, y in zip(out, out2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -181,6 +181,19 @@ _EXPECTED_PATHS = {
 # variant-level parametric pin)
 _TRUE_RAISES = {"pointer_chase"}
 
+# Window dimensionality the strided regime must resolve per (workload,
+# variant): 1-D nests window the lane band alone; the stencil nests
+# window an (i x j[, k]) box per step (extra.param_window_rank). Only
+# strided-regime variants appear here.
+_EXPECTED_WINDOW_RANK = {
+    ("fig06_dataspaces", "independent"): 1,
+    ("fig09_interleave", None): 1,
+    ("fig12_jacobi1d", "independent"): 1,
+    ("fig12_jacobi1d", "indep_padded"): 1,
+    ("fig14_jacobi2d", "independent"): 2,
+    ("fig15_jacobi3d", "independent"): 3,
+}
+
 
 def _shrunk(w):
     """Same workload with a cheap measurement budget (records stay
@@ -226,6 +239,11 @@ def test_registry_conformance_across_lowering_regimes():
         for lbl, rp in auto:
             want = expect.get(_variant_of(lbl), expect.get(None))
             assert rp.extra["param_path"] == want, (w.name, lbl)
+            if want == "strided":
+                rank = _EXPECTED_WINDOW_RANK.get(
+                    (w.name, _variant_of(lbl)),
+                    _EXPECTED_WINDOW_RANK.get((w.name, None)))
+                assert rp.extra["param_window_rank"] == rank, (w.name, lbl)
         if w.name in _TRUE_RAISES:
             with pytest.raises(SymbolicLowerError):
                 collect_records(ws, quick=True, cache=cache,
@@ -268,6 +286,26 @@ def test_workloads_share_single_executables_per_regime():
     assert [r.extra["param_path"] for _, r in recs6] \
         == ["strided"] * n_points
     assert cache6.stats()["compile_misses"] == 1
+
+
+def test_stencil_ladders_run_nd_windows():
+    """fig14/fig15 independent ladders — the paper's headline stencils —
+    share one strided executable with multi-dimensional windows, and
+    every record names the window rank."""
+    load_builtins()
+    for name, want_rank in (("fig14_jacobi2d", 2), ("fig15_jacobi3d", 3)):
+        w = _shrunk(suite.workload(name))
+        indep = dataclasses.replace(
+            w, variants=tuple(v for v in w.variant_list(True)
+                              if v.label == "independent"))
+        cache = TranslationCache()
+        recs = collect_records(indep, quick=True, cache=cache,
+                               parametric="auto")
+        assert [r.extra["param_path"] for _, r in recs] \
+            == ["strided"] * len(recs), name
+        assert [r.extra["param_window_rank"] for _, r in recs] \
+            == [want_rank] * len(recs), name
+        assert cache.stats()["compile_misses"] == 1, name
 
 
 def test_param_path_override_pins_the_regime():
