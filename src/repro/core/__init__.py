@@ -8,9 +8,24 @@ Layers (each maps to a component of the paper's Figure 1):
     staging             staged lower -> compile -> execute + translation cache
     drivers             unified / independent / measured driver templates
     measure             timing, bandwidth accounting, counter surrogates
+    errors              failure taxonomy for fault-isolated sweeps
     autotune            schedule-variant sweeps (optimization testbed)
 """
 from .domain import Affine, Dim, IterDomain, domain
+from .errors import (
+    BenchFailure,
+    BudgetExceeded,
+    CapacityRefused,
+    CompileFailure,
+    Demotion,
+    FailureRecord,
+    LowerFailure,
+    MeasureFailure,
+    ResiliencePolicy,
+    SweepFailures,
+    ValidateFailure,
+    classify_failure,
+)
 from .schedule import ParamNest, Schedule, SymbolicLowerError, identity
 from .pattern import (
     Access,
@@ -62,11 +77,13 @@ from .drivers import (
 )
 from .measure import (
     Record,
+    TimingResult,
     classify_level,
     hlo_counters,
     latency_ns,
     tile_traffic,
     time_fn,
+    time_pair,
 )
 from .autotune import SweepResult, Variant, sweep
 
@@ -86,7 +103,10 @@ __all__ = [
     "disk_cache_stats",
     "Driver", "DriverConfig", "Prepared",
     "independent_view", "unified_program_schedule",
-    "Record", "classify_level", "hlo_counters", "latency_ns",
-    "tile_traffic", "time_fn",
+    "Record", "TimingResult", "classify_level", "hlo_counters",
+    "latency_ns", "tile_traffic", "time_fn", "time_pair",
+    "BenchFailure", "LowerFailure", "CompileFailure", "ValidateFailure",
+    "MeasureFailure", "BudgetExceeded", "CapacityRefused", "SweepFailures",
+    "FailureRecord", "Demotion", "ResiliencePolicy", "classify_failure",
     "SweepResult", "Variant", "sweep",
 ]

@@ -68,10 +68,13 @@ def sweep(
 
     cache = cache if cache is not None else GLOBAL_CACHE
     plan = SweepPlan.product(env_axis(tuple(working_sets)))
+    # strict: an autotune caller wants the argmax over ALL variants — a
+    # silently missing candidate would bias the pick, so faults raise
     rows = run_plan(
         pattern_factory,
         [VariantSpec(v.name, v.config) for v in variants],
         plan, quick=True, cache=cache, validate=validate, parametric=None,
+        on_error="raise",
     )
     records = [(row.variant, row.record) for row in rows]
     best = max(records, key=lambda nr: key(nr[1]))

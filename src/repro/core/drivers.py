@@ -45,6 +45,14 @@ import jax.numpy as jnp
 
 from .codegen import serial_oracle
 from .domain import Affine, Dim, IterDomain
+from .errors import (
+    BenchFailure,
+    BudgetExceeded,
+    CapacityRefused,
+    CompileFailure,
+    LowerFailure,
+    default_capacity_budget,
+)
 from .measure import (
     Record,
     classify_level,
@@ -191,6 +199,25 @@ class DriverConfig:
     # Records report the chosen regime as extra["param_path"]
     # ("specialized" when the point did not share an executable at all).
     param_path: str = "auto"
+    # Buffer donation on the jax backend: None = backend default (jax
+    # donates, pallas does not). False is the resilience engine's last
+    # demotion rung — undonated executables copy per call but sidestep
+    # any donation-stream fault. Parametric sharing requires donation,
+    # so donate=False also forces the specialized path.
+    donate: bool | None = None
+    # Adaptive measurement quality (see measure.time_fn): repeat past
+    # `reps` until the sample CV drops to target_cv, bounded by
+    # max_reps. None keeps the fixed-rep legacy estimator.
+    target_cv: float | None = None
+    max_reps: int | None = None
+    # Straggler watchdog: wall-clock budget per measurement point;
+    # exceeding it raises BudgetExceeded (recorded as a failure by the
+    # plan engine rather than hanging the sweep).
+    time_budget_s: float | None = None
+    # Working-set pre-flight: refuse (CapacityRefused) points whose
+    # allocation would exceed this budget. None = process default
+    # (REPRO_CAPACITY_BUDGET env var, else 80% of MemAvailable).
+    capacity_budget_bytes: int | None = None
 
 
 @dataclasses.dataclass
@@ -360,6 +387,8 @@ class Driver:
         cfg = self.cfg
         if cfg.backend != "jax":
             return False
+        if cfg.donate is False:
+            return False  # parametric executables are always donated
         # only the "n" param stays symbolic: points that disagree on any
         # *other* env entry cannot share one executable
         rest = {tuple(sorted((k, v) for k, v in e.items() if k != "n"))
@@ -395,9 +424,63 @@ class Driver:
             for e in envs:
                 if fingerprint_pattern(self._templated(e)[0]) != cap_fp:
                     return False
-        except Exception:
+        except (KeyError, ValueError, TypeError, ArithmeticError,
+                SymbolicLowerError):
+            # expected shape-probe outcomes (missing env symbol, invalid
+            # extent arithmetic, unfingerprintable structure): the ladder
+            # simply is not parametric. Anything else is a real fault and
+            # propagates to the resilience layer instead of being
+            # silently swallowed as "specialize".
             return False
         return True
+
+    def _failure_context(self, env: Mapping[str, int] | None = None) -> dict:
+        """Diagnosable payload for taxonomy wrappers: pattern, schedule,
+        template, backend, env — enough to reproduce the fault from the
+        record alone."""
+        cfg = self.cfg
+        ctx = {
+            "template": cfg.template,
+            "schedule": (cfg.schedule or identity()).name,
+            "backend": cfg.backend,
+            "programs": cfg.programs,
+        }
+        if env is not None:
+            ctx["env"] = dict(env)
+            try:
+                ctx["pattern"] = self.factory(dict(env)).name
+            except Exception:
+                pass  # the factory itself may be the fault
+        return ctx
+
+    def _preflight(self, pat: PatternSpec, alloc_env: Mapping[str, int]) -> None:
+        """Working-set pre-flight: refuse allocations that would blow the
+        capacity budget — a structured ``CapacityRefused`` instead of an
+        OOM kill. ``alloc_env`` is the env the arrays are materialized
+        at (the ladder capacity on the parametric path, the point's own
+        env specialized — which is why demoting parametric→specialized
+        can rescue the smaller rungs of a refused ladder)."""
+        budget = (self.cfg.capacity_budget_bytes
+                  if self.cfg.capacity_budget_bytes is not None
+                  else default_capacity_budget())
+        if budget is None:
+            return
+        ws = sum(
+            int(np.prod(s.concrete_shape(alloc_env)))
+            * np.dtype(s.dtype).itemsize
+            for s in pat.spaces
+        )
+        need = 2 * ws  # seed tuple + output buffers live simultaneously
+        if need > budget:
+            raise CapacityRefused(
+                f"refusing allocation: working set {ws} bytes (x2 for "
+                f"in/out buffers = {need}) exceeds the capacity budget "
+                f"of {budget} bytes at n={alloc_env.get('n')}",
+                context={**self._failure_context(alloc_env),
+                         "pattern": pat.name,
+                         "working_set_bytes": int(ws),
+                         "required_bytes": int(need),
+                         "budget_bytes": int(budget)})
 
     def build(self, env: Mapping[str, int]):
         """Stage 1+2 plus initial arrays.
@@ -472,13 +555,30 @@ class Driver:
                 path, chunk, full = resolved
                 preps = []
                 for env in envs:
-                    lw = self.lower_parametric(
-                        cap_env, param_path=path, chunk=chunk,
-                        assume_full=full)
-                    c = lw.compile(
-                        ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
-                        cache=self.cache,
-                    )
+                    try:
+                        lw = self.lower_parametric(
+                            cap_env, param_path=path, chunk=chunk,
+                            assume_full=full)
+                    except (BenchFailure, SymbolicLowerError):
+                        raise
+                    except Exception as e:
+                        raise LowerFailure(
+                            f"{type(e).__name__}: {e}",
+                            context=self._failure_context(cap_env),
+                            cause=e) from e
+                    try:
+                        c = lw.compile(
+                            ntimes=cfg.ntimes,
+                            sync_every_rep=cfg.sync_every_rep,
+                            cache=self.cache,
+                        )
+                    except BenchFailure:
+                        raise
+                    except Exception as e:
+                        raise CompileFailure(
+                            f"{type(e).__name__}: {e}",
+                            context=self._failure_context(cap_env),
+                            cause=e) from e
                     preps.append(Prepared(env=env, lowered=lw, compiled=c))
                 return preps
             if cfg.parametric is True:
@@ -487,21 +587,42 @@ class Driver:
                     f"cannot share one executable under {cfg.template}/"
                     f"{(cfg.schedule or identity()).name}"
                 )
-        lowereds = [(env, self.lower(env)) for env in envs]
+        lowereds = []
+        for env in envs:
+            try:
+                lowereds.append((env, self.lower(env)))
+            except (BenchFailure, SymbolicLowerError):
+                raise
+            except Exception as e:
+                raise LowerFailure(
+                    f"{type(e).__name__}: {e}",
+                    context=self._failure_context(env), cause=e) from e
         # measurement executables donate their buffers (no per-call
         # working-set-sized copy — the same copy-free economics as the
         # parametric path, so strided-vs-specialized comparisons are
         # fair on both sides); Prepared.executable() threads the
         # consumed tuples. The pallas backend keeps undonated compiles
-        # (its calls already alias the output in place).
-        donate = cfg.backend == "jax"
-        thunks = [
-            (lambda lw=lw: lw.compile(
-                ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
-                donate=donate, cache=self.cache,
-            ))
-            for _, lw in lowereds
-        ]
+        # (its calls already alias the output in place). donate=False
+        # (the last demotion rung) forces per-call copies everywhere.
+        donate = (cfg.backend == "jax") if cfg.donate is None \
+            else bool(cfg.donate)
+
+        def _compile_thunk(lw, env):
+            def thunk():
+                try:
+                    return lw.compile(
+                        ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
+                        donate=donate, cache=self.cache,
+                    )
+                except BenchFailure:
+                    raise
+                except Exception as e:
+                    raise CompileFailure(
+                        f"{type(e).__name__}: {e}",
+                        context=self._failure_context(env), cause=e) from e
+            return thunk
+
+        thunks = [_compile_thunk(lw, env) for env, lw in lowereds]
         compiled = (precompile(thunks) if parallel
                     else [t() for t in thunks])
         return [
@@ -540,67 +661,82 @@ class Driver:
 
     # -- measurement ---------------------------------------------------------
 
-    def run(self, working_sets: "Sequence[int | Mapping[str, int]]",
-            env_extra: Mapping[str, int] | None = None) -> list[Record]:
+    def measure_point(self, p: Prepared) -> Record:
+        """Measure ONE staged point — the per-point isolation unit the
+        plan engine wraps (a fault here fails this point, not the
+        group). Runs the working-set pre-flight, times under the
+        configured quality policy, and stamps ``extra.timing_quality``
+        on the record."""
         cfg = self.cfg
-        records = []
-        for p in self.prepare(working_sets, env_extra):
-            pat, env = p.lowered.pattern, p.env
-            # Parametric points allocate at the shared capacity env (the
-            # executable's static shapes); the kernel only touches the
-            # [0, n) region, and all *accounting* below uses the actual
-            # per-point env so records match the specialized path.
-            arrays0 = {
-                k: jnp.asarray(v) for k, v in pat.allocate(p.lowered.env).items()
-            }
-            tup = tuple(arrays0[k] for k in p.compiled.names)
+        pat, env = p.lowered.pattern, p.env
+        # Parametric points allocate at the shared capacity env (the
+        # executable's static shapes); the kernel only touches the
+        # [0, n) region, and all *accounting* below uses the actual
+        # per-point env so records match the specialized path.
+        self._preflight(pat, p.lowered.env)
+        arrays0 = {
+            k: jnp.asarray(v) for k, v in pat.allocate(p.lowered.env).items()
+        }
+        tup = tuple(arrays0[k] for k in p.compiled.names)
+        try:
             timing = time_fn(
                 p.executable(), tup, reps=cfg.reps, warmup=1,
                 compile_seconds=p.compiled.compile_seconds,
+                target_cv=cfg.target_cv, max_reps=cfg.max_reps,
+                budget_s=cfg.time_budget_s,
             )
-            pts = pat.domain.point_count(env)
-            bpp = pat.bytes_per_point()
-            total_bytes = bpp * pts * cfg.ntimes
-            ws_bytes = sum(
-                int(np.prod(s.concrete_shape(env)))
-                * np.dtype(s.dtype).itemsize
-                for s in pat.spaces
-            )
-            rec = Record(
-                pattern=pat.name,
-                template=cfg.template,
-                schedule=p.lowered.schedule.name,
-                backend=cfg.backend,
-                n=int(env["n"]),
-                working_set_bytes=ws_bytes,
-                programs=cfg.programs,
-                ntimes=cfg.ntimes,
-                seconds=timing.seconds,
-                gbs=total_bytes / timing.seconds / 1e9,
-                gflops=pat.flops_per_point * pts * cfg.ntimes
-                / timing.seconds / 1e9,
-                level=classify_level(ws_bytes),
-                extra={
-                    "barrier": cfg.sync_every_rep,
-                    "points": int(pts),
-                    "compile_seconds": p.compiled.compile_seconds,
-                    "lower_seconds": p.lowered.lower_seconds,
-                    "cache_hit": p.compiled.from_cache,
-                    "parametric": p.parametric,
-                    "param_path": (p.compiled.param_path if p.parametric
-                                   else "specialized"),
-                    "donated": bool(getattr(p.compiled, "donated", True)),
-                    **({"capacity": int(p.lowered.cap_env["n"]),
-                        "param_window_rank": int(
-                            p.compiled.param_window_rank)}
-                       if p.parametric else {}),
-                },
-            )
-            if cfg.measured:
-                rec.extra.update(hlo_counters(p.compiled))
-                rec.extra.update(self._traffic(pat, env).as_dict())
-            records.append(rec)
-        return records
+        except BudgetExceeded as e:
+            for k, v in self._failure_context(env).items():
+                e.context.setdefault(k, v)
+            raise
+        pts = pat.domain.point_count(env)
+        bpp = pat.bytes_per_point()
+        total_bytes = bpp * pts * cfg.ntimes
+        ws_bytes = sum(
+            int(np.prod(s.concrete_shape(env)))
+            * np.dtype(s.dtype).itemsize
+            for s in pat.spaces
+        )
+        rec = Record(
+            pattern=pat.name,
+            template=cfg.template,
+            schedule=p.lowered.schedule.name,
+            backend=cfg.backend,
+            n=int(env["n"]),
+            working_set_bytes=ws_bytes,
+            programs=cfg.programs,
+            ntimes=cfg.ntimes,
+            seconds=timing.seconds,
+            gbs=total_bytes / timing.seconds / 1e9,
+            gflops=pat.flops_per_point * pts * cfg.ntimes
+            / timing.seconds / 1e9,
+            level=classify_level(ws_bytes),
+            extra={
+                "barrier": cfg.sync_every_rep,
+                "points": int(pts),
+                "compile_seconds": p.compiled.compile_seconds,
+                "lower_seconds": p.lowered.lower_seconds,
+                "cache_hit": p.compiled.from_cache,
+                "parametric": p.parametric,
+                "param_path": (p.compiled.param_path if p.parametric
+                               else "specialized"),
+                "donated": bool(getattr(p.compiled, "donated", True)),
+                "timing_quality": timing.quality(),
+                **({"capacity": int(p.lowered.cap_env["n"]),
+                    "param_window_rank": int(
+                        p.compiled.param_window_rank)}
+                   if p.parametric else {}),
+            },
+        )
+        if cfg.measured:
+            rec.extra.update(hlo_counters(p.compiled))
+            rec.extra.update(self._traffic(pat, env).as_dict())
+        return rec
+
+    def run(self, working_sets: "Sequence[int | Mapping[str, int]]",
+            env_extra: Mapping[str, int] | None = None) -> list[Record]:
+        return [self.measure_point(p)
+                for p in self.prepare(working_sets, env_extra)]
 
     def validate_parametric(self,
                             working_sets: "Sequence[int | Mapping[str, int]]",

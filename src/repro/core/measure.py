@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import statistics
 import time
 from typing import Callable, Mapping, Sequence
 
@@ -29,9 +30,12 @@ import numpy as np
 
 import jax
 
+from .errors import BudgetExceeded
+
 __all__ = [
     "TimingResult",
     "time_fn",
+    "time_pair",
     "hlo_counters",
     "TileTraffic",
     "tile_traffic",
@@ -45,18 +49,57 @@ NATIVE_TILE = (8, 128)
 NATIVE_TILE_BYTES = NATIVE_TILE[0] * NATIVE_TILE[1] * 4
 
 
+def _cv(times: Sequence[float]) -> float:
+    """Sample coefficient of variation; 0 for fewer than two samples."""
+    if len(times) < 2:
+        return 0.0
+    mean = sum(times) / len(times)
+    if mean <= 0:
+        return 0.0
+    var = sum((t - mean) ** 2 for t in times) / (len(times) - 1)
+    return (var ** 0.5) / mean
+
+
 @dataclasses.dataclass
 class TimingResult:
     seconds: float          # median per-call wall time
     reps: int
-    all_seconds: tuple[float, ...]
+    all_seconds: tuple[float, ...]   # chronological, unsorted
     # staged pipeline: AOT compile time, reported separately from run
     # time so sweep records never fold translation cost into bandwidth
     compile_seconds: float | None = None
+    target_cv: float | None = None   # adaptive mode's convergence target
+    converged: bool = True           # CV <= target within the rep budget
+    slow_reps: int = 0               # reps flagged by the straggler check
+
+    @property
+    def minimum(self) -> float:
+        """Fastest rep — the Mess-style noise-floor estimator (system
+        noise only ever inflates a rep, never deflates it)."""
+        return min(self.all_seconds) if self.all_seconds else self.seconds
+
+    @property
+    def cv(self) -> float:
+        return _cv(self.all_seconds)
+
+    def quality(self) -> dict:
+        """The ``extra["timing_quality"]`` payload every Record stamps."""
+        return {
+            "median_s": self.seconds,
+            "min_s": self.minimum,
+            "cv": round(self.cv, 6),
+            "reps": self.reps,
+            "target_cv": self.target_cv,
+            "converged": self.converged,
+            "slow_reps": self.slow_reps,
+        }
 
 
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2,
-            compile_seconds: float | None = None) -> TimingResult:
+            compile_seconds: float | None = None,
+            target_cv: float | None = None, max_reps: int | None = None,
+            budget_s: float | None = None,
+            straggler_factor: float = 3.0) -> TimingResult:
     """Median wall time of ``fn(*args)`` with device fencing.
 
     ``fn`` may be a pre-compiled executable from the staged pipeline
@@ -70,17 +113,97 @@ def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2,
     returns): the timing loop re-passes the same seed tuple every rep,
     and the bound wrapper threads each call's output buffers into the
     next call, so the consumed donation stream stays valid.
+
+    Adaptive quality mode: with ``target_cv`` set, keep adding reps past
+    ``reps`` until the sample CV drops to the target or the rep budget
+    (``max_reps``, default ``max(4*reps, 8)``) is spent; the result
+    reports whether it ``converged``. Guard rails in any mode: a rep
+    slower than ``straggler_factor`` x the trailing median (last 20
+    reps) is counted in ``slow_reps`` — the ``FaultTolerantLoop``
+    straggler policy applied to measurement; and with ``budget_s`` set,
+    exceeding the wall-clock budget raises :class:`BudgetExceeded`
+    (checked between reps — a single in-flight XLA call cannot be
+    preempted, so the budget granularity is one rep).
     """
+    t_start = time.perf_counter()
+
+    def _check_budget(done: int, trailing: float | None) -> None:
+        if budget_s is None:
+            return
+        elapsed = time.perf_counter() - t_start
+        if elapsed > budget_s:
+            raise BudgetExceeded(
+                f"measurement exceeded its {budget_s:.3f}s wall-clock budget "
+                f"after {elapsed:.3f}s ({done} reps timed)",
+                context={"budget_s": budget_s, "elapsed_s": elapsed,
+                         "reps_done": done, "trailing_median_s": trailing})
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(reps):
+        _check_budget(0, None)
+    cap = reps if target_cv is None else max(
+        reps, max_reps if max_reps is not None else max(4 * reps, 8))
+    times: list[float] = []
+    slow = 0
+    converged = True
+    while True:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return TimingResult(times[len(times) // 2], reps, tuple(times),
-                        compile_seconds)
+        dt = time.perf_counter() - t0
+        trailing = statistics.median(times[-20:]) if len(times) >= 3 else None
+        if trailing is not None and straggler_factor \
+                and dt > straggler_factor * trailing:
+            slow += 1
+        times.append(dt)
+        _check_budget(len(times), trailing)
+        if len(times) >= reps:
+            if target_cv is None:
+                break
+            if _cv(times) <= target_cv:
+                break
+            if len(times) >= cap:
+                converged = False
+                break
+    ordered = sorted(times)
+    return TimingResult(ordered[len(ordered) // 2], len(times), tuple(times),
+                        compile_seconds, target_cv, converged, slow)
+
+
+def time_pair(fn_a: Callable, args_a: tuple, fn_b: Callable, args_b: tuple,
+              *, reps: int = 7, passes: int = 1,
+              warmup: int = 1) -> tuple[TimingResult, TimingResult]:
+    """Matched-load interleaved A/B timing (the Mess discipline).
+
+    Wall-clock on a shared machine is only comparable *under the same
+    load*, so A and B are timed in strict alternation — every A rep has
+    a B rep as its temporal neighbour, and a background-load spike hits
+    both sides. Spikes can only inflate a rep, never deflate it, so
+    consume the results via ``.minimum`` (min-of-reps) for ratio gates;
+    ``.cv`` reports how noisy the session was. ``passes`` repeats the
+    whole alternation block — callers wanting temporally *separated*
+    passes (the PR-5 probe) call with ``passes=1`` from their own outer
+    loop and fold the minima.
+
+    Donated executables: same binding contract as :func:`time_fn`.
+    """
+    pairs = ((fn_a, args_a), (fn_b, args_b))
+    for _ in range(warmup):
+        for fn, args in pairs:
+            jax.block_until_ready(fn(*args))
+    times_a: list[float] = []
+    times_b: list[float] = []
+    for _ in range(passes):
+        for _ in range(reps):
+            for sink, (fn, args) in zip((times_a, times_b), pairs):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                sink.append(time.perf_counter() - t0)
+
+    def _result(ts: list[float]) -> TimingResult:
+        ordered = sorted(ts)
+        return TimingResult(ordered[len(ordered) // 2], len(ts), tuple(ts))
+
+    return _result(times_a), _result(times_b)
 
 
 def hlo_counters(target, *args) -> dict[str, float]:

@@ -188,7 +188,10 @@ def _install_disk_listener() -> None:
                 _disk_counters[key] += 1
 
         jax.monitoring.register_event_listener(_on_event)
-    except Exception:  # pragma: no cover - monitoring API drift
+    except (AttributeError, TypeError):  # pragma: no cover - monitoring
+        # API drift (jax.monitoring moved/renamed): counters stay 0/0.
+        # Deliberately narrow — any *other* fault here is a real bug and
+        # must surface, per the failure-taxonomy policy in core.errors.
         pass
 
 
@@ -199,7 +202,9 @@ def disk_cache_stats() -> dict:
         from jax._src import compilation_cache as _cc
 
         enabled = bool(_cc.is_persistent_cache_enabled())
-    except Exception:  # pragma: no cover
+    except (ImportError, AttributeError):  # pragma: no cover - private
+        # jax API drift; narrow so real faults are not misreported as
+        # "disk cache disabled"
         enabled = False
     return {
         "enabled": enabled,
@@ -746,7 +751,7 @@ def stage_lower(
             tuple(grid_bands) if grid_bands else None,
             bool(force_gather), _env_key(env),
         )
-    except Exception:
+    except (TypeError, ValueError, AttributeError):
         key = None  # unhashable pattern piece: bypass the cache
 
     def builder() -> Lowered:
@@ -814,8 +819,8 @@ def stage_lower_parametric(
             fingerprint_schedule(schedule), backend, params,
             str(param_path), chunk, bool(assume_full), _env_key(cap_env),
         )
-    except Exception:
-        key = None
+    except (TypeError, ValueError, AttributeError):
+        key = None  # unhashable pattern piece: bypass the cache
 
     def builder() -> ParamLowered:
         t0 = time.perf_counter()

@@ -45,8 +45,16 @@ from .registry import (
     workload,
     workloads,
 )
-from .engine import PlanRow, run_plan
-from .runner import collect_records, csv_line, emit, run_module, run_workload
+from .engine import PlanRow, RunReport, run_plan
+from .journal import RunJournal, stable_fingerprint
+from .runner import (
+    collect_records,
+    collect_report,
+    csv_line,
+    emit,
+    run_module,
+    run_workload,
+)
 
 __all__ = [
     "Axis", "PlanPoint", "SweepPlan",
@@ -57,7 +65,8 @@ __all__ = [
     "VariantSpec", "Workload",
     "register", "workload", "workloads", "names", "all_tags",
     "load_builtins",
-    "PlanRow", "run_plan",
-    "run_workload", "run_module", "collect_records",
+    "PlanRow", "RunReport", "run_plan",
+    "RunJournal", "stable_fingerprint",
+    "run_workload", "run_module", "collect_records", "collect_report",
     "csv_line", "emit",
 ]

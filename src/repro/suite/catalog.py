@@ -366,6 +366,51 @@ def _calibrated_derived(rec: Record) -> str:
     return f"{rec.gbs:.3f}GB/s;{us:.6f}us/access"
 
 
+def _calibrated_pair_post(quick: bool) -> list[str]:
+    """One *strictly matched-load* (latency, bandwidth) sample via
+    ``measure.time_pair``: the zipped plan above pairs the two variants
+    at the same pressure *points*, but they still run back-to-back; this
+    hook times the chase and the triad in interleaved A/B calls — every
+    chase rep has a triad rep as its temporal neighbour — which is the
+    Mess calibration discipline proper. Min-of-reps on both sides;
+    emitted as two extra CSV lines with the session CV attached."""
+    import jax.numpy as jnp
+
+    from repro.core import Driver, GLOBAL_CACHE
+    from repro.core.measure import time_pair
+
+    n, ntimes = (1 << 12, 2) if quick else (1 << 16, 8)
+    chase = Driver(
+        lambda env: pointer_chase(),
+        DriverConfig(template="unified", programs=1, ntimes=ntimes,
+                     reps=1, validate_n=None, parametric=False),
+        cache=GLOBAL_CACHE)
+    band = Driver(
+        lambda env: triad(),
+        DriverConfig(template="independent", programs=4, ntimes=ntimes,
+                     reps=1, validate_n=None),
+        cache=GLOBAL_CACHE)
+    (cp,) = chase.prepare([n])
+    (bp,) = band.prepare([n])
+
+    def tup(p):
+        arrays = p.lowered.pattern.allocate(p.lowered.env)
+        return tuple(jnp.asarray(arrays[k]) for k in p.compiled.names)
+
+    tc, tb = time_pair(cp.executable(), (tup(cp),),
+                       bp.executable(), (tup(bp),), reps=5, passes=2)
+    ns_access = tc.minimum / (ntimes * n) * 1e9
+    pat = bp.lowered.pattern
+    pts = pat.domain.point_count(bp.env)
+    gbs = pat.bytes_per_point() * pts * ntimes / tb.minimum / 1e9
+    return [
+        f"mess/pair/latency_n{n},{tc.minimum * 1e6:.2f},"
+        f"{ns_access:.2f}ns/access;cv={tc.cv:.3f}",
+        f"mess/pair/bandwidth_n{n},{tb.minimum * 1e6:.2f},"
+        f"{gbs:.3f}GB/s;cv={tb.cv:.3f}",
+    ]
+
+
 register(Workload(
     name="mess_calibrated",
     figure="mess",
@@ -386,6 +431,7 @@ register(Workload(
         config_axis("ntimes", (2, 4, 8), (2, 2, 4, 4, 8, 8)),
     ),
     derived=_calibrated_derived,
+    post=_calibrated_pair_post,
 ))
 
 

@@ -21,18 +21,54 @@ Each distinct executable is validated once against the serial oracle
 (memoized in the cache), and every record is annotated with
 ``extra["axis_point"]`` — the axis-name → point mapping — so CSVs stay
 self-describing however many axes a scenario sweeps.
+
+Fault isolation (``on_error="demote"``, the default): a faulting group
+never aborts the sweep. Transient faults retry with bounded exponential
+backoff (:class:`~repro.core.errors.ResiliencePolicy`); persistent ones
+walk the **demotion ladder** — strided→gather, parametric→per-size
+specialized, donated→undonated — re-attempting only the group's still
+-pending points at each rung; a group that exhausts the ladder marks
+*its own* points failed and the sweep continues. The result is a
+:class:`RunReport` (rows + failures + demotions) instead of a bare row
+list; ``on_error="raise"`` reproduces the strict legacy behavior
+(original exceptions propagate — the conformance tests depend on the
+exact classes). Plan-*shape* errors (missing 'n' env axis, zip-length
+mismatch, unknown variant wiring) always raise: a malformed plan is a
+bug, not a fault to survive.
+
+Resumability: ``run_plan(journal=path)`` appends each completed point
+to a :class:`~repro.suite.journal.RunJournal`; re-invocation replays
+completed keys (byte-identical records, zero compiles) and executes
+only the remainder.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Sequence
 
-from repro.core import Driver, GLOBAL_CACHE, Record, TranslationCache, precompile
+from repro.core import (
+    Driver,
+    GLOBAL_CACHE,
+    Record,
+    TranslationCache,
+    identity,
+    precompile,
+)
+from repro.core.errors import (
+    BenchFailure,
+    Demotion,
+    FailureRecord,
+    ResiliencePolicy,
+    SweepFailures,
+    classify_failure,
+)
 
 from .axes import PlanPoint, SweepPlan
+from .journal import RunJournal
 from .workload import VariantSpec
 
-__all__ = ["PlanRow", "run_plan"]
+__all__ = ["PlanRow", "RunReport", "run_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +78,50 @@ class PlanRow:
     variant: str
     point: PlanPoint
     record: Record
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What a fault-isolated sweep actually produced.
+
+    Iterates like the row list ``run_plan`` used to return (existing
+    callers keep working); ``failures`` holds one
+    :class:`~repro.core.errors.FailureRecord` per point that exhausted
+    the demotion ladder, ``demotions`` the ladder steps taken, and
+    ``replayed`` the number of points served from the journal."""
+
+    rows: list[PlanRow]
+    failures: list[FailureRecord] = dataclasses.field(default_factory=list)
+    demotions: list[Demotion] = dataclasses.field(default_factory=list)
+    replayed: int = 0
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __getitem__(self, i):
+        return self.rows[i]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def summary(self) -> dict:
+        return {
+            "rows": len(self.rows),
+            "replayed": self.replayed,
+            "failures": [f.as_dict() for f in self.failures],
+            "demotions": [dataclasses.asdict(d) for d in self.demotions],
+        }
+
+    def raise_if_failed(self) -> None:
+        """Strictness on demand: aggregate the failures into one
+        :class:`~repro.core.errors.SweepFailures` (carrying them on
+        ``.failures``) after the surviving rows were already emitted."""
+        if self.failures:
+            raise SweepFailures(self.failures)
 
 
 @dataclasses.dataclass
@@ -109,6 +189,201 @@ def _grouped(variant: VariantSpec, base_factory: Callable | None,
     return list(groups.values())
 
 
+# ---------------------------------------------------------------------------
+# Fault-isolated group execution
+# ---------------------------------------------------------------------------
+
+
+def _demotion_ladder(cfg) -> list[tuple]:
+    """The (config, step-name) sequence a failing group walks, most
+    capable config first. Each rung trades capability for robustness:
+
+    * ``strided->gather``     keep sharing one executable, drop the
+                              dynamic-slice fast path for the masked
+                              gather form that is safe at every env;
+    * ``parametric->specialized``  give up executable sharing, one
+                              per-size compile per point (isolates both
+                              compile faults and capacity-sized
+                              allocations to single points);
+    * ``donated->undonated``  per-call buffer copies, but no donation
+                              stream to corrupt.
+    """
+    rungs = [(cfg, None)]
+    if cfg.parametric and cfg.param_path != "gather":
+        rungs.append((dataclasses.replace(cfg, param_path="gather"),
+                      "strided->gather"))
+    if cfg.parametric:
+        rungs.append((dataclasses.replace(cfg, parametric=False),
+                      "parametric->specialized"))
+    if cfg.donate is not False and cfg.backend == "jax":
+        rungs.append((dataclasses.replace(cfg, parametric=False,
+                                          donate=False),
+                      "donated->undonated"))
+    return rungs
+
+
+def _validate_group(d: Driver, envs: list[dict], validate: bool) -> None:
+    if validate and d.cfg.validate_n:
+        # non-"n" env entries (extra env axes) must reach the
+        # oracle too; take them from the group's smallest point
+        extra = {k: v for k, v in
+                 min(envs, key=lambda e: e["n"]).items() if k != "n"}
+        d.validate({**extra, "n": d.cfg.validate_n})
+
+
+def _attempt_strict(d: Driver, envs: list[dict], validate: bool,
+                    max_check_n: int) -> list[Record]:
+    """Legacy semantics: any fault propagates with its original class."""
+    preps = d.prepare(envs, parallel=False)
+    _validate_group(d, envs, validate)
+    recs = [d.measure_point(p) for p in preps]
+    if validate and d.cfg.validate_n and any(
+            r.extra.get("parametric") for r in recs):
+        # the executable that produced these numbers is the shared
+        # parametric one — oracle-check it too (small points only:
+        # the serial oracle's guarded fallback is O(points) Python);
+        # memoized per ladder, so re-runs don't re-pay it.
+        d.validate_parametric(envs, max_check_n=max_check_n)
+    return recs
+
+
+def _attempt(d: Driver, envs: list[dict], validate: bool, max_check_n: int,
+             ctx: dict):
+    """One fault-isolated pass over a group's pending envs.
+
+    Group-scope faults (prepare / oracle validation) raise a classified
+    ``BenchFailure``; point-scope faults (measurement) are captured per
+    point. Returns ``(successes, point_failures)`` as lists of
+    (env-index, Record) / (env-index, BenchFailure)."""
+    try:
+        preps = d.prepare(envs, parallel=False)
+    except Exception as e:
+        raise classify_failure(e, "lower", **ctx)
+    try:
+        _validate_group(d, envs, validate)
+    except Exception as e:
+        raise classify_failure(e, "validate", **ctx)
+    recs: list[tuple[int, Record]] = []
+    fails: list[tuple[int, BenchFailure]] = []
+    for i, p in enumerate(preps):
+        try:
+            recs.append((i, d.measure_point(p)))
+        except Exception as e:
+            fails.append((i, classify_failure(e, "measure", **ctx,
+                                              env=dict(p.env))))
+    if validate and d.cfg.validate_n and any(
+            r.extra.get("parametric") for _, r in recs):
+        try:
+            d.validate_parametric(envs, max_check_n=max_check_n)
+        except Exception as e:
+            # the shared executable is untrustworthy: every record it
+            # produced goes back to pending via the group-scope raise
+            raise classify_failure(e, "validate", **ctx)
+    return recs, fails
+
+
+def _run_group_isolated(g: _Group, validate: bool, max_check_n: int,
+                        policy: ResiliencePolicy):
+    """Walk the demotion ladder for one group; returns
+    ``(results, failures, demotions)`` where results maps the group-local
+    point index to its Record and failures maps it to the final
+    BenchFailure."""
+    ctx = {
+        "variant": g.variant.label,
+        "template": g.driver.cfg.template,
+        "backend": g.driver.cfg.backend,
+    }
+    pending = list(range(len(g.points)))
+    results: dict[int, Record] = {}
+    last_fail: dict[int, BenchFailure] = {}
+    attempts: dict[int, int] = {i: 0 for i in pending}
+    demotions: list[Demotion] = []
+    steps: tuple[str, ...] = ()
+    ladder = _demotion_ladder(g.driver.cfg) if policy.demote \
+        else [(g.driver.cfg, None)]
+    for cfg, step in ladder:
+        if not pending:
+            break
+        if step is None:
+            driver = g.driver
+        else:
+            trigger = last_fail.get(pending[0])
+            demotions.append(Demotion(
+                variant=g.variant.label,
+                labels=tuple(g.points[i].label for i in pending),
+                step=step,
+                stage=trigger.stage if trigger else "",
+                error=type(trigger).__name__ if trigger else "",
+            ))
+            steps += (step,)
+            driver = Driver(g.driver.factory, cfg, cache=g.driver.cache)
+        retry = 0
+        while pending:
+            if retry:
+                time.sleep(policy.backoff_s * (2 ** (retry - 1)))
+            cur = list(pending)
+            envs = [dict(g.points[i].env) for i in cur]
+            try:
+                recs, fails = _attempt(driver, envs, validate, max_check_n,
+                                       ctx)
+            except BenchFailure as e:
+                for i in cur:
+                    last_fail[i] = e
+                    attempts[i] += 1
+                if not (e.transient and retry < policy.max_retries):
+                    break  # next ladder rung
+                retry += 1
+                continue
+            for li, rec in recs:
+                gi = cur[li]
+                if steps:
+                    rec.extra["demotions"] = list(steps)
+                results[gi] = rec
+                attempts[gi] += 1
+            transient_left = False
+            pending = []
+            for li, exc in fails:
+                gi = cur[li]
+                last_fail[gi] = exc
+                attempts[gi] += 1
+                pending.append(gi)
+                transient_left = transient_left or exc.transient
+            if not pending:
+                break
+            if not (transient_left and retry < policy.max_retries):
+                break  # next ladder rung
+            retry += 1
+    failures = {i: last_fail[i] for i in pending}
+    return results, failures, demotions, attempts, steps
+
+
+def _failure_record(g: _Group, i: int, exc: BenchFailure, attempts: int,
+                    steps: tuple) -> FailureRecord:
+    pt = g.points[i]
+    cfg = g.driver.cfg
+    try:
+        pattern = g.driver.factory(dict(pt.env)).name
+    except Exception:
+        pattern = str(exc.context.get("pattern", ""))
+    return FailureRecord(
+        variant=g.variant.label,
+        label=pt.label,
+        stage=exc.stage,
+        error=type(exc).__name__,
+        message=str(exc),
+        pattern=pattern,
+        template=cfg.template,
+        schedule=(cfg.schedule or identity()).name,
+        backend=cfg.backend,
+        env=dict(pt.env),
+        axis_point=pt.axis_point(),
+        context={**exc.context,
+                 "cause": type(exc.cause).__name__ if exc.cause else None},
+        attempts=attempts,
+        demotions=list(steps),
+    )
+
+
 def run_plan(
     factory: Callable | None,
     variants: Sequence[VariantSpec],
@@ -120,9 +395,12 @@ def run_plan(
     parametric: "bool | str | None" = None,
     param_path: str | None = None,
     max_check_n: int = 4096,
-) -> list[PlanRow]:
-    """Execute ``plan`` under every variant; returns rows in
-    variant-major, plan-point order.
+    on_error: str = "demote",
+    resilience: ResiliencePolicy | None = None,
+    journal: "RunJournal | str | None" = None,
+) -> RunReport:
+    """Execute ``plan`` under every variant; returns a :class:`RunReport`
+    whose rows iterate in variant-major, plan-point order.
 
     ``parametric`` is the env-axis-sharing policy applied to configs
     that leave ``DriverConfig.parametric`` unset (None leaves them
@@ -133,42 +411,117 @@ def run_plan(
     before any timing starts; validation runs once per distinct
     executable (cache-memoized), with the parametric oracle replay
     bounded to points ``<= max_check_n``.
+
+    ``on_error="demote"`` (default) isolates faults per driver group —
+    retry/backoff per ``resilience``, then the demotion ladder, then
+    only that group's points land in ``report.failures``;
+    ``on_error="raise"`` propagates the first fault with its original
+    exception class (strict legacy behavior). ``journal`` (a path or
+    :class:`~repro.suite.journal.RunJournal`) makes the run resumable:
+    completed points replay, only the remainder executes.
     """
+    if on_error not in ("demote", "raise"):
+        raise ValueError(
+            f"unknown on_error {on_error!r} (expected 'demote' or 'raise')")
     cache = cache if cache is not None else GLOBAL_CACHE
+    policy = resilience if resilience is not None else ResiliencePolicy()
+    strict = on_error == "raise"
+    jr = None
+    if journal is not None:
+        jr = journal if isinstance(journal, RunJournal) else RunJournal(journal)
     points = plan.points(quick)
     per_variant = [
         (v, _grouped(v, factory, points, cache, parametric, param_path))
         for v in variants
     ]
-    groups = [g for _, gs in per_variant for g in gs]
-    # stage every group's executables before any timing starts
-    precompile([
-        (lambda g=g: g.driver.prepare(g.envs, parallel=False))
-        for g in groups
-    ])
-    rows: list[PlanRow] = []
+    report = RunReport(rows=[])
+
+    # journal replay: resolve every already-completed point up front and
+    # shrink the groups to the remainder
+    keyed: dict[int, list] = {}
+    replayed: dict[int, list] = {}
+    if jr is not None:
+        for vi, (v, gs) in enumerate(per_variant):
+            for gi, g in enumerate(gs):
+                keys = [RunJournal.key_for(v.label, pt, g.driver.cfg,
+                                           g.driver.factory)
+                        for pt in g.points]
+                keyed[id(g)] = keys
+                live_points, live_order, live_keys = [], [], []
+                rep: list[tuple[int, PlanRow]] = []
+                for pt, order_i, key in zip(g.points, g.order, keys):
+                    entry = jr.seen(key)
+                    if entry is None:
+                        live_points.append(pt)
+                        live_order.append(order_i)
+                        live_keys.append(key)
+                        continue
+                    report.replayed += 1
+                    if entry["kind"] == "row":
+                        rec = Record(**entry["record"])
+                        rep.append((order_i, PlanRow(v.label, pt, rec)))
+                    else:
+                        report.failures.append(
+                            FailureRecord(**entry["failure"]))
+                replayed[id(g)] = rep
+                g.points, g.order = live_points, live_order
+                keyed[id(g)] = live_keys
+
+    live = [g for _, gs in per_variant for g in gs if g.points]
+
+    # stage every live group's executables before any timing starts; in
+    # the fault-isolated mode a staging error is swallowed here and
+    # re-surfaces (classified) inside the group's own attempt, so one
+    # bad group cannot abort the barrier
+    def _stage(g: _Group):
+        def thunk():
+            try:
+                return g.driver.prepare(g.envs, parallel=False)
+            except Exception:
+                if strict:
+                    raise
+                return None
+        return thunk
+
+    precompile([_stage(g) for g in live])
+
     for v, gs in per_variant:
         indexed: list[tuple[int, PlanRow]] = []
+        if jr is not None:
+            for g in gs:
+                indexed.extend(replayed.get(id(g), []))
         for g in gs:
-            d = g.driver
-            envs = g.envs
-            if validate and d.cfg.validate_n:
-                # non-"n" env entries (extra env axes) must reach the
-                # oracle too; take them from the group's smallest point
-                extra = {k: v for k, v in
-                         min(envs, key=lambda e: e["n"]).items() if k != "n"}
-                d.validate({**extra, "n": d.cfg.validate_n})
-            recs = d.run(envs)
-            if validate and d.cfg.validate_n and any(
-                    r.extra.get("parametric") for r in recs):
-                # the executable that produced these numbers is the shared
-                # parametric one — oracle-check it too (small points only:
-                # the serial oracle's guarded fallback is O(points) Python);
-                # memoized per ladder, so re-runs don't re-pay it.
-                d.validate_parametric(envs, max_check_n=max_check_n)
-            for i, pt, rec in zip(g.order, g.points, recs):
-                rec.extra["axis_point"] = pt.axis_point()
-                indexed.append((i, PlanRow(v.label, pt, rec)))
+            if not g.points:
+                continue
+            if strict:
+                recs = _attempt_strict(g.driver, g.envs, validate,
+                                       max_check_n)
+                rows_here = []
+                for i, pt, rec in zip(g.order, g.points, recs):
+                    rec.extra["axis_point"] = pt.axis_point()
+                    rows_here.append((i, PlanRow(v.label, pt, rec)))
+            else:
+                results, failures, demotions, attempts, steps = \
+                    _run_group_isolated(g, validate, max_check_n, policy)
+                report.demotions.extend(demotions)
+                rows_here = []
+                for li, rec in sorted(results.items()):
+                    pt = g.points[li]
+                    rec.extra["axis_point"] = pt.axis_point()
+                    rows_here.append((g.order[li], PlanRow(v.label, pt, rec)))
+                for li, exc in sorted(failures.items()):
+                    fr = _failure_record(g, li, exc, attempts[li], steps)
+                    report.failures.append(fr)
+                    if jr is not None:
+                        jr.append_failure(keyed[id(g)][li], v.label,
+                                          g.points[li], fr)
+            if jr is not None:
+                for order_i, row in rows_here:
+                    li = g.order.index(order_i)
+                    jr.append_row(keyed[id(g)][li], v.label, row.point,
+                                  row.record)
+            indexed.extend(rows_here)
         # emit in plan order regardless of how grouping reordered work
-        rows.extend(row for _, row in sorted(indexed, key=lambda t: t[0]))
-    return rows
+        report.rows.extend(
+            row for _, row in sorted(indexed, key=lambda t: t[0]))
+    return report

@@ -1,0 +1,176 @@
+"""Resumable run journal — the sweep's crash-recovery substrate.
+
+``run_plan(journal=path)`` appends one JSONL entry per *completed* plan
+point (a measured ``PlanRow`` or a final ``FailureRecord``), keyed by a
+process-stable fingerprint of (variant label, axis-point coordinates,
+driver config, pattern factory). Re-invoking the same plan against the
+same journal replays the completed keys verbatim — byte-identical
+records, zero lowers/compiles — and executes only the remainder. This
+is the substrate the ROADMAP's benchmark-as-a-service daemon needs: a
+killed sweep resumes instead of restarting.
+
+Why not ``staging._freeze``'s fingerprints? Those feed an *in-process*
+cache and lean on Python's ``hash()``, which is salted per process —
+useless as a journal key. Here every key is a sha1 over a canonical
+byte encoding (sorted dict items, tagged scalar reprs, code-object
+bytecode + consts + closure for callables), so a key computed by the
+re-invocation matches the one the crashed run wrote.
+
+File format — one JSON object per line, append-only::
+
+    {"v": 1, "key": "<sha1>", "kind": "row",     "variant": ..., "label": ..., "record":  {...}}
+    {"v": 1, "key": "<sha1>", "kind": "failure", "variant": ..., "label": ..., "failure": {...}}
+
+A torn final line (the crash happened mid-write) is skipped on load;
+that point simply re-executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import types
+
+import numpy as np
+
+__all__ = ["RunJournal", "stable_fingerprint"]
+
+
+def _feed(h, obj, depth: int = 0) -> None:
+    """Feed a canonical, process-stable byte encoding of ``obj`` into
+    hash ``h``. Type-tagged so e.g. 1 and "1" and True differ."""
+    if depth > 12:          # cyclic/degenerate closures: stop descending
+        h.update(b"\x00...")
+        return
+    if obj is None:
+        h.update(b"\x00N")
+    elif isinstance(obj, bool):
+        h.update(b"\x00B1" if obj else b"\x00B0")
+    elif isinstance(obj, int):
+        h.update(b"\x00I" + str(obj).encode())
+    elif isinstance(obj, float):
+        h.update(b"\x00F" + repr(obj).encode())
+    elif isinstance(obj, str):
+        h.update(b"\x00S" + obj.encode())
+    elif isinstance(obj, bytes):
+        h.update(b"\x00Y" + obj)
+    elif isinstance(obj, (tuple, list)):
+        h.update(b"\x00T")
+        for x in obj:
+            _feed(h, x, depth + 1)
+        h.update(b"\x00t")
+    elif isinstance(obj, (dict,)):
+        h.update(b"\x00D")
+        for k in sorted(obj, key=str):
+            _feed(h, str(k), depth + 1)
+            _feed(h, obj[k], depth + 1)
+        h.update(b"\x00d")
+    elif isinstance(obj, (set, frozenset)):
+        _feed(h, sorted(obj, key=repr), depth + 1)
+    elif isinstance(obj, np.ndarray):
+        h.update(b"\x00A" + str(obj.dtype).encode() + str(obj.shape).encode())
+        h.update(obj.tobytes())
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(b"\x00C" + type(obj).__qualname__.encode())
+        for f in dataclasses.fields(obj):
+            _feed(h, f.name, depth + 1)
+            _feed(h, getattr(obj, f.name), depth + 1)
+    elif isinstance(obj, types.CodeType):
+        h.update(b"\x00K" + obj.co_code)
+        for c in obj.co_consts:
+            _feed(h, c, depth + 1)
+    elif callable(obj):
+        h.update(b"\x00L")
+        _feed(h, getattr(obj, "__module__", ""), depth + 1)
+        _feed(h, getattr(obj, "__qualname__", ""), depth + 1)
+        code = getattr(obj, "__code__", None)
+        if code is not None:
+            _feed(h, code, depth + 1)
+            for cell in (getattr(obj, "__closure__", None) or ()):
+                try:
+                    _feed(h, cell.cell_contents, depth + 1)
+                except ValueError:  # empty cell
+                    h.update(b"\x00E")
+            _feed(h, getattr(obj, "__defaults__", None), depth + 1)
+        else:
+            # bound method / functools.partial / callable object
+            _feed(h, getattr(obj, "__func__", None) or repr(type(obj)),
+                  depth + 1)
+    else:
+        # Fraction, Affine-free scalars, enums, ... — repr is stable for
+        # everything the driver configs actually carry.
+        h.update(b"\x00R" + repr(obj).encode())
+
+
+def stable_fingerprint(*objs) -> str:
+    """sha1 hex digest of a canonical encoding — identical across
+    processes for identical plan/config structure."""
+    h = hashlib.sha1()
+    for o in objs:
+        _feed(h, o)
+    return h.hexdigest()
+
+
+class RunJournal:
+    """Append-only JSONL journal of completed plan points."""
+
+    VERSION = 1
+
+    def __init__(self, path: "str | os.PathLike"):
+        self.path = pathlib.Path(path)
+        self._entries: dict[str, dict] = {}
+        if self.path.exists():
+            for line in self.path.read_text().splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    e = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn tail write from a crash: re-execute
+                if isinstance(e, dict) and e.get("v") == self.VERSION \
+                        and "key" in e:
+                    self._entries[e["key"]] = e
+
+    # -- keys ---------------------------------------------------------------
+
+    @staticmethod
+    def key_for(variant_label: str, point, cfg, factory=None) -> str:
+        """Journal key: (variant, axis point, config fingerprint) — the
+        *original* group config, never the demoted one, so a resumed run
+        matches points before walking any ladder."""
+        return stable_fingerprint(
+            variant_label, tuple(point.coords), point.label, cfg, factory)
+
+    # -- queries ------------------------------------------------------------
+
+    def seen(self, key: str) -> dict | None:
+        return self._entries.get(key)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- appends ------------------------------------------------------------
+
+    def _append(self, entry: dict) -> None:
+        self._entries[entry["key"]] = entry
+        with open(self.path, "a") as f:
+            f.write(json.dumps(entry, default=str) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def append_row(self, key: str, variant: str, point, record) -> None:
+        self._append({
+            "v": self.VERSION, "key": key, "kind": "row",
+            "variant": variant, "label": point.label,
+            "record": dataclasses.asdict(record),
+        })
+
+    def append_failure(self, key: str, variant: str, point, failure) -> None:
+        self._append({
+            "v": self.VERSION, "key": key, "kind": "failure",
+            "variant": variant, "label": point.label,
+            "failure": failure.as_dict(),
+        })

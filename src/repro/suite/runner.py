@@ -11,12 +11,15 @@ line.
 from __future__ import annotations
 
 from repro.core import GLOBAL_CACHE, Record, TranslationCache
+from repro.core.errors import ResiliencePolicy
 
-from .engine import run_plan
+from .engine import RunReport, run_plan
+from .journal import RunJournal
 from .registry import load_builtins, workload as _lookup
 from .workload import Workload
 
-__all__ = ["csv_line", "emit", "run_workload", "run_module", "collect_records"]
+__all__ = ["csv_line", "emit", "run_workload", "run_module",
+           "collect_records", "collect_report"]
 
 
 def csv_line(name: str, rec: Record, derived: str | float = "") -> str:
@@ -29,6 +32,30 @@ def emit(lines: list[str]) -> list[str]:
     for ln in lines:
         print(ln, flush=True)
     return lines
+
+
+def collect_report(
+    w: Workload, quick: bool = True, *,
+    cache: TranslationCache | None = None,
+    parametric: "bool | str | None" = None,
+    param_path: str | None = None,
+    on_error: str = "demote",
+    resilience: ResiliencePolicy | None = None,
+    journal: "RunJournal | str | None" = None,
+) -> RunReport:
+    """Measure a declarative workload through the fault-isolated plan
+    engine; returns the full :class:`~repro.suite.engine.RunReport`
+    (rows + failures + demotions + journal replays)."""
+    if w.runner is not None:
+        raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
+    cache = cache if cache is not None else GLOBAL_CACHE
+    return run_plan(
+        w.pattern, w.variant_list(quick), w.sweep_plan(),
+        quick=quick, cache=cache, validate=w.validate,
+        parametric=w.parametric if parametric is None else parametric,
+        param_path=param_path, on_error=on_error, resilience=resilience,
+        journal=journal,
+    )
 
 
 def collect_records(
@@ -44,32 +71,41 @@ def collect_records(
     ``param_path`` pins the parametric lowering regime on configs that
     leave it at "auto" (the regime-conformance tests run every workload
     under "gather" and "strided" and demand identical records).
+
+    Strict by contract: a fault propagates with its original exception
+    class (the conformance tests assert on exact classes). Callers that
+    want fault isolation use :func:`collect_report`.
     """
-    if w.runner is not None:
-        raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
-    cache = cache if cache is not None else GLOBAL_CACHE
-    rows = run_plan(
-        w.pattern, w.variant_list(quick), w.sweep_plan(),
-        quick=quick, cache=cache, validate=w.validate,
-        parametric=w.parametric if parametric is None else parametric,
-        param_path=param_path,
-    )
+    report = collect_report(w, quick, cache=cache, parametric=parametric,
+                            param_path=param_path, on_error="raise")
     return [
         (f"{w.figure}/{row.variant}/{row.point.label}", row.record)
-        for row in rows
+        for row in report.rows
     ]
 
 
 def run_workload(w: Workload, quick: bool = True, *,
-                 cache: TranslationCache | None = None) -> list[str]:
-    """Execute one workload (declarative or custom) and emit its CSV."""
+                 cache: TranslationCache | None = None,
+                 journal: "RunJournal | str | None" = None) -> list[str]:
+    """Execute one workload (declarative or custom) and emit its CSV.
+
+    Fault-isolated: a failing plan point is demoted/retried by the
+    engine and, if it still fails, reported as a ``# FAILED`` comment
+    while every surviving row is emitted normally; the aggregated
+    :class:`~repro.core.errors.SweepFailures` (carrying the
+    ``FailureRecord`` list on ``.failures``) is raised *after* emission
+    so batch callers (``benchmarks/run.py``) can record the failure and
+    continue to the next workload.
+    """
     if w.runner is not None:
         return list(w.runner(quick))
     cache = cache if cache is not None else GLOBAL_CACHE
     s0 = cache.stats()
+    report = collect_report(w, quick, cache=cache, journal=journal)
     lines = [
-        csv_line(label, rec, w.derived(rec) if w.derived else "")
-        for label, rec in collect_records(w, quick, cache=cache)
+        csv_line(f"{w.figure}/{row.variant}/{row.point.label}", row.record,
+                 w.derived(row.record) if w.derived else "")
+        for row in report.rows
     ]
     if w.post is not None:
         lines.extend(w.post(quick))
@@ -80,7 +116,18 @@ def run_workload(w: Workload, quick: bool = True, *,
         f"{s1['compile_misses'] - s0['compile_misses']} misses",
         flush=True,
     )
-    return emit(lines)
+    if report.replayed:
+        print(f"# {w.name} journal: {report.replayed} point(s) replayed",
+              flush=True)
+    for d in report.demotions:
+        print(f"# {w.name} demoted [{d.step}] after {d.stage}:{d.error} "
+              f"({', '.join(d.labels)})", flush=True)
+    for f in report.failures:
+        print(f"# {w.name} FAILED {f.variant}/{f.label}: "
+              f"{f.stage}:{f.error}: {f.message}", flush=True)
+    emit(lines)
+    report.raise_if_failed()
+    return lines
 
 
 def run_module(name: str, quick: bool = True) -> list[str]:
