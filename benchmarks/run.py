@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05,fig16]
                                             [--tag spatter,mess]
                                             [--smoke] [--list]
+                                            [--backend jax|pallas]
                                             [--out BENCH.json]
 
 Every experiment is a declarative ``repro.suite`` Workload (pattern x
@@ -13,15 +14,33 @@ prints the registered names (with tags), ``--only`` filters by name or
 figure prefix, ``--tag`` filters by scenario-family tag (``paper-figs``,
 ``spatter``, ``mess``, ``latency``); both filters compose (AND).
 
+``--backend pallas`` re-targets every declarative workload at the pallas
+backend (the ``VariantSpec.backend`` override — configs are rewritten,
+not rebuilt). Workloads the pallas backend cannot express — custom
+runners and custom-kernel patterns (pointer chase, nonuniform spatter)
+— are *skipped* with a structured ``{workload, backend, reason}`` entry
+in the ledger's ``skipped`` section instead of crashing; per-point
+faults inside eligible workloads still walk the engine's demotion
+ladder (``pallas->jax`` first).
+
 ``--smoke`` runs every selected workload in quick mode and writes a JSON
-perf ledger (default ``BENCH_PR6.json`` at the repo root) with
+perf ledger (default ``BENCH_PR7.json`` at the repo root) with
 per-workload wall time, the process-wide translation-cache hit rate,
 capacity, and evictions (in-process lower/compile counters and the jax
-disk compile cache), and the ``param_path`` probe: for strided-eligible
-ladders, the per-call cost of the strided-parametric regime against the
-specialized strided path (plus the 1-compile-per-ladder assertion), so
-``scripts/ci.sh`` can gate the regime-comparability floor (strided
-≤ 1.5x specialized) that makes ``programs``-axis sweeps trustworthy.
+disk compile cache), and two probes ``scripts/ci.sh`` gates on:
+
+* ``param_path_probe`` — for strided-eligible ladders, the per-call
+  cost of the strided-parametric regime against the specialized strided
+  path (plus the 1-compile-per-ladder assertion), gating the
+  regime-comparability floor (strided ≤ 1.5x specialized) that makes
+  ``programs``-axis sweeps trustworthy.
+* ``pallas_probe`` — the pallas backend against the jax backend on the
+  same strided-parametric ladders (interleaved ``time_pair`` timing,
+  1-compile-per-ladder on the pallas side, per-side
+  ``timing_quality``), stamping the platform-resolved execution mode
+  (``compiled`` where the platform lowers pallas natively,
+  ``interpret`` elsewhere) so CI can gate a calibrated backend-overhead
+  ceiling per mode.
 
 The harness is fault-isolated end to end: a failing workload (or a
 failing plan *point* inside one — the engine demotes/retries and
@@ -224,6 +243,146 @@ def _param_path_probe() -> dict:
     return out
 
 
+def _pallas_probe() -> dict:
+    """Pallas-backend vs jax-backend per-call cost on the same
+    strided-parametric ladders ``_param_path_probe`` gates (one rank-1
+    stream, one rank-2 stencil). Both sides are donated one-executable-
+    per-ladder parametric drivers; the only variable is the backend, so
+    the geomean ratio IS the pallas lowering overhead on this platform.
+
+    Timing discipline matches ``_param_path_probe``: interleaved
+    ``time_pair`` alternation blocks (both sides see the same ambient
+    load), min-of-reps per rung, adaptive pass count, per-side
+    ``timing_quality``. The probe additionally asserts pallas-backend
+    parity contracts: exactly 1 compile miss per ladder on the pallas
+    cache, every record on the strided regime, and the platform-probed
+    execution mode (``pallas_mode``) stamped for CI — ``compiled``
+    platforms gate that mode, interpret-only platforms (CPU) gate a
+    wider calibrated ratio ceiling instead.
+    """
+    import dataclasses as _dc
+    import math
+
+    import jax.numpy as _jnp
+
+    from repro.core import Driver, DriverConfig, TranslationCache, jacobi2d, triad
+    from repro.core.codegen import pallas_platform_mode
+    from repro.core.measure import TimingResult, time_pair
+
+    mode = pallas_platform_mode()
+    stream_ladder = [1 << 14, 1 << 16]
+    grid_ladder = [130, 258]
+    probes = {
+        "triad_indep": (lambda env: triad(),
+                        DriverConfig(template="independent", programs=4,
+                                     ntimes=16), stream_ladder),
+        "jacobi2d_indep": (lambda env: jacobi2d(),
+                           DriverConfig(template="independent", programs=4,
+                                        ntimes=32), grid_ladder),
+    }
+    out: dict = {"pallas_mode": mode, "workloads": {}}
+    for name, (fac, cfg, ladder) in probes.items():
+        jax_d = Driver(fac, _dc.replace(cfg, parametric=True,
+                                        param_path="strided"),
+                       cache=TranslationCache())
+        pcache = TranslationCache()
+        pal_d = Driver(fac, _dc.replace(cfg, backend="pallas",
+                                        parametric=True,
+                                        param_path="strided"), cache=pcache)
+        jax_ps = jax_d.prepare(ladder)
+        pal_ps = pal_d.prepare(ladder)
+        compile_misses = pcache.stats()["compile_misses"]
+        paths = sorted({
+            (p.compiled.param_path if p.parametric else "specialized")
+            for p in pal_ps
+        })
+        modes = sorted({p.lowered.pallas_mode for p in pal_ps})
+        samples_j: list[list[float]] = [[] for _ in ladder]
+        samples_p: list[list[float]] = [[] for _ in ladder]
+
+        def _one_pass() -> None:
+            for i, (jp, pp) in enumerate(zip(jax_ps, pal_ps)):
+                j_tup = tuple(
+                    _jnp.asarray(v) for _, v in sorted(
+                        jp.lowered.pattern.allocate(
+                            jp.lowered.env).items()))
+                p_tup = tuple(
+                    _jnp.asarray(v) for _, v in sorted(
+                        pp.lowered.pattern.allocate(
+                            pp.lowered.env).items()))
+                tj, tp = time_pair(jp.executable(), (j_tup,),
+                                   pp.executable(), (p_tup,), reps=7)
+                samples_j[i].extend(tj.all_seconds)
+                samples_p[i].extend(tp.all_seconds)
+
+        def _geomean_ratio() -> float:
+            rs = [min(p) / min(j) for j, p in zip(samples_j, samples_p)]
+            return math.exp(sum(math.log(x) for x in rs) / len(rs))
+
+        gm = float("inf")
+        for _pass in range(6):
+            _one_pass()
+            prev, gm = gm, _geomean_ratio()
+            if _pass >= 2 and abs(gm - prev) < 0.02 * prev:
+                break
+
+        def _timing(samples: list[float]) -> TimingResult:
+            ordered = sorted(samples)
+            return TimingResult(ordered[len(ordered) // 2], len(samples),
+                                tuple(samples))
+
+        t_j = [_timing(s) for s in samples_j]
+        t_p = [_timing(s) for s in samples_p]
+        best_j = [t.minimum for t in t_j]
+        best_p = [t.minimum for t in t_p]
+        ratios = [tp / tj for tj, tp in zip(best_j, best_p)]
+        out["workloads"][name] = {
+            "ns": ladder,
+            "jax_us": [round(t * 1e6, 2) for t in best_j],
+            "pallas_us": [round(t * 1e6, 2) for t in best_p],
+            "per_point_ratio": [round(x, 3) for x in ratios],
+            "ratio": round(
+                math.exp(sum(math.log(x) for x in ratios) / len(ratios)), 3),
+            "param_path": paths,
+            "pallas_mode": modes,
+            "compile_misses": compile_misses,
+            "timing_quality": {
+                "jax": [t.quality() for t in t_j],
+                "pallas": [t.quality() for t in t_p],
+            },
+        }
+    return out
+
+
+def _pallas_ineligible(w, quick: bool) -> str | None:
+    """Workload-level pallas eligibility for the ``--backend pallas``
+    rewrite. Custom-kernel patterns (arbitrary jax callables — pointer
+    chase, nonuniform spatter) are the one structural property no
+    demotion rung can lower around, so they skip up front with a
+    structured reason; anything affine proceeds and lets the engine's
+    per-point ``pallas->jax`` rung absorb residual refusals. A factory
+    that fails to instantiate reports as ineligible too — it would fail
+    identically inside the engine."""
+    pts = w.sweep_plan().points(quick)
+    for v in w.variant_list(quick):
+        factory = v.pattern or w.pattern
+        if factory is None:
+            return "no_pattern_factory"
+        seen: set = set()
+        for pt in pts:
+            if pt.pattern_kwargs in seen:
+                continue
+            seen.add(pt.pattern_kwargs)
+            try:
+                pat = factory(dict(pt.env), **dict(pt.pattern_kwargs)) \
+                    if pt.pattern_kwargs else factory(dict(pt.env))
+            except Exception as e:  # noqa: BLE001
+                return f"factory_probe: {type(e).__name__}: {e}"
+            if pat.kernel is not None:
+                return "custom_kernel"
+    return None
+
+
 def load_registry() -> tuple[list[str], dict[str, str]]:
     """Load all workloads; a custom module that fails to import becomes a
     per-module failure entry instead of killing the whole harness."""
@@ -256,7 +415,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="print registered workload names (+tags) and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="quick mode + write a JSON perf ledger")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR6.json"),
+    ap.add_argument("--backend", default="", choices=("", "jax", "pallas"),
+                    help="re-target declarative workloads at this backend "
+                         "(VariantSpec.backend override); pallas-ineligible "
+                         "workloads skip with a structured ledger entry")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR7.json"),
                     help="ledger path for --smoke")
     ap.add_argument("--journal", default="",
                     help="directory for per-workload resume journals; "
@@ -304,6 +467,8 @@ def main(argv: list[str] | None = None) -> None:
     print("name,us_per_call,derived")
     # structured failure entries: {workload, stage, error, point?, message}
     failures: list[dict] = []
+    # structured --backend skip entries: {workload, backend, reason}
+    skipped: list[dict] = []
     module_seconds: dict[str, float] = {}
     for name, err in import_errors.items():
         if not selected(name):
@@ -313,10 +478,30 @@ def main(argv: list[str] | None = None) -> None:
         module_seconds[name] = 0.0
         print(f"# {name} FAILED at import: {err}", flush=True)
     t_suite = time.time()
+    import dataclasses
+
     for name in names:
         w = suite.workload(name)
         if not selected(name, w.figure):
             continue
+        if args.backend:
+            if w.runner is not None:
+                skipped.append({"workload": name, "backend": args.backend,
+                                "reason": "custom_runner"})
+                print(f"# {name} SKIPPED for --backend {args.backend}: "
+                      "custom runner", flush=True)
+                continue
+            reason = (_pallas_ineligible(w, quick=not args.full)
+                      if args.backend == "pallas" else None)
+            if reason is not None:
+                skipped.append({"workload": name, "backend": args.backend,
+                                "reason": reason})
+                print(f"# {name} SKIPPED for --backend {args.backend}: "
+                      f"{reason}", flush=True)
+                continue
+            w = dataclasses.replace(w, variants=tuple(
+                dataclasses.replace(v, backend=args.backend)
+                for v in w.variant_list(not args.full)))
         t0 = time.time()
         journal = (str(journal_dir / f"{name}.jsonl")
                    if journal_dir is not None and w.runner is None else None)
@@ -354,14 +539,21 @@ def main(argv: list[str] | None = None) -> None:
             probe = _param_path_probe()
         except Exception as e:  # noqa: BLE001 - a broken probe must gate
             probe = {"error": f"{type(e).__name__}: {e}"}
+        try:
+            pallas_probe = _pallas_probe()
+        except Exception as e:  # noqa: BLE001 - a broken probe must gate
+            pallas_probe = {"error": f"{type(e).__name__}: {e}"}
         ledger = {
             "suite": "benchmarks.run --smoke",
             "mode": "full" if args.full else "quick",
+            "backend": args.backend or "jax",
             "total_seconds": round(time.time() - t_suite, 3),
             "module_seconds": module_seconds,
             "failures": failures,
+            "skipped": skipped,
             "translation_cache": GLOBAL_CACHE.stats(),
             "param_path_probe": probe,
+            "pallas_probe": pallas_probe,
         }
         out = pathlib.Path(args.out)
         out.write_text(json.dumps(ledger, indent=2) + "\n")

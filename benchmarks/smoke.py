@@ -1,6 +1,6 @@
 """CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR6.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR7.json]
 
 Thin alias for ``benchmarks.run --smoke``: runs the quick-mode plan of
 every registry workload (including the multi-axis ``mess_load_sweep``,
@@ -8,13 +8,16 @@ every registry workload (including the multi-axis ``mess_load_sweep``,
 ``mess_calibrated`` scenarios) and writes per-workload wall time, the
 translation-cache hit rate / capacity / evictions (in-process and jax
 disk cache), the structured ``failures`` section (fault-isolated: a
-failing workload or plan point is recorded, the batch continues), and
-the ``param_path`` probe — strided-parametric vs specialized per-call
+failing workload or plan point is recorded, the batch continues), the
+``param_path`` probe — strided-parametric vs specialized per-call
 cost with the 1-compile-per-ladder assertion and per-side
-``timing_quality`` — to the JSON ledger, so future PRs can assert the
-harness's perf trajectory (and the strided regime's ≤ 1.5x
-comparability floor) instead of guessing. CI asserts ``failures`` is
-empty on the clean run.
+``timing_quality`` — and the ``pallas_probe`` — pallas-backend vs
+jax-backend per-call cost on the same parametric ladders, stamped with
+the platform-resolved execution mode — to the JSON ledger, so future
+PRs can assert the harness's perf trajectory (the strided regime's
+≤ 1.5x comparability floor, the pallas backend's calibrated overhead
+ceiling) instead of guessing. CI asserts ``failures`` is empty on the
+clean run.
 """
 from __future__ import annotations
 

@@ -24,11 +24,18 @@
 # ladder (jacobi2d_indep, additionally required to run rank-2 N-D
 # windows) — see the FLOORS note in the gate for the single-core
 # recalibration evidence. Every probe entry must carry timing_quality.
+# Also fails on a pallas probe violation: every pallas probe ladder
+# must run the strided regime with exactly 1 compile miss on the
+# pallas cache, report a pallas_mode consistent with the platform
+# probe (compiled wherever the platform lowers pallas natively), carry
+# per-side timing_quality, and stay under the calibrated
+# backend-overhead ceiling (geomean pallas/jax <= 3.0 — see the
+# CEILING note in the gate).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR6.json}"
+LEDGER="${1:-BENCH_PR7.json}"
 
 echo "== tier-1 pytest (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -52,7 +59,14 @@ if orphans:
         "FAIL: registered workloads missing from docs/PAPER_MAP.md: "
         f"{orphans} — add a row per workload (name in backticks)"
     )
-print(f"docs/PAPER_MAP.md covers all {len(registered_names())} workloads")
+if "| Pallas backend |" not in text:
+    sys.exit(
+        "FAIL: docs/PAPER_MAP.md lost the 'Pallas backend' eligibility "
+        "column — every workload row must state how --backend pallas "
+        "treats it (eligible / demotes / skips)"
+    )
+print(f"docs/PAPER_MAP.md covers all {len(registered_names())} workloads "
+      "(+ backend-eligibility column)")
 EOF2
 
 echo "== fault-injection gate (poisoned point must not abort the sweep) =="
@@ -179,6 +193,55 @@ for name, p in probe.items():
     if not tq or not tq.get("specialized") or not tq.get("strided"):
         sys.exit(f"FAIL: {name} probe entry has no timing_quality")
     for side in ("specialized", "strided"):
+        for q in tq[side]:
+            if not {"median_s", "min_s", "cv", "reps"} <= set(q):
+                sys.exit(f"FAIL: {name} {side} timing_quality malformed: {q}")
+pp = ledger.get("pallas_probe", {})
+if not pp or "error" in pp:
+    sys.exit(f"FAIL: pallas probe did not run: {pp}")
+from repro.core.codegen import pallas_platform_mode
+platform_mode = pallas_platform_mode()
+if pp.get("pallas_mode") != platform_mode:
+    sys.exit(f"FAIL: probe pallas_mode {pp.get('pallas_mode')!r} disagrees "
+             f"with the platform probe ({platform_mode!r})")
+# Backend-overhead ceiling, geomean pallas/jax per-call cost across the
+# probe ladder. CEILING note: both probe ladders run the same strided
+# parametric regime on both backends (donated, 1 executable each), so
+# the ratio isolates pallas-call overhead. Calibrated on this 1-core
+# container (interpret mode — the grid loop is still XLA-compiled):
+# triad_indep 1.02x, jacobi2d_indep 1.10x. 3.0x leaves load-noise
+# headroom while catching every regression class the gate exists for
+# (a non-compiled eager fallback is 50-1000x, a lost donation 5-50x,
+# a per-rung recompile shows up in compile_misses anyway).
+CEILING = 3.0
+for name in ("triad_indep", "jacobi2d_indep"):
+    if name not in pp.get("workloads", {}):
+        sys.exit(f"FAIL: pallas probe ladder {name} missing from the ledger")
+for name, p in pp["workloads"].items():
+    print(f"{name}: pallas/jax ratio {p['ratio']:.3f} "
+          f"(per rung {p['per_point_ratio']}), mode {p['pallas_mode']}, "
+          f"paths {p['param_path']}, compile misses {p['compile_misses']}")
+    if p["param_path"] != ["strided"]:
+        sys.exit(f"FAIL: {name} pallas ladder did not run the strided "
+                 f"regime: {p['param_path']}")
+    if p["compile_misses"] != 1:
+        sys.exit(f"FAIL: {name} pallas ladder compiled "
+                 f"{p['compile_misses']}x (expected one shared grid "
+                 "executable)")
+    if any(m != platform_mode for m in p["pallas_mode"]):
+        sys.exit(f"FAIL: {name} ran pallas_mode {p['pallas_mode']} on a "
+                 f"platform that probes {platform_mode!r} — compiled "
+                 "execution regressed" if platform_mode == "compiled"
+                 else f"FAIL: {name} claims modes {p['pallas_mode']} but "
+                      f"the platform probe says {platform_mode!r}")
+    if p["ratio"] > CEILING:
+        sys.exit(f"FAIL: {name} pallas per-call cost {p['ratio']:.3f}x "
+                 f"jax (> {CEILING}x ceiling)")
+    tq = p.get("timing_quality")
+    if not tq or not tq.get("jax") or not tq.get("pallas"):
+        sys.exit(f"FAIL: {name} pallas probe entry has no per-side "
+                 "timing_quality")
+    for side in ("jax", "pallas"):
         for q in tq[side]:
             if not {"median_s", "min_s", "cv", "reps"} <= set(q):
                 sys.exit(f"FAIL: {name} {side} timing_quality malformed: {q}")

@@ -41,8 +41,17 @@ autotuner can share work through the translation cache (see
     bands become the block. Refs are *unblocked* (whole array) and the
     kernel issues explicit dynamic slices — on TPU this corresponds to the
     HBM->VMEM manual-DMA style used for halo'd stencils. Blocked-
-    ``BlockSpec`` showcase kernels live in ``repro.kernels``. Executed
-    with ``interpret=True`` on this CPU container.
+    ``BlockSpec`` showcase kernels live in ``repro.kernels``. Execution
+    mode is platform-probed once per process (``pallas_platform_mode``):
+    native/compiled where the backend supports ``pl.pallas_call``
+    lowering, ``interpret=True`` otherwise (XLA:CPU).
+
+``lower_pallas_parametric``
+    Shape-polymorphic twin of ``lower_pallas``, strided regime only: the
+    ``param_strided_window`` specs become pallas *grid* steps over N-D
+    ``pl.ds`` windows, with the working-set parameters read from a traced
+    i32 operand — one pallas executable serves a whole working-set
+    ladder, same contract as ``lower_jax_parametric``'s strided path.
 
 ``serial_oracle``
     Pure-numpy execution in generated-code order. The ground truth every
@@ -72,6 +81,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .domain import Affine
+from .errors import LowerFailure
 from .pattern import Access, PatternSpec
 from .schedule import (
     LoweredInstance,
@@ -87,6 +97,8 @@ __all__ = [
     "lower_jax",
     "lower_jax_parametric",
     "lower_pallas",
+    "lower_pallas_parametric",
+    "pallas_platform_mode",
     "resolve_access",
     "resolve_access_symbolic",
     "plan_nest",
@@ -1437,9 +1449,49 @@ def lower_jax_parametric(
 # ---------------------------------------------------------------------------
 
 
+_PALLAS_MODE: dict[str, str] = {}
+
+
+def pallas_platform_mode() -> str:
+    """Probe-once resolution of how ``pl.pallas_call`` executes here.
+
+    Returns ``"compiled"`` when the default jax backend lowers and runs
+    a trivial pallas kernel natively (TPU/GPU), ``"interpret"`` when
+    only the interpreter is available (XLA:CPU refuses
+    ``interpret=False``). Memoized per process: translation-cache keys,
+    journal fingerprints, and every measurement record embed the result
+    (``extra.pallas_mode``), so artifacts measured under one mode are
+    never replayed as the other's on a different platform.
+    """
+    mode = _PALLAS_MODE.get("mode")
+    if mode is None:
+        def _probe(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1.0
+
+        try:
+            call = pl.pallas_call(
+                _probe,
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+                interpret=False,
+            )
+            jax.block_until_ready(jax.jit(call)(jnp.zeros((8,), jnp.float32)))
+            mode = "compiled"
+        except Exception:  # any refusal to lower natively means interpret
+            mode = "interpret"
+        _PALLAS_MODE["mode"] = mode
+    return mode
+
+
+def _resolve_pallas_mode(mode: str | None) -> str:
+    if mode in ("compiled", "interpret"):
+        return mode
+    return pallas_platform_mode()
+
+
 def lower_pallas(
     pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
-    *, interpret: bool = True, grid_bands: tuple[str, ...] | None = None,
+    *, mode: str | None = None, interpret: bool | None = None,
+    grid_bands: tuple[str, ...] | None = None,
     plan: NestPlan | None = None,
 ) -> Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]:
     """Lower to ``pl.pallas_call``.
@@ -1451,19 +1503,36 @@ def lower_pallas(
     become grid steps, exactly like the generated ISCC tile loops).
     The output space is aliased to its input so un-iterated elements
     (stencil borders) keep their initial values, matching the oracle.
+
+    ``mode`` selects ``"compiled"`` (native ``pl.pallas_call`` lowering)
+    or ``"interpret"``; ``None`` auto-resolves via
+    :func:`pallas_platform_mode` so capable platforms run compiled and
+    XLA:CPU falls back to the interpreter. The legacy ``interpret`` bool
+    overrides ``mode`` when given. The built step reports the resolved
+    mode as ``step.pallas_mode``.
+
+    Refusals (custom kernels, guarded schedules) raise
+    :class:`~repro.core.errors.LowerFailure` with structured context
+    naming the backend and reason, so sweep ``FailureRecord``s classify
+    them instead of carrying a bare exception string.
     """
+    if interpret is not None:  # legacy kwarg: explicit mode override
+        mode = "interpret" if interpret else "compiled"
+    mode = _resolve_pallas_mode(mode)
     if pattern.kernel is not None:
-        raise NotImplementedError(
+        raise LowerFailure(
             f"pattern {pattern.name!r} has a custom (jax) kernel; "
-            "the pallas backend cannot lower it"
+            "the pallas backend cannot lower it",
+            context={"backend": "pallas", "reason": "custom_kernel"},
         )
     if plan is None:
         plan = plan_nest(pattern, schedule, env)
     nest = plan.nest
     if plan.guarded:
-        raise NotImplementedError(
+        raise LowerFailure(
             "guarded schedules on the pallas backend: pick divisible tile "
-            "sizes (the drivers choose divisible working sets)"
+            "sizes (the drivers choose divisible working sets)",
+            context={"backend": "pallas", "reason": "guarded_schedule"},
         )
     stmt = pattern.statement
     rank = nest.rank
@@ -1473,7 +1542,10 @@ def lower_pallas(
     for d in range(rank):
         cands = [b for b, c in enumerate(inst0.A[d]) if abs(c) == 1]
         if not cands:
-            raise ValueError(f"dim {d} has no unit-stride band; cannot vectorize")
+            raise LowerFailure(
+                f"dim {d} has no unit-stride band; cannot vectorize",
+                context={"backend": "pallas", "reason": "no_unit_stride"},
+            )
         vec_band_for_dim.append(max(cands))
     vec_bands = sorted(set(vec_band_for_dim))
     if grid_bands is not None:
@@ -1483,14 +1555,39 @@ def lower_pallas(
         for d in range(rank):
             for b in vec_bands:
                 if inst.A[d][b] not in (-1, 0, 1):
-                    raise ValueError("vector band with non-unit stride")
+                    raise LowerFailure(
+                        "vector band with non-unit stride",
+                        context={"backend": "pallas",
+                                 "reason": "non_unit_vector_stride"},
+                    )
 
     grid = tuple(nest.band_extents[b] for b in gbs) or (1,)
     vec_extents = {b: nest.band_extents[b] for b in vec_bands}
 
     acc_plans = plan.plans
     if not plan.signs_ok:
-        raise ValueError("mixed coefficient signs per band; not vectorizable")
+        raise LowerFailure(
+            "mixed coefficient signs per band; not vectorizable",
+            context={"backend": "pallas", "reason": "mixed_signs"},
+        )
+    # Accesses, not just nest bands, must be unit-stride along the
+    # vector bands: the kernel reads/writes each access through a
+    # contiguous ``pl.ds`` window, so a coefficient like the 4 in
+    # ``S[4*i]`` would silently alias the wrong contiguous elements
+    # (the jax emitter gathers these; pallas refuses -> the sweep
+    # engine's ``pallas->jax`` rung picks them up structurally).
+    for racc, wacc in acc_plans:
+        for rows_const in list(racc) + [wacc]:
+            for row, _const in rows_const:
+                for b in vec_bands:
+                    if row[b] not in (-1, 0, 1):
+                        raise LowerFailure(
+                            f"access coefficient {row[b]} on the vector band "
+                            "is not unit-stride; a contiguous pallas window "
+                            "cannot express it",
+                            context={"backend": "pallas",
+                                     "reason": "strided_access"},
+                        )
 
     space_order = [s.name for s in pattern.spaces]
     out_name = stmt.write.space
@@ -1552,7 +1649,7 @@ def lower_pallas(
         grid=grid,
         out_shape=jax.ShapeDtypeStruct(shapes[out_name], dtypes[out_name]),
         input_output_aliases={out_pos: 0},
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )
 
     def step(arrays: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
@@ -1560,4 +1657,205 @@ def lower_pallas(
         arrays[out_name] = call(*[arrays[nm] for nm in space_order])
         return arrays
 
+    step.pallas_mode = mode
+    return step
+
+
+def lower_pallas_parametric(
+    pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
+    *, params: tuple[str, ...] = ("n",), chunk: "int | tuple" = _PARAM_CHUNK,
+    pnest: ParamNest | None = None, assume_full: bool = False,
+    mode: str | None = None,
+) -> Callable:
+    """Grid-mapped twin of the strided parametric jax emitter.
+
+    Builds ``step(arrays, pvals) -> arrays`` with the working-set
+    parameter(s) as traced operands, exactly like
+    :func:`lower_jax_parametric`'s strided path — same window geometry
+    (:func:`_window_chunks` / :class:`_WindowPlan` / :func:`_read_hulls`),
+    same caller contract (:func:`param_strided_in_bounds` per env) —
+    but the mixed-radix trip space becomes the pallas *grid*: serial
+    loop bands outermost, window bands (outer -> inner) innermost, one
+    N-D ``pl.ds`` window per grid step. The grid is sized at *capacity*
+    trip counts; steps past a rung's runtime radix are masked off
+    in-kernel (``pl.when``), so one pallas executable serves the whole
+    ladder (1 compile miss per ladder).
+
+    Strided regime only: nests that would need the masked gather
+    fallback raise :class:`~repro.core.schedule.SymbolicLowerError`, and
+    drivers specialize per size instead (pallas has no parametric
+    gather emitter).
+    """
+    from .schedule import SymbolicLowerError
+
+    if pattern.kernel is not None:
+        raise SymbolicLowerError(
+            f"pattern {pattern.name!r} has a custom kernel; the parametric "
+            "path cannot share it (env is baked into the step)"
+        )
+    if pnest is None:
+        pnest = schedule.lower_symbolic(pattern.domain, params)
+    splan = param_strided_plan(pattern, pnest)
+    if splan is None:
+        raise SymbolicLowerError(
+            f"pattern {pattern.name!r} under schedule {schedule.name!r} is "
+            "not strided-eligible; the pallas parametric path has no gather "
+            "fallback — specialize per size instead"
+        )
+    mode = _resolve_pallas_mode(mode)
+    params = tuple(params)
+    stmt = pattern.statement
+    w = splan.window_band
+    wins, Cs = _window_chunks(pnest, splan, cap_env, chunk)
+    C = Cs[w]
+    rest_env = {k: int(v) for k, v in cap_env.items() if k not in params}
+    wp = _WindowPlan(pnest, splan, wins, Cs)
+    outer_wins = wins[:-1]
+    grouped = [
+        (_read_hulls(stmt, racc), wacc, s_w)
+        for racc, wacc, s_w in splan.plans
+    ]
+
+    cap_scope = {k: int(v) for k, v in cap_env.items()}
+    cap_ext = [max(0, e.eval(cap_scope)) for e in pnest.band_extents]
+    # Static grid over the *capacity* trip space, loop bands outermost
+    # and window bands innermost — pallas iterates the last grid dim
+    # fastest, so execution order matches the jax emitter's mixed-radix
+    # fori_loop step for step (loop-band writes stay last-value-wins).
+    grid_order = list(wp.loop) + list(wins)
+    grid = tuple(
+        max(1, (cap_ext[b] + Cs[b] - 1) // Cs[b]) if b in Cs
+        else max(1, cap_ext[b])
+        for b in grid_order
+    ) or (1,)
+
+    space_order = [s.name for s in pattern.spaces]
+    out_name = stmt.write.space
+    out_pos = space_order.index(out_name)
+    shapes = {s.name: s.concrete_shape(cap_env) for s in pattern.spaces}
+    dtypes = {s.name: s.dtype for s in pattern.spaces}
+
+    def kernel(*refs):
+        in_refs = {nm: r for nm, r in zip(space_order, refs)}
+        pv_ref = refs[len(space_order)]
+        out_ref = refs[len(space_order) + 1]
+        scope = {p: pv_ref[i] for i, p in enumerate(params)}
+        cenv = {**rest_env, **scope}
+        ext = [jnp.maximum(_affine_traced(e, scope), 0)
+               for e in pnest.band_extents]
+        ext_w = ext[w]
+        nw = {b: (ext[b] + (Cs[b] - 1)) // Cs[b] for b in wins}
+        win_lo = {b: ext[b] - Cs[b] for b in wins}
+        idx = {b: pl.program_id(i) for i, b in enumerate(grid_order)}
+        # runtime liveness: the capacity grid over-covers small rungs
+        conds = [idx[b] < ext[b] for b in wp.loop]
+        conds += [idx[b] < nw[b] for b in wins]
+        # loop-invariant traced offsets, computed once per grid step
+        tr = [
+            (
+                [
+                    (space,
+                     [(b, cf, _affine_traced(kc, scope))
+                      for b, cf, kc in hull_rows],
+                     spans, members)
+                    for space, hull_rows, spans, members in groups
+                ],
+                [(b, cf, _affine_traced(kc, scope)) for b, cf, kc in wacc],
+                s_w,
+            )
+            for groups, wacc, s_w in grouped
+        ]
+        lane = (None if assume_full
+                else jax.lax.broadcasted_iota(jnp.int32, (C,), 0))
+
+        def instance(groups, wacc, ws, ob, valid):
+            """One instance's window step at window starts ``ws``; lanes
+            where ``valid`` is False (masked lane mode) keep the target
+            ref's current contents."""
+            wstarts, wsizes, wsel, waxes = wp.spec(wacc, ws, ob)
+            fit = wp.align(waxes)
+            vals: list = [None] * len(stmt.reads)
+            for space, hull_rows, spans, members in groups:
+                starts, sizes, sel, raxes = wp.spec(hull_rows, ws, ob)
+                hsizes = [s + sp for s, sp in zip(sizes, spans)]
+                hull = in_refs[space][tuple(
+                    pl.ds(st, hs) for st, hs in zip(starts, hsizes)
+                )]
+                for ridx, offs in members:
+                    sub = hull[tuple(
+                        slice(o, o + s) for o, s in zip(offs, sizes)
+                    )]
+                    vals[ridx] = fit(jnp, sub[sel], raxes)
+            res = stmt.combine(vals, cenv)
+            lanes = tuple(
+                wp.lane_extent(b) if b is not None else 1 for b in waxes
+            )
+            res = jnp.broadcast_to(
+                jnp.asarray(res).astype(out_ref.dtype), lanes)
+            widx = tuple(pl.ds(st, sz) for st, sz in zip(wstarts, wsizes))
+            if valid is None and all(cf == 1 for b, cf, _ in wacc if b >= 0):
+                out_ref[widx] = res
+                return
+            # strided / reversed / masked write: blend into the window
+            win = out_ref[widx]
+            if valid is not None:
+                vshape = tuple(C if b == w else 1 for b in waxes)
+                res = jnp.where(valid.reshape(vshape), res, win[wsel])
+            if all(s.step in (None, 1, -1) for s in wsel):
+                # gap-free selector: the set IS the (possibly reversed)
+                # value — .at[] with all-unit slices would make jnp build
+                # an empty scatter-index constant, which a pallas kernel
+                # cannot capture
+                out_ref[widx] = res[wsel]
+            else:
+                out_ref[widx] = win.at[wsel].set(res)
+
+        def body():
+            ob = {b: idx[b] for b in wp.loop}
+            # outer window bands always take full windows (chunks are
+            # clamped to the ladder's smallest rung): min-start overlap
+            ws0 = {b: jnp.minimum(idx[b] * Cs[b], win_lo[b])
+                   for b in outer_wins}
+            wsq = idx[w] * C
+            for groups, wacc, s_w in tr:
+                if assume_full:
+                    ws = dict(ws0)
+                    ws[w] = jnp.minimum(wsq, win_lo[w])
+                    instance(groups, wacc, ws, ob, None)
+                    continue
+                # sign-aware lane anchor, identical to the jax emitter
+                wsl = jnp.minimum(wsq, win_lo[w])
+                if s_w > 0:
+                    wsl = jnp.maximum(wsl, 0)
+                band = wsl + lane
+                valid = (band >= 0) & (band < ext_w)
+                ws = dict(ws0)
+                ws[w] = wsl
+                instance(groups, wacc, ws, ob, valid)
+
+        if conds:
+            live = conds[0]
+            for c in conds[1:]:
+                live = live & c
+            pl.when(live)(body)
+        else:
+            body()
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct(shapes[out_name], dtypes[out_name]),
+        input_output_aliases={out_pos: 0},
+        interpret=(mode == "interpret"),
+    )
+
+    def step(arrays: dict[str, jnp.ndarray], pvals) -> dict[str, jnp.ndarray]:
+        arrays = dict(arrays)
+        pv = jnp.stack([jnp.asarray(v, jnp.int32) for v in pvals])
+        arrays[out_name] = call(*[arrays[nm] for nm in space_order], pv)
+        return arrays
+
+    step.param_path = "strided"
+    step.param_window_rank = len(wins)
+    step.pallas_mode = mode
     return step

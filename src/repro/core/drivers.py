@@ -326,7 +326,9 @@ class Driver:
         ``param_path`` gets the **gather** regime: only ladder
         resolution can prove the strided windows safe for the rungs the
         caller intends to run, so the capacity-only entry point defaults
-        to the regime that is safe at every admitted env.
+        to the regime that is safe at every admitted env. (The pallas
+        backend has no gather regime, so a direct call without
+        ``param_path='strided'`` raises ``SymbolicLowerError`` there.)
         """
         pat, sch, _ = self._templated(cap_env)
         return stage_lower_parametric(
@@ -352,6 +354,11 @@ class Driver:
         the ladder's smallest windows stay big."""
         cfg = self.cfg
         if cfg.param_path == "gather":
+            if cfg.backend == "pallas":
+                raise SymbolicLowerError(
+                    "the pallas parametric path has no gather regime; "
+                    "ineligible ladders specialize per size"
+                )
             return "gather", None, False
         from .codegen import (
             param_strided_in_bounds,
@@ -369,11 +376,12 @@ class Driver:
                                            chunk)
                    for e in envs):
                 return "strided", chunk, full
-        if cfg.param_path == "strided":
+        if cfg.param_path == "strided" or cfg.backend == "pallas":
+            want = ("param_path='strided'" if cfg.param_path == "strided"
+                    else "the pallas parametric path is strided-only")
             raise SymbolicLowerError(
-                f"param_path='strided' but the ladder is not strided-"
-                f"eligible under {cfg.template}/"
-                f"{(cfg.schedule or identity()).name}"
+                f"{want} but the ladder is not strided-eligible under "
+                f"{cfg.template}/{(cfg.schedule or identity()).name}"
             )
         return "gather", None, False
 
@@ -385,7 +393,7 @@ class Driver:
         factory must be structurally env-independent (one executable can
         only serve the ladder if every point shares its structure)."""
         cfg = self.cfg
-        if cfg.backend != "jax":
+        if cfg.backend not in ("jax", "pallas"):
             return False
         if cfg.donate is False:
             return False  # parametric executables are always donated
@@ -601,10 +609,11 @@ class Driver:
         # working-set-sized copy — the same copy-free economics as the
         # parametric path, so strided-vs-specialized comparisons are
         # fair on both sides); Prepared.executable() threads the
-        # consumed tuples. The pallas backend keeps undonated compiles
-        # (its calls already alias the output in place). donate=False
-        # (the last demotion rung) forces per-call copies everywhere.
-        donate = (cfg.backend == "jax") if cfg.donate is None \
+        # consumed tuples. This holds for pallas too: input_output_
+        # aliases covers the kernel-internal aliasing, donation closes
+        # the remaining jit-boundary copy. donate=False (the last
+        # demotion rung) forces per-call copies everywhere.
+        donate = (cfg.backend in ("jax", "pallas")) if cfg.donate is None \
             else bool(cfg.donate)
 
         def _compile_thunk(lw, env):
@@ -722,6 +731,8 @@ class Driver:
                                else "specialized"),
                 "donated": bool(getattr(p.compiled, "donated", True)),
                 "timing_quality": timing.quality(),
+                **({"pallas_mode": p.lowered.pallas_mode}
+                   if cfg.backend == "pallas" else {}),
                 **({"capacity": int(p.lowered.cap_env["n"]),
                     "param_window_rank": int(
                         p.compiled.param_window_rank)}

@@ -234,6 +234,7 @@ class Lowered:
     key: tuple | None               # None = uncacheable (fingerprint failed)
     lower_seconds: float
     cache: "TranslationCache | None" = None
+    pallas_mode: str = ""           # "compiled"/"interpret" (pallas backend)
 
     @property
     def space_names(self) -> tuple[str, ...]:
@@ -402,6 +403,7 @@ class ParamLowered:
     # 2/3 = the stencil (i x j[, k]) boxes; 0 on the gather path)
     param_window_rank: int = 0
     cache: "TranslationCache | None" = None
+    pallas_mode: str = ""           # "compiled"/"interpret" (pallas backend)
 
     # Driver.run treats lowered.env as the allocation env; for the
     # parametric artifact that is the capacity env.
@@ -744,10 +746,14 @@ def stage_lower(
     from . import codegen  # deferred: codegen imports nothing from here
 
     env = dict(env)
+    # the resolved execution mode is part of a pallas artifact's identity:
+    # a cache entry (or journal record) built under interpret must never
+    # be mistaken for a natively compiled one on another platform
+    pallas_mode = codegen.pallas_platform_mode() if backend == "pallas" else ""
     try:
         key = (
             "lower", fingerprint_pattern(pattern),
-            fingerprint_schedule(schedule), backend,
+            fingerprint_schedule(schedule), backend, pallas_mode or None,
             tuple(grid_bands) if grid_bands else None,
             bool(force_gather), _env_key(env),
         )
@@ -763,7 +769,8 @@ def stage_lower(
             )
         elif backend == "pallas":
             step = codegen.lower_pallas(
-                pattern, schedule, env, grid_bands=grid_bands, plan=plan
+                pattern, schedule, env, mode=pallas_mode,
+                grid_bands=grid_bands, plan=plan,
             )
         else:
             raise ValueError(backend)
@@ -771,6 +778,7 @@ def stage_lower(
             pattern=pattern, schedule=schedule, env=env, backend=backend,
             step=step, nest=plan.nest, key=key,
             lower_seconds=time.perf_counter() - t0, cache=cache,
+            pallas_mode=pallas_mode,
         )
 
     if cache is None or key is None:
@@ -797,18 +805,30 @@ def stage_lower_parametric(
     Raises :class:`~repro.core.schedule.SymbolicLowerError` when a
     transform genuinely needs concrete extents (or ``param_path=
     "strided"`` is requested for an ineligible nest); callers fall back
-    to per-size :func:`stage_lower` specialization.
+    to per-size :func:`stage_lower` specialization. The pallas backend
+    supports the strided regime only (grid-mapped N-D windows); nests
+    that would need the gather fallback raise ``SymbolicLowerError``
+    the same way.
     """
     from . import codegen
 
-    if backend != "jax":
+    if backend not in ("jax", "pallas"):
         from .schedule import SymbolicLowerError
 
         raise SymbolicLowerError(
-            f"parametric lowering targets the jax backend, not {backend!r}"
+            f"parametric lowering targets the jax/pallas backends, "
+            f"not {backend!r}"
         )
     cap_env = dict(cap_env)
     params = tuple(params)
+    pallas_mode = codegen.pallas_platform_mode() if backend == "pallas" else ""
+    if backend == "pallas" and param_path == "gather":
+        from .schedule import SymbolicLowerError
+
+        raise SymbolicLowerError(
+            "the pallas parametric path has no gather regime; use "
+            "param_path='strided' (or the jax backend)"
+        )
     # chunk is either a lane-chunk int or an N-D ((band, C), ...) window
     # spec resolved by the ladder policy; both fingerprint into the key
     if chunk is not None and not isinstance(chunk, int):
@@ -816,8 +836,9 @@ def stage_lower_parametric(
     try:
         key = (
             "plower", fingerprint_pattern(pattern),
-            fingerprint_schedule(schedule), backend, params,
-            str(param_path), chunk, bool(assume_full), _env_key(cap_env),
+            fingerprint_schedule(schedule), backend, pallas_mode or None,
+            params, str(param_path), chunk, bool(assume_full),
+            _env_key(cap_env),
         )
     except (TypeError, ValueError, AttributeError):
         key = None  # unhashable pattern piece: bypass the cache
@@ -826,17 +847,23 @@ def stage_lower_parametric(
         t0 = time.perf_counter()
         pnest = schedule.lower_symbolic(pattern.domain, params)
         kw = {} if chunk is None else {"chunk": chunk}
-        step = codegen.lower_jax_parametric(
-            pattern, schedule, cap_env, params=params, pnest=pnest,
-            param_path=param_path, assume_full=assume_full, **kw,
-        )
+        if backend == "pallas":
+            step = codegen.lower_pallas_parametric(
+                pattern, schedule, cap_env, params=params, pnest=pnest,
+                assume_full=assume_full, mode=pallas_mode, **kw,
+            )
+        else:
+            step = codegen.lower_jax_parametric(
+                pattern, schedule, cap_env, params=params, pnest=pnest,
+                param_path=param_path, assume_full=assume_full, **kw,
+            )
         return ParamLowered(
             pattern=pattern, schedule=schedule, cap_env=cap_env,
             params=params, backend=backend, step=step, pnest=pnest,
             key=key, lower_seconds=time.perf_counter() - t0,
             param_path=getattr(step, "param_path", "gather"),
             param_window_rank=getattr(step, "param_window_rank", 0),
-            cache=cache,
+            cache=cache, pallas_mode=pallas_mode,
         )
 
     if cache is None or key is None:

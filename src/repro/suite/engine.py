@@ -174,7 +174,7 @@ def _grouped(variant: VariantSpec, base_factory: Callable | None,
             g.points.append(pt)
             g.order.append(i)
             continue
-        cfg = variant.config
+        cfg = variant.resolved_config()
         if pt.config:
             cfg = dataclasses.replace(cfg, **dict(pt.config))
         if cfg.parametric is None and parametric is not None:
@@ -198,6 +198,11 @@ def _demotion_ladder(cfg) -> list[tuple]:
     """The (config, step-name) sequence a failing group walks, most
     capable config first. Each rung trades capability for robustness:
 
+    * ``pallas->jax``         structural backend demotion: patterns the
+                              pallas backend refuses (custom kernels,
+                              guarded schedules, non-unit vector
+                              strides) re-run on the jax backend
+                              instead of failing the group;
     * ``strided->gather``     keep sharing one executable, drop the
                               dynamic-slice fast path for the masked
                               gather form that is safe at every env;
@@ -209,6 +214,11 @@ def _demotion_ladder(cfg) -> list[tuple]:
                               stream to corrupt.
     """
     rungs = [(cfg, None)]
+    if cfg.backend == "pallas":
+        # every later rung runs on jax too: a fault that survives the
+        # backend demotion is not a pallas-specific fault
+        cfg = dataclasses.replace(cfg, backend="jax")
+        rungs.append((cfg, "pallas->jax"))
     if cfg.parametric and cfg.param_path != "gather":
         rungs.append((dataclasses.replace(cfg, param_path="gather"),
                       "strided->gather"))

@@ -140,9 +140,22 @@ class RunJournal:
     def key_for(variant_label: str, point, cfg, factory=None) -> str:
         """Journal key: (variant, axis point, config fingerprint) — the
         *original* group config, never the demoted one, so a resumed run
-        matches points before walking any ladder."""
+        matches points before walking any ladder.
+
+        Pallas groups additionally key on the platform-resolved
+        execution mode: a journal written on a compiled-capable box must
+        not replay into a resumed run on an interpret-only box (or vice
+        versa) — those records carry different ``extra.pallas_mode``
+        stamps and different timings. Jax keys are unchanged, so
+        journals from before the pallas backend still replay.
+        """
+        extra = ()
+        if getattr(cfg, "backend", None) == "pallas":
+            from repro.core.codegen import pallas_platform_mode
+            extra = ("pallas_mode", pallas_platform_mode())
         return stable_fingerprint(
-            variant_label, tuple(point.coords), point.label, cfg, factory)
+            variant_label, tuple(point.coords), point.label, cfg, factory,
+            *extra)
 
     # -- queries ------------------------------------------------------------
 

@@ -31,11 +31,23 @@ class VariantSpec:
     whose pattern changes per variant, e.g. the stream-count sweep).
     Factories take ``(env, **kwargs)``; pattern-axis points arrive as
     the keyword arguments.
+
+    ``backend`` overrides ``config.backend`` when set — the CLI's
+    ``--backend`` rewrite (``benchmarks.run``) uses it to re-target a
+    registered workload at the pallas backend without rebuilding its
+    ``DriverConfig``s.
     """
 
     label: str
     config: DriverConfig
     pattern: PatternFactory | None = None
+    backend: str | None = None
+
+    def resolved_config(self) -> DriverConfig:
+        """``config`` with the ``backend`` override applied."""
+        if self.backend is None or self.backend == self.config.backend:
+            return self.config
+        return dataclasses.replace(self.config, backend=self.backend)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,240 @@
+"""Pallas-backend parity tests (the PR-7 contracts).
+
+Covers: the grid-mapped parametric pallas emitter's bit-exactness
+against the numpy window mirror (``windowed_oracle``) on the whole
+capacity arrays, the 1-compile-per-ladder cache property through the
+Driver with pallas records stamped (backend / pallas_mode / strided /
+donated), donation threading through the shared pallas executable
+(seed tuples are consumed, outputs re-thread), the sweep engine's
+``pallas->jax`` backend-demotion rung, and the structured
+``LowerFailure`` classification of every pallas lowering refusal
+(custom kernels, guarded schedules, strided accesses).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Driver,
+    DriverConfig,
+    LowerFailure,
+    SymbolicLowerError,
+    TranslationCache,
+    gather,
+    identity,
+    jacobi1d,
+    jacobi2d,
+    pointer_chase,
+    triad,
+    windowed_oracle,
+)
+from repro.core.codegen import (
+    lower_pallas,
+    lower_pallas_parametric,
+    pallas_platform_mode,
+)
+from repro.suite import SweepPlan, VariantSpec, env_axis, run_plan
+
+
+# ---------------------------------------------------------------------------
+# platform mode probe
+# ---------------------------------------------------------------------------
+
+
+def test_platform_mode_is_probed_and_memoized():
+    mode = pallas_platform_mode()
+    assert mode in ("compiled", "interpret")
+    assert pallas_platform_mode() == mode  # memoized, not re-probed
+
+
+# ---------------------------------------------------------------------------
+# grid-window bit-exactness vs the numpy window mirror
+# ---------------------------------------------------------------------------
+
+
+def _run_pallas_param(pat, sch, env, cap_env, chunk, *, assume_full=False,
+                      ntimes=2):
+    step = lower_pallas_parametric(pat, sch, cap_env, chunk=chunk,
+                                   assume_full=assume_full)
+    assert step.param_path == "strided"
+    assert step.pallas_mode == pallas_platform_mode()
+    got = {k: jnp.asarray(v) for k, v in pat.allocate(cap_env).items()}
+    pvals = [env[p] for p in ("n",)]
+    for _ in range(ntimes):
+        got = step(got, pvals)
+    return {k: np.asarray(v) for k, v in got.items()}
+
+
+@pytest.mark.parametrize("factory,sch,envs,cap,chunk,assume_full", [
+    # masked rank-1 windows, partial tails included (100 is not a
+    # multiple of the 64-chunk)
+    (triad, identity(), [{"n": 100}, {"n": 256}], {"n": 256}, 64, False),
+    # assume-full windows: every rung tiles the chunk exactly
+    (triad, identity(), [{"n": 4096}, {"n": 8192}], {"n": 8192}, 4096, True),
+    # stencil halos through the window blend
+    (jacobi1d, identity(), [{"n": 100}, {"n": 258}], {"n": 258}, 64, False),
+    # rank-2 N-D window boxes
+    (jacobi2d, identity(), [{"n": 66}, {"n": 130}], {"n": 130},
+     ((0, 32), (1, 32)), False),
+    # descending windows
+    (triad, identity().reverse("i"), [{"n": 100}, {"n": 256}], {"n": 256},
+     64, False),
+    # strided outer band (interleave) with a unit-stride lane band
+    (triad, identity().interleave("i", 2), [{"n": 128}, {"n": 256}],
+     {"n": 256}, 64, False),
+])
+def test_grid_windows_match_windowed_oracle(factory, sch, envs, cap, chunk,
+                                            assume_full):
+    """The pallas grid executable must agree with the numpy window
+    mirror bit-for-bit on the WHOLE capacity arrays — tail lanes,
+    masked-off grid steps, and untouched slack included."""
+    pat = factory()
+    for env in envs:
+        got = _run_pallas_param(pat, sch, env, cap, chunk,
+                                assume_full=assume_full)
+        mirror = windowed_oracle(pat, sch, env, cap, pat.allocate(cap),
+                                 ntimes=2, chunk=chunk,
+                                 assume_full=assume_full)
+        for k in mirror:
+            np.testing.assert_array_equal(
+                got[k], mirror[k],
+                err_msg=f"space {k} diverged at n={env['n']} ({sch.name})",
+            )
+
+
+def test_parametric_pallas_refuses_gather_only_nests():
+    """No gather fallback: a nest the strided planner rejects raises
+    SymbolicLowerError instead of silently emitting a masked gather."""
+    sch = identity().tile_by_count("i", 4, outer="prog", inner="i")
+    with pytest.raises(SymbolicLowerError, match="no gather"):
+        lower_pallas_parametric(triad(), sch, {"n": 1024})
+    with pytest.raises(SymbolicLowerError, match="custom kernel"):
+        lower_pallas_parametric(pointer_chase(), identity(), {"n": 1024})
+
+
+# ---------------------------------------------------------------------------
+# driver integration: one compile per ladder, stamped + donated records
+# ---------------------------------------------------------------------------
+
+
+def _pallas_cfg(**kw):
+    base = dict(template="independent", programs=4, backend="pallas",
+                ntimes=2, reps=1)
+    base.update(kw)
+    return DriverConfig(**base)
+
+
+def test_pallas_ladder_compiles_once_and_stamps_records():
+    cache = TranslationCache()
+    d = Driver(lambda env: triad(),
+               _pallas_cfg(parametric=True, param_path="strided"),
+               cache=cache)
+    recs = d.run([256, 512, 1024])
+    assert cache.stats()["compile_misses"] == 1
+    mode = pallas_platform_mode()
+    for r in recs:
+        assert r.backend == "pallas"
+        assert r.extra["pallas_mode"] == mode
+        assert r.extra["param_path"] == "strided"
+        assert r.extra["parametric"] and r.extra["donated"] is True
+    assert [r.n for r in recs] == [256, 512, 1024]
+    d.validate_parametric([256, 512, 1024])
+
+
+def test_pallas_parametric_matches_jax_records():
+    """Same ladder, both backends: identity fields and values agree
+    (the oracle agreement is validate_parametric above; here the
+    record-level contract)."""
+    ladder = [256, 512]
+    recs = {}
+    for backend in ("jax", "pallas"):
+        d = Driver(lambda env: triad(),
+                   DriverConfig(template="independent", programs=4,
+                                backend=backend, parametric=True,
+                                param_path="strided", ntimes=2, reps=1),
+                   cache=TranslationCache())
+        recs[backend] = d.run(ladder)
+    for rj, rp in zip(recs["jax"], recs["pallas"]):
+        for f in ("pattern", "template", "schedule", "n",
+                  "working_set_bytes", "programs", "ntimes", "level"):
+            assert getattr(rj, f) == getattr(rp, f), f
+        assert rj.extra["param_path"] == rp.extra["param_path"] == "strided"
+        assert rj.extra["param_window_rank"] \
+            == rp.extra["param_window_rank"] == 1
+
+
+def test_pallas_parametric_executable_donates_and_threads():
+    """The shared pallas executable consumes its seed tuple (donated
+    capacity buffers) and threads outputs into subsequent calls —
+    the same contract as the jax parametric path."""
+    d = Driver(lambda env: triad(),
+               _pallas_cfg(parametric=True, param_path="strided"),
+               cache=TranslationCache())
+    p = d.prepare([256, 512])[0]
+    assert p.parametric and p.lowered.pallas_mode == pallas_platform_mode()
+    arrays = p.lowered.pattern.allocate(p.lowered.env)
+    tup = tuple(jnp.asarray(arrays[k]) for k in p.compiled.names)
+    fn = p.executable()
+    out1 = fn(tup)
+    out2 = fn(tup)          # timing loop re-passes the seed: threads out1
+    assert all(o.shape == t.shape for o, t in zip(out2, out1))
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(tup[0])  # the seed's buffers were donated away
+
+
+# ---------------------------------------------------------------------------
+# structured refusals
+# ---------------------------------------------------------------------------
+
+
+def test_lower_refusals_carry_structured_context():
+    # custom (jax-only) kernel
+    with pytest.raises(LowerFailure) as ei:
+        lower_pallas(pointer_chase(), identity(), {"n": 64})
+    assert ei.value.context["backend"] == "pallas"
+    assert ei.value.context["reason"] == "custom_kernel"
+    # guarded schedule (7 does not divide 100)
+    with pytest.raises(LowerFailure) as ei:
+        lower_pallas(triad(), identity().tile("i", 7), {"n": 100})
+    assert ei.value.context["reason"] == "guarded_schedule"
+    # strided access: S[4*i] cannot be a contiguous pallas window
+    with pytest.raises(LowerFailure) as ei:
+        lower_pallas(gather(stride=4), identity(), {"n": 64})
+    assert ei.value.context["reason"] == "strided_access"
+
+
+# ---------------------------------------------------------------------------
+# the pallas->jax demotion rung
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_demotes_pallas_to_jax_structurally():
+    """A pallas-ineligible pattern inside a pallas-backend sweep demotes
+    to the jax backend instead of failing the point: the rung is walked
+    first, rows survive on jax, and the demotion is recorded."""
+    cfg = DriverConfig(template="unified", programs=2, ntimes=2, reps=1,
+                       backend="pallas", validate_n=None)
+    plan = SweepPlan.product(env_axis((256, 512)))
+    report = run_plan(lambda env: gather(stride=4), [VariantSpec("g", cfg)],
+                      plan, cache=TranslationCache())
+    assert report.ok and not report.failures
+    assert [r.point.label for r in report.rows] == ["n256", "n512"]
+    assert [d.step for d in report.demotions] == ["pallas->jax"]
+    assert report.demotions[0].stage == "lower"
+    assert report.demotions[0].error == "LowerFailure"
+    for r in report.rows:
+        assert r.record.backend == "jax"          # the demoted backend
+        assert "pallas_mode" not in r.record.extra
+
+
+def test_variant_backend_override_resolves_config():
+    v = VariantSpec("t", DriverConfig(template="independent", programs=4),
+                    backend="pallas")
+    assert v.resolved_config().backend == "pallas"
+    assert v.config.backend == "jax"              # original untouched
+    plain = VariantSpec("t", DriverConfig(template="independent", programs=4))
+    assert plain.resolved_config() is plain.config
