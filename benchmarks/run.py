@@ -4,6 +4,7 @@
                                             [--tag spatter,mess]
                                             [--smoke] [--list]
                                             [--backend jax|pallas]
+                                            [--jobs N]
                                             [--out BENCH.json]
 
 Every experiment is a declarative ``repro.suite`` Workload (pattern x
@@ -23,9 +24,18 @@ in the ledger's ``skipped`` section instead of crashing; per-point
 faults inside eligible workloads still walk the engine's demotion
 ladder (``pallas->jax`` first).
 
+``--jobs N`` (N > 1) runs each workload's plan through the plan
+engine's :class:`~repro.suite.engine.ThreadPoolBackend` — independent
+driver groups stage and measure concurrently (measurement serialized
+per device, so timing fidelity is preserved) while the emitted records
+stay identical to serial order. Custom-runner workloads own their
+execution and ignore the flag.
+
 ``--smoke`` runs every selected workload in quick mode and writes a JSON
-perf ledger (default ``BENCH_PR7.json`` at the repo root) with
-per-workload wall time, the process-wide translation-cache hit rate,
+perf ledger (default ``BENCH_PR8.json`` at the repo root) with
+per-workload wall time and per-phase (stage vs measure) split, an
+``executor`` block ({backend, workers, staging_overlap_seconds, ...})
+aggregated across workloads, the process-wide translation-cache hit rate,
 capacity, and evictions (in-process lower/compile counters and the jax
 disk compile cache), and two probes ``scripts/ci.sh`` gates on:
 
@@ -419,7 +429,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="re-target declarative workloads at this backend "
                          "(VariantSpec.backend override); pallas-ineligible "
                          "workloads skip with a structured ledger entry")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR7.json"),
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker threads for the plan engine's execution "
+                         "backend; >1 selects ThreadPoolBackend (records "
+                         "stay identical to serial order)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR8.json"),
                     help="ledger path for --smoke")
     ap.add_argument("--journal", default="",
                     help="directory for per-workload resume journals; "
@@ -464,12 +478,19 @@ def main(argv: list[str] | None = None) -> None:
     if journal_dir is not None:
         journal_dir.mkdir(parents=True, exist_ok=True)
 
+    if args.jobs < 1:
+        sys.exit(f"--jobs must be >= 1, got {args.jobs}")
+    exec_backend = (suite.ThreadPoolBackend(args.jobs)
+                    if args.jobs > 1 else None)
+
     print("name,us_per_call,derived")
     # structured failure entries: {workload, stage, error, point?, message}
     failures: list[dict] = []
     # structured --backend skip entries: {workload, backend, reason}
     skipped: list[dict] = []
     module_seconds: dict[str, float] = {}
+    # per-workload stage/measure wall-time split from the plan engine
+    module_phases: dict[str, dict] = {}
     for name, err in import_errors.items():
         if not selected(name):
             continue
@@ -505,8 +526,10 @@ def main(argv: list[str] | None = None) -> None:
         t0 = time.time()
         journal = (str(journal_dir / f"{name}.jsonl")
                    if journal_dir is not None and w.runner is None else None)
+        stats: dict = {}
         try:
-            suite.run_workload(w, quick=not args.full, journal=journal)
+            suite.run_workload(w, quick=not args.full, journal=journal,
+                               backend=exec_backend, executor_stats=stats)
             module_seconds[name] = round(time.time() - t0, 3)
             print(f"# {name} done in {module_seconds[name]:.1f}s", flush=True)
         except BenchFailure as e:
@@ -531,6 +554,31 @@ def main(argv: list[str] | None = None) -> None:
             failures.append({"workload": name, "stage": "run",
                              "error": type(e).__name__, "message": str(e)})
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+        if stats:  # declarative workloads: the engine's phase split
+            module_phases[name] = {
+                k: (round(v, 3) if isinstance(v, float) else v)
+                for k, v in stats.items()
+            }
+
+    # aggregate executor accounting across the batch (sum of the
+    # per-workload plan-engine runs; custom runners contribute nothing)
+    executor = {
+        "backend": exec_backend.name if exec_backend is not None else "serial",
+        "workers": exec_backend.workers if exec_backend is not None else 1,
+        "workloads": len(module_phases),
+        "stage_seconds": round(sum(
+            p.get("stage_seconds", 0.0) for p in module_phases.values()), 3),
+        "measure_seconds": round(sum(
+            p.get("measure_seconds", 0.0) for p in module_phases.values()), 3),
+        "stage_wall_seconds": round(sum(
+            p.get("stage_wall_seconds", 0.0)
+            for p in module_phases.values()), 3),
+        "staging_overlap_seconds": round(sum(
+            p.get("staging_overlap_seconds", 0.0)
+            for p in module_phases.values()), 3),
+        "wall_seconds": round(sum(
+            p.get("wall_seconds", 0.0) for p in module_phases.values()), 3),
+    }
 
     if args.smoke:
         from repro.core.staging import GLOBAL_CACHE
@@ -549,6 +597,8 @@ def main(argv: list[str] | None = None) -> None:
             "backend": args.backend or "jax",
             "total_seconds": round(time.time() - t_suite, 3),
             "module_seconds": module_seconds,
+            "module_phases": module_phases,
+            "executor": executor,
             "failures": failures,
             "skipped": skipped,
             "translation_cache": GLOBAL_CACHE.stats(),

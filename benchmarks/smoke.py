@@ -1,6 +1,6 @@
 """CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR7.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR8.json]
 
 Thin alias for ``benchmarks.run --smoke``: runs the quick-mode plan of
 every registry workload (including the multi-axis ``mess_load_sweep``,

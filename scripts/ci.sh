@@ -31,11 +31,21 @@
 # per-side timing_quality, and stay under the calibrated
 # backend-overhead ceiling (geomean pallas/jax <= 3.0 — see the
 # CEILING note in the gate).
+# PR-8 adds three concurrency gates: the smoke run executes through the
+# ThreadPoolBackend (--jobs 4) and its ledger must carry the executor
+# block + per-workload stage/measure phase split with zero failures;
+# a serial-vs-threadpool run of the same multi-group plan must produce
+# identical records (modulo the timing payload) with the threadpool
+# reaching its first measurement no later than serial (overlapped
+# staging actually overlaps); and the collective ladder re-runs under a
+# forced 8-device host mesh, where ring-accounting wire bytes must
+# agree with launch/hlo_analysis.analyze_collectives within 10% on
+# every (op, shard-size) point.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR7.json}"
+LEDGER="${1:-BENCH_PR8.json}"
 
 echo "== tier-1 pytest (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -122,8 +132,99 @@ print(f"fault isolation OK: {len(report.rows)} rows survived, "
       f"{len(report.demotions)} demotion steps")
 EOF2
 
-echo "== benchmarks.run --smoke =="
-python -m benchmarks.run --smoke --out "$LEDGER"
+echo "== backend equivalence + staging overlap gate =="
+python - <<'EOF2'
+import dataclasses, sys
+
+from repro.core import DriverConfig, TranslationCache, triad
+from repro.suite import (SerialBackend, SweepPlan, ThreadPoolBackend,
+                         VariantSpec, config_axis, env_axis, run_plan)
+
+# a 3-group plan (config axis) so overlapped staging has work to overlap
+plan = SweepPlan.product(config_axis("programs", (1, 2, 4)),
+                         env_axis((4096, 16384)))
+variants = [VariantSpec("t", DriverConfig(template="independent", ntimes=8,
+                                          reps=2, validate_n=64))]
+
+TIMING_FIELDS = {"seconds", "gbs", "gflops"}
+TIMING_EXTRA = {"timing_quality", "compile_seconds", "lower_seconds",
+                "cache_hit"}
+
+
+def norm(report):
+    out = []
+    for row in report.rows:
+        rec = row.record
+        fields = tuple((f.name, getattr(rec, f.name))
+                       for f in dataclasses.fields(rec)
+                       if f.name not in TIMING_FIELDS and f.name != "extra")
+        extra = tuple(sorted(((k, v) for k, v in rec.extra.items()
+                              if k not in TIMING_EXTRA), key=str))
+        out.append((row.variant, row.point.label, fields, extra))
+    return out
+
+
+ser = run_plan(lambda env: triad(), variants, plan,
+               cache=TranslationCache(), backend=SerialBackend())
+tp = run_plan(lambda env: triad(), variants, plan,
+              cache=TranslationCache(), backend=ThreadPoolBackend(4))
+if not (ser.ok and tp.ok):
+    sys.exit(f"FAIL: backend gate plans must run clean: "
+             f"serial={ser.summary()['failures']} "
+             f"threadpool={tp.summary()['failures']}")
+if norm(ser) != norm(tp):
+    sers, tps = norm(ser), norm(tp)
+    diff = [(a, b) for a, b in zip(sers, tps) if a != b]
+    sys.exit(f"FAIL: threadpool records differ from serial: {diff[:3]}")
+se, te = ser.executor, tp.executor
+print(f"serial:     stage_wall {se['stage_wall_seconds']:.3f}s, "
+      f"first measure at {se['first_measure_seconds']:.3f}s, "
+      f"overlap {se['staging_overlap_seconds']:.3f}s, "
+      f"wall {se['wall_seconds']:.3f}s")
+print(f"threadpool: stage_wall {te['stage_wall_seconds']:.3f}s, "
+      f"first measure at {te['first_measure_seconds']:.3f}s, "
+      f"overlap {te['staging_overlap_seconds']:.3f}s, "
+      f"wall {te['wall_seconds']:.3f}s")
+if se["staging_overlap_seconds"] != 0.0:
+    sys.exit("FAIL: serial backend reported nonzero staging overlap "
+             f"({se['staging_overlap_seconds']}) — the stage barrier broke")
+# Overlapped staging means the threadpool starts measuring before all
+# staging is done; serial by construction stages everything first. The
+# robust signal is time-to-first-measurement (1.1x + 50ms headroom for
+# scheduler noise on a loaded container), not total wall, which is
+# dominated by the measurement phase.
+if te["first_measure_seconds"] > se["first_measure_seconds"] * 1.1 + 0.05:
+    sys.exit(f"FAIL: threadpool first measurement at "
+             f"{te['first_measure_seconds']:.3f}s vs serial "
+             f"{se['first_measure_seconds']:.3f}s — staging no longer "
+             "overlaps measurement")
+print(f"backend equivalence OK: {len(tp.rows)} identical records")
+EOF2
+
+echo "== collective ladder gate (8-device host mesh) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF2'
+import sys
+
+from repro.suite import collective_sizes, measure_collectives
+
+rows = measure_collectives(quick=True)
+want = 2 * len(collective_sizes(quick=True))
+if len(rows) != want:
+    sys.exit(f"FAIL: expected {want} collective points, got {len(rows)}")
+for r in rows:
+    print(f"{r['op']}/k{r['devices']}/s{r['shard_elems']}: "
+          f"wire {int(r['wire_bytes'])}B, hlo {int(r['hlo_bytes'])}B, "
+          f"agreement {r['agreement']:.3f}, {r['gbs']:.3f} GB/s")
+    if r["devices"] != 8:
+        sys.exit(f"FAIL: ladder ran on {r['devices']} devices, wanted 8")
+    if abs(r["agreement"] - 1.0) > 0.10:
+        sys.exit(f"FAIL: {r['op']}/s{r['shard_elems']} ring-vs-hlo byte "
+                 f"agreement {r['agreement']:.3f} outside 10%")
+print("collective ladder OK: ring accounting matches analyze_collectives")
+EOF2
+
+echo "== benchmarks.run --smoke (--jobs 4, threadpool backend) =="
+python -m benchmarks.run --smoke --jobs 4 --out "$LEDGER"
 
 echo "== ledger gates ($LEDGER) =="
 python - "$LEDGER" <<'EOF2'
@@ -138,10 +239,30 @@ if failures:
     sys.exit(f"FAIL: smoke run must be failure-free, got {brief}")
 seconds = ledger["module_seconds"]
 missing = [s for s in ("mess_load_sweep", "pointer_chase",
-                       "spatter_nonuniform", "mess_calibrated")
+                       "spatter_nonuniform", "mess_calibrated",
+                       "device_sweep", "collective_ladder")
            if s not in seconds]
 if missing:
     sys.exit(f"FAIL: multi-axis scenarios did not run: {missing}")
+ex = ledger.get("executor", {})
+if ex.get("backend") != "threadpool" or ex.get("workers") != 4:
+    sys.exit("FAIL: smoke must run --jobs 4 through the threadpool "
+             f"backend, executor block says {ex}")
+for key in ("stage_seconds", "measure_seconds", "stage_wall_seconds",
+            "staging_overlap_seconds", "wall_seconds"):
+    if not isinstance(ex.get(key), (int, float)) or ex[key] < 0:
+        sys.exit(f"FAIL: executor block missing/negative {key!r}: {ex}")
+phases = ledger.get("module_phases", {})
+for scen in ("mess_load_sweep", "spatter_nonuniform", "device_sweep"):
+    p = phases.get(scen, {})
+    if not {"stage_seconds", "measure_seconds",
+            "staging_overlap_seconds"} <= set(p):
+        sys.exit(f"FAIL: {scen} has no stage/measure phase split: {p}")
+print(f"executor: {ex['backend']} x{ex['workers']}, "
+      f"stage {ex['stage_seconds']:.1f}s / measure "
+      f"{ex['measure_seconds']:.1f}s (summed), staging overlap "
+      f"{ex['staging_overlap_seconds']:.1f}s across "
+      f"{ex.get('workloads')} workloads")
 tc = ledger["translation_cache"]
 rate = tc["hit_rate"]
 print(f"translation-cache hit rate: {rate:.3f} "

@@ -36,11 +36,13 @@ exact per-env window-bounds check), and every record self-describes via
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from .codegen import serial_oracle
@@ -218,6 +220,14 @@ class DriverConfig:
     # allocation would exceed this budget. None = process default
     # (REPRO_CAPACITY_BUDGET env var, else 80% of MemAvailable).
     capacity_budget_bytes: int | None = None
+    # Device pinning (the plan engine's device axis): an index into
+    # jax.devices(), resolved modulo the device count so a plan written
+    # for an 8-device mesh still runs (collapsed) on a smaller box.
+    # Staged executables compile for — and arrays allocate on — the
+    # resolved device (the index is part of the translation-cache
+    # identity), which is what lets ThreadPoolBackend drive distinct
+    # device groups genuinely in parallel. None = process default.
+    device: int | None = None
 
 
 @dataclasses.dataclass
@@ -274,6 +284,29 @@ class Driver:
         self.cfg = config
         self.cache = cache if cache is not None else GLOBAL_CACHE
 
+    # -- device pinning ------------------------------------------------------
+
+    def _device(self):
+        """The resolved jax device for ``cfg.device`` (None = default).
+        Indices wrap modulo the device count so device-axis plans are
+        portable to boxes with fewer devices."""
+        if self.cfg.device is None:
+            return None
+        devs = jax.devices()
+        return devs[self.cfg.device % len(devs)]
+
+    def _dev_ctx(self):
+        """Thread-local default-device scope wrapping every stage of
+        this driver (lower, compile, allocate, execute). ``jax.default_
+        device`` is a thread-local context, so concurrent backend
+        workers pin their groups to distinct devices without fighting
+        over process-global state. ``precompile``'s worker threads do
+        NOT inherit the caller's context — compile thunks re-enter it
+        themselves."""
+        dev = self._device()
+        return jax.default_device(dev) if dev is not None \
+            else contextlib.nullcontext()
+
     # -- construction -------------------------------------------------------
 
     def _templated(
@@ -305,11 +338,12 @@ class Driver:
         cfg = self.cfg
         env = dict(env)
         pat, sch, grid_bands = self._templated(env)
-        return stage_lower(
-            pat, sch, env, cfg.backend,
-            grid_bands=grid_bands if cfg.backend == "pallas" else None,
-            cache=self.cache,
-        )
+        with self._dev_ctx():
+            return stage_lower(
+                pat, sch, env, cfg.backend,
+                grid_bands=grid_bands if cfg.backend == "pallas" else None,
+                device=cfg.device, cache=self.cache,
+            )
 
     def lower_parametric(self, cap_env: Mapping[str, int],
                          params: tuple[str, ...] = ("n",),
@@ -331,11 +365,13 @@ class Driver:
         ``param_path='strided'`` raises ``SymbolicLowerError`` there.)
         """
         pat, sch, _ = self._templated(cap_env)
-        return stage_lower_parametric(
-            pat, sch, cap_env, params, self.cfg.backend,
-            param_path=param_path or "gather", chunk=chunk,
-            assume_full=assume_full, cache=self.cache
-        )
+        with self._dev_ctx():
+            return stage_lower_parametric(
+                pat, sch, cap_env, params, self.cfg.backend,
+                param_path=param_path or "gather", chunk=chunk,
+                assume_full=assume_full, device=self.cfg.device,
+                cache=self.cache
+            )
 
     def _resolve_param_path(
         self, envs: Sequence[Mapping[str, int]],
@@ -499,12 +535,14 @@ class Driver:
         """
         cfg = self.cfg
         lowered = self.lower(env)
-        compiled = lowered.compile(
-            ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
-            cache=self.cache,
-        )
-        pat = lowered.pattern
-        arrays0 = {k: jnp.asarray(v) for k, v in pat.allocate(lowered.env).items()}
+        with self._dev_ctx():
+            compiled = lowered.compile(
+                ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
+                cache=self.cache,
+            )
+            pat = lowered.pattern
+            arrays0 = {k: jnp.asarray(v)
+                       for k, v in pat.allocate(lowered.env).items()}
         names = compiled.names
         return (pat, lowered.schedule, lowered.env, compiled,
                 tuple(arrays0[k] for k in names), names)
@@ -575,11 +613,12 @@ class Driver:
                             context=self._failure_context(cap_env),
                             cause=e) from e
                     try:
-                        c = lw.compile(
-                            ntimes=cfg.ntimes,
-                            sync_every_rep=cfg.sync_every_rep,
-                            cache=self.cache,
-                        )
+                        with self._dev_ctx():
+                            c = lw.compile(
+                                ntimes=cfg.ntimes,
+                                sync_every_rep=cfg.sync_every_rep,
+                                cache=self.cache,
+                            )
                     except BenchFailure:
                         raise
                     except Exception as e:
@@ -619,10 +658,15 @@ class Driver:
         def _compile_thunk(lw, env):
             def thunk():
                 try:
-                    return lw.compile(
-                        ntimes=cfg.ntimes, sync_every_rep=cfg.sync_every_rep,
-                        donate=donate, cache=self.cache,
-                    )
+                    # re-enter the device scope: precompile runs thunks
+                    # in worker threads, which do not inherit the
+                    # caller's thread-local default device
+                    with self._dev_ctx():
+                        return lw.compile(
+                            ntimes=cfg.ntimes,
+                            sync_every_rep=cfg.sync_every_rep,
+                            donate=donate, cache=self.cache,
+                        )
                 except BenchFailure:
                     raise
                 except Exception as e:
@@ -657,9 +701,10 @@ class Driver:
         pat, sch, env2 = lowered.pattern, lowered.schedule, lowered.env
         arrays = pat.allocate(env2)
         want = serial_oracle(pat, lowered.nest, arrays, env2, ntimes=2)
-        got = {k: jnp.asarray(v) for k, v in arrays.items()}
-        for _ in range(2):
-            got = lowered.step(got)
+        with self._dev_ctx():
+            got = {k: jnp.asarray(v) for k, v in arrays.items()}
+            for _ in range(2):
+                got = lowered.step(got)
         for k in want:
             np.testing.assert_allclose(
                 np.asarray(got[k]), want[k], rtol=1e-5, atol=1e-5,
@@ -683,17 +728,20 @@ class Driver:
         # [0, n) region, and all *accounting* below uses the actual
         # per-point env so records match the specialized path.
         self._preflight(pat, p.lowered.env)
-        arrays0 = {
-            k: jnp.asarray(v) for k, v in pat.allocate(p.lowered.env).items()
-        }
-        tup = tuple(arrays0[k] for k in p.compiled.names)
+        dev = self._device()
         try:
-            timing = time_fn(
-                p.executable(), tup, reps=cfg.reps, warmup=1,
-                compile_seconds=p.compiled.compile_seconds,
-                target_cv=cfg.target_cv, max_reps=cfg.max_reps,
-                budget_s=cfg.time_budget_s,
-            )
+            with self._dev_ctx():
+                arrays0 = {
+                    k: jnp.asarray(v)
+                    for k, v in pat.allocate(p.lowered.env).items()
+                }
+                tup = tuple(arrays0[k] for k in p.compiled.names)
+                timing = time_fn(
+                    p.executable(), tup, reps=cfg.reps, warmup=1,
+                    compile_seconds=p.compiled.compile_seconds,
+                    target_cv=cfg.target_cv, max_reps=cfg.max_reps,
+                    budget_s=cfg.time_budget_s,
+                )
         except BudgetExceeded as e:
             for k, v in self._failure_context(env).items():
                 e.context.setdefault(k, v)
@@ -731,6 +779,10 @@ class Driver:
                                else "specialized"),
                 "donated": bool(getattr(p.compiled, "donated", True)),
                 "timing_quality": timing.quality(),
+                **({"device": {"axis": int(cfg.device),
+                               "id": int(dev.id),
+                               "platform": str(dev.platform)}}
+                   if dev is not None else {}),
                 **({"pallas_mode": p.lowered.pallas_mode}
                    if cfg.backend == "pallas" else {}),
                 **({"capacity": int(p.lowered.cap_env["n"]),
@@ -789,9 +841,10 @@ class Driver:
         cap_arrays = pat.allocate(cap_env)
         for env in envs:
             pvals = tuple(np.int32(env[p]) for p in lw.params)
-            got = {k: jnp.asarray(v) for k, v in cap_arrays.items()}
-            for _ in range(2):
-                got = lw.step(got, pvals)
+            with self._dev_ctx():
+                got = {k: jnp.asarray(v) for k, v in cap_arrays.items()}
+                for _ in range(2):
+                    got = lw.step(got, pvals)
             spec = self.lower(env)
             want = serial_oracle(
                 spec.pattern, spec.nest, spec.pattern.allocate(env), env,

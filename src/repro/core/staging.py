@@ -173,6 +173,10 @@ _DISK_EVENTS = {
     "/jax/compilation_cache/cache_misses": "misses",
 }
 _disk_counters = {"hits": 0, "misses": 0}
+# jax fires monitoring events from whichever thread ran the compile —
+# under the engine's ThreadPoolBackend that is many threads at once, and
+# an unlocked `+=` on the shared dict would drop counts
+_disk_lock = threading.Lock()
 _disk_listener_installed = False
 
 
@@ -185,7 +189,8 @@ def _install_disk_listener() -> None:
         def _on_event(event, **kwargs):
             key = _DISK_EVENTS.get(event)
             if key is not None:
-                _disk_counters[key] += 1
+                with _disk_lock:
+                    _disk_counters[key] += 1
 
         jax.monitoring.register_event_listener(_on_event)
     except (AttributeError, TypeError):  # pragma: no cover - monitoring
@@ -206,11 +211,12 @@ def disk_cache_stats() -> dict:
         # jax API drift; narrow so real faults are not misreported as
         # "disk cache disabled"
         enabled = False
-    return {
-        "enabled": enabled,
-        "hits": _disk_counters["hits"],
-        "misses": _disk_counters["misses"],
-    }
+    with _disk_lock:
+        return {
+            "enabled": enabled,
+            "hits": _disk_counters["hits"],
+            "misses": _disk_counters["misses"],
+        }
 
 
 _install_disk_listener()
@@ -739,10 +745,16 @@ GLOBAL_CACHE = TranslationCache(capacity=_global_capacity())
 def stage_lower(
     pattern: PatternSpec, schedule: Schedule, env: Mapping[str, int],
     backend: str = "jax", *, grid_bands: tuple[str, ...] | None = None,
-    force_gather: bool = False,
+    force_gather: bool = False, device: int | None = None,
     cache: TranslationCache | None = None,
 ) -> Lowered:
-    """Resolve access plans and build the backend step, through the cache."""
+    """Resolve access plans and build the backend step, through the cache.
+
+    ``device`` is the caller's device-axis pin (an index into
+    ``jax.devices()``); it is part of the cache key because an AOT
+    executable is bound to the device it compiled on — an artifact built
+    for device 0 must never be replayed as device 3's.
+    """
     from . import codegen  # deferred: codegen imports nothing from here
 
     env = dict(env)
@@ -755,7 +767,7 @@ def stage_lower(
             "lower", fingerprint_pattern(pattern),
             fingerprint_schedule(schedule), backend, pallas_mode or None,
             tuple(grid_bands) if grid_bands else None,
-            bool(force_gather), _env_key(env),
+            bool(force_gather), device, _env_key(env),
         )
     except (TypeError, ValueError, AttributeError):
         key = None  # unhashable pattern piece: bypass the cache
@@ -793,7 +805,7 @@ def stage_lower_parametric(
     pattern: PatternSpec, schedule: Schedule, cap_env: Mapping[str, int],
     params: tuple[str, ...] = ("n",), backend: str = "jax", *,
     param_path: str = "auto", chunk: "int | tuple | None" = None,
-    assume_full: bool = False,
+    assume_full: bool = False, device: int | None = None,
     cache: TranslationCache | None = None,
 ) -> ParamLowered:
     """Shape-polymorphic stage 1: keep ``params`` symbolic, through the
@@ -837,7 +849,7 @@ def stage_lower_parametric(
         key = (
             "plower", fingerprint_pattern(pattern),
             fingerprint_schedule(schedule), backend, pallas_mode or None,
-            params, str(param_path), chunk, bool(assume_full),
+            params, str(param_path), chunk, bool(assume_full), device,
             _env_key(cap_env),
         )
     except (TypeError, ValueError, AttributeError):

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_sweep_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,3 +24,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh over the real local device (smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_sweep_mesh(num_devices: int | None = None):
+    """1-D mesh over the visible devices, axis ``"device"`` — the shape
+    the sweep engine's device axis and the collective-bandwidth ladder
+    shard across. On CPU CI the device count comes from
+    ``--xla_force_host_platform_device_count`` (the ``launch/dryrun.py``
+    / ``tests/test_system.py`` pattern); ``num_devices`` restricts to a
+    leading subset (it must not exceed what is visible)."""
+    avail = len(jax.devices())
+    k = avail if num_devices is None else int(num_devices)
+    if not 1 <= k <= avail:
+        raise ValueError(
+            f"make_sweep_mesh: asked for {k} devices, {avail} visible")
+    return jax.make_mesh((k,), ("device",), devices=jax.devices()[:k])

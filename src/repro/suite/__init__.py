@@ -9,11 +9,12 @@ pattern x schedule variants x working-set ladder x validation policy —
 registered by name, and one generic runner executes every entry, so a
 new scenario is ~10 lines of data instead of a hand-rolled script.
 
-    Axis/SweepPlan   multi-axis sweep dimensions (env / config / pattern)
+    Axis/SweepPlan   multi-axis sweep dimensions (env/config/pattern/device)
     Ladder           named working-set ladders — one-env-axis plans
     Workload         one experiment: variants + plan (or ladder) + policies
     register/...     the process-wide registry
-    run_plan         the plan engine (stage -> validate -> measure)
+    run_plan         the plan engine (stage -> validate -> measure), with
+                     pluggable execution backends (Serial / ThreadPool)
     run_workload     the workload-level executor emitting the CSV contract
 """
 from .axes import (
@@ -21,6 +22,7 @@ from .axes import (
     PlanPoint,
     SweepPlan,
     config_axis,
+    device_axis,
     env_axis,
     pattern_axis,
 )
@@ -45,7 +47,20 @@ from .registry import (
     workload,
     workloads,
 )
-from .engine import PlanRow, RunReport, run_plan
+from .collectives import (
+    collective_runner,
+    collective_sizes,
+    expected_wire_bytes,
+    measure_collectives,
+)
+from .engine import (
+    ExecutionBackend,
+    PlanRow,
+    RunReport,
+    SerialBackend,
+    ThreadPoolBackend,
+    run_plan,
+)
 from .journal import RunJournal, stable_fingerprint
 from .runner import (
     collect_records,
@@ -58,7 +73,7 @@ from .runner import (
 
 __all__ = [
     "Axis", "PlanPoint", "SweepPlan",
-    "env_axis", "config_axis", "pattern_axis",
+    "env_axis", "config_axis", "pattern_axis", "device_axis",
     "Ladder", "fixed",
     "WORKING_SETS", "INTERIOR_SETS", "GRID2", "GRID3",
     "QUICK_SETS", "FULL_SETS", "QUICK_GRID", "FULL_GRID",
@@ -66,7 +81,10 @@ __all__ = [
     "register", "workload", "workloads", "names", "all_tags",
     "load_builtins",
     "PlanRow", "RunReport", "run_plan",
+    "ExecutionBackend", "SerialBackend", "ThreadPoolBackend",
     "RunJournal", "stable_fingerprint",
     "run_workload", "run_module", "collect_records", "collect_report",
     "csv_line", "emit",
+    "collective_runner", "collective_sizes", "expected_wire_bytes",
+    "measure_collectives",
 ]

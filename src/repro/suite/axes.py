@@ -21,6 +21,13 @@ where each point lands when a plan point is materialized:
               specialized executable.
     pattern   a keyword argument of the workload's pattern factory
               (``stride`` for the Spatter ladders). Also specializes.
+    device    a device shard: each point pins its driver group to
+              ``jax.devices()[index % len(jax.devices())]`` (the value
+              lands in ``DriverConfig.device``, so device groups are
+              distinct executables bound to distinct devices and the
+              concurrent execution backends run them genuinely in
+              parallel across a host/accelerator mesh). Labels default
+              to ``dev<index>``.
 
 A :class:`SweepPlan` combines axes by ``product`` (the full grid) or
 ``zip`` (lockstep tuples) and expands, per mode, into labelled
@@ -41,6 +48,7 @@ __all__ = [
     "env_axis",
     "config_axis",
     "pattern_axis",
+    "device_axis",
 ]
 
 
@@ -59,7 +67,7 @@ class Axis:
     """
 
     name: str
-    kind: str                       # env | config | pattern
+    kind: str                       # env | config | pattern | device
     quick: tuple
     full: tuple = ()
     field: str = ""
@@ -67,7 +75,7 @@ class Axis:
     fmt: Callable[[Any], str] | None = None
 
     def __post_init__(self) -> None:
-        if self.kind not in ("env", "config", "pattern"):
+        if self.kind not in ("env", "config", "pattern", "device"):
             raise ValueError(f"axis {self.name!r}: unknown kind {self.kind!r}")
         if not self.quick:
             raise ValueError(f"axis {self.name!r} has no points")
@@ -108,6 +116,19 @@ def pattern_axis(name: str, quick, full=(), *, field: str = "",
     """A pattern-factory keyword axis (``stride`` for Spatter ladders)."""
     return Axis(name, "pattern", tuple(quick), tuple(full), field,
                 None, fmt)
+
+
+def _dev_fmt(p) -> str:
+    return f"dev{p}"
+
+
+def device_axis(quick, full=(), *, name: str = "device",
+                fmt: Callable | None = None) -> Axis:
+    """A device-shard axis: points are device indices resolved modulo
+    ``len(jax.devices())`` at execution time, so a plan written for an
+    8-device mesh still runs (collapsed) on a 1-device box."""
+    return Axis(name, "device", tuple(quick), tuple(full), "device",
+                None, fmt or _dev_fmt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,7 +206,8 @@ class SweepPlan:
             for a, p in zip(self.axes, tup):
                 coords.append((a.name, p))
                 frags.append(a.label(p))
-                dest = {"env": env, "config": config, "pattern": pat}[a.kind]
+                dest = {"env": env, "config": config, "pattern": pat,
+                        "device": config}[a.kind]
                 dest.append((a.target, a.value(p)))
             out.append(PlanPoint(
                 coords=tuple(coords), env=tuple(env), config=tuple(config),

@@ -40,7 +40,8 @@ from repro.core import (
 )
 from repro.core.measure import NATIVE_TILE_BYTES
 
-from .axes import SweepPlan, config_axis, env_axis, pattern_axis
+from .axes import SweepPlan, config_axis, device_axis, env_axis, pattern_axis
+from .collectives import collective_runner
 from .ladders import GRID2, GRID3, INTERIOR_SETS, WORKING_SETS, fixed
 from .registry import register
 from .workload import VariantSpec, Workload
@@ -463,4 +464,46 @@ register(Workload(
         pattern_axis("stride", (1, 4, 16, 64), (1, 2, 4, 8, 16, 32, 64, 128)),
         env_axis((1 << 10, 1 << 14), (1 << 10, 1 << 12, 1 << 14, 1 << 16)),
     ),
+))
+
+
+# -- device_sweep: per-device bandwidth via the device axis ------------------
+# The sweep engine's device axis in declarative form: each device point
+# pins its whole working-set ladder to one mesh device (DriverConfig.
+# device — indices wrap modulo the visible device count, so the plan
+# also runs, collapsed, on a 1-device box), and ThreadPoolBackend runs
+# the per-device groups genuinely concurrently. Per-device records
+# carry extra["device"] = {axis, id, platform}.
+
+register(Workload(
+    name="device_sweep",
+    figure="devsweep",
+    title="per-device triad bandwidth across the sweep mesh (device axis)",
+    tags=("sharded",),
+    pattern=lambda env: triad(),
+    variants=(
+        VariantSpec("triad", DriverConfig(
+            template="independent", programs=2, ntimes=8, reps=2)),
+    ),
+    plan=SweepPlan.product(
+        device_axis((0, 1), (0, 1, 2, 3)),
+        env_axis((1 << 12, 1 << 14), (1 << 12, 1 << 14, 1 << 16)),
+    ),
+))
+
+
+# -- collective_ladder: interconnect bandwidth, HLO-validated ----------------
+# The device-sharded workload family proper: an all-gather / all-reduce
+# size ladder shard_map'ed over the 1-D sweep mesh, each point's
+# bytes-on-the-wire validated against launch/hlo_analysis ring
+# accounting (the dormant mesh.py / hlo_analysis.py substrate put to
+# work). Custom runner: the driver templates model per-device memory
+# traffic, not cross-device collectives.
+
+register(Workload(
+    name="collective_ladder",
+    figure="collective",
+    title="all-gather / all-reduce wire-bandwidth ladder over the sweep mesh",
+    tags=("collectives", "sharded"),
+    runner=collective_runner,
 ))

@@ -40,11 +40,30 @@ Resumability: ``run_plan(journal=path)`` appends each completed point
 to a :class:`~repro.suite.journal.RunJournal`; re-invocation replays
 completed keys (byte-identical records, zero compiles) and executes
 only the remainder.
+
+Execution backends (``run_plan(backend=...)``): *how* the live groups
+stage and measure is pluggable. :class:`SerialBackend` (the default)
+reproduces the legacy order exactly — one process-wide staging barrier,
+then groups measured one at a time in plan order. :class:`ThreadPool
+Backend` removes the barrier: each worker stages its group and
+immediately measures it, so group N+1's lower/compile overlaps group
+N's timing loop (XLA compiles release the GIL). The determinism
+contract both backends honour: the merged record set is byte-identical
+modulo timing (rows re-emitted in plan order, per-group fault isolation
+and the demotion ladder unchanged, journal appends serialized). To keep
+the timings themselves trustworthy, ThreadPoolBackend serializes the
+*measurement* phase per resolved device — groups pinned to distinct
+devices (the plan's device axis) time genuinely in parallel, while
+groups sharing a device never time against each other's noise; the
+concurrency win comes from overlapping staging with measurement, not
+from timing concurrently on shared hardware.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
 from repro.core import (
@@ -68,7 +87,14 @@ from .axes import PlanPoint, SweepPlan
 from .journal import RunJournal
 from .workload import VariantSpec
 
-__all__ = ["PlanRow", "RunReport", "run_plan"]
+__all__ = [
+    "PlanRow",
+    "RunReport",
+    "run_plan",
+    "ExecutionBackend",
+    "SerialBackend",
+    "ThreadPoolBackend",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +120,14 @@ class RunReport:
     failures: list[FailureRecord] = dataclasses.field(default_factory=list)
     demotions: list[Demotion] = dataclasses.field(default_factory=list)
     replayed: int = 0
+    # Execution-phase accounting from the backend that ran the sweep:
+    # {backend, workers, groups, stage_seconds, measure_seconds,
+    #  stage_wall_seconds, first_measure_seconds,
+    #  staging_overlap_seconds, wall_seconds}. staging_overlap_seconds
+    # is the staging time spent while some group was measuring — 0.0 by
+    # construction under SerialBackend (barrier first), positive when
+    # ThreadPoolBackend actually pipelined.
+    executor: dict = dataclasses.field(default_factory=dict)
 
     def __iter__(self):
         return iter(self.rows)
@@ -114,6 +148,7 @@ class RunReport:
             "replayed": self.replayed,
             "failures": [f.as_dict() for f in self.failures],
             "demotions": [dataclasses.asdict(d) for d in self.demotions],
+            "executor": dict(self.executor),
         }
 
     def raise_if_failed(self) -> None:
@@ -394,6 +429,203 @@ def _failure_record(g: _Group, i: int, exc: BenchFailure, attempts: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# Execution backends
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _GroupRun:
+    """One live group's unit of work: a staging step plus a measured
+    run, with the outcome captured on the unit itself so backends can
+    execute in any order and ``run_plan`` merges deterministically."""
+
+    variant: VariantSpec
+    group: _Group
+    validate: bool
+    max_check_n: int
+    policy: ResiliencePolicy
+    strict: bool
+    jr: "RunJournal | None"
+    keys: "list | None"
+    rows: list = dataclasses.field(default_factory=list)   # (plan idx, PlanRow)
+    failures: list = dataclasses.field(default_factory=list)
+    demotions: list = dataclasses.field(default_factory=list)
+    error: "BaseException | None" = None
+    measure_interval: "tuple | None" = None
+
+    @property
+    def device_key(self):
+        """Measurement-serialization key: groups sharing a resolved
+        device must not time against each other; distinct devices may."""
+        return self.group.driver.cfg.device
+
+    def stage(self) -> None:
+        """Lower + compile this group's executables (cache-deduplicated
+        against every other group). In the fault-isolated mode a staging
+        error is swallowed here and re-surfaces (classified) inside
+        ``run``'s own attempt, so one bad group cannot abort staging."""
+        try:
+            self.group.driver.prepare(self.group.envs, parallel=False)
+        except Exception:
+            if self.strict:
+                raise
+
+    def run(self) -> None:
+        """Measure the group (everything below is today's per-group loop
+        body, unchanged — demotion ladder, journal appends and all)."""
+        v, g = self.variant, self.group
+        if self.strict:
+            recs = _attempt_strict(g.driver, g.envs, self.validate,
+                                   self.max_check_n)
+            for i, pt, rec in zip(g.order, g.points, recs):
+                rec.extra["axis_point"] = pt.axis_point()
+                self.rows.append((i, PlanRow(v.label, pt, rec)))
+        else:
+            results, failures, demotions, attempts, steps = \
+                _run_group_isolated(g, self.validate, self.max_check_n,
+                                    self.policy)
+            self.demotions.extend(demotions)
+            for li, rec in sorted(results.items()):
+                pt = g.points[li]
+                rec.extra["axis_point"] = pt.axis_point()
+                self.rows.append((g.order[li], PlanRow(v.label, pt, rec)))
+            for li, exc in sorted(failures.items()):
+                fr = _failure_record(g, li, exc, attempts[li], steps)
+                self.failures.append(fr)
+                if self.jr is not None:
+                    self.jr.append_failure(self.keys[li], v.label,
+                                           g.points[li], fr)
+        if self.jr is not None:
+            for order_i, row in self.rows:
+                li = g.order.index(order_i)
+                self.jr.append_row(self.keys[li], v.label, row.point,
+                                   row.record)
+
+
+class ExecutionBackend:
+    """How live driver groups stage and measure.
+
+    ``execute(units, strict)`` must (1) call every unit's ``stage`` and
+    then ``run`` exactly once, (2) record each unit's measurement span
+    on ``unit.measure_interval``, (3) return the list of staging
+    ``(start, end)`` spans it spent, and (4) surface unit errors: under
+    ``strict`` the first error in unit (= plan) order propagates after
+    all workers settle; outside strict any escaped exception is a plan
+    bug and propagates too. Result *merging* is not the backend's job —
+    outcomes accumulate on the units and ``run_plan`` re-emits them in
+    plan order, which is what keeps the record set byte-identical
+    across backends."""
+
+    name = "?"
+    workers = 1
+
+    def execute(self, units: "list[_GroupRun]",
+                strict: bool) -> "list[tuple[float, float]]":
+        raise NotImplementedError
+
+
+class SerialBackend(ExecutionBackend):
+    """The legacy order, exactly: stage every group's executables behind
+    one ``precompile`` barrier (compiles overlap on worker threads, as
+    before), then measure the groups one at a time in plan order."""
+
+    name = "serial"
+    workers = 1
+
+    def execute(self, units, strict):
+        if not units:
+            return []
+        t0 = time.perf_counter()
+        precompile([u.stage for u in units])
+        stage_intervals = [(t0, time.perf_counter())]
+        for u in units:
+            m0 = time.perf_counter()
+            u.run()
+            u.measure_interval = (m0, time.perf_counter())
+        return stage_intervals
+
+
+class ThreadPoolBackend(ExecutionBackend):
+    """Overlapped staging: no global barrier. Each worker stages its
+    group then immediately measures it, so group N+1's lower/compile
+    (GIL-released XLA) runs while group N times. Measurement itself is
+    serialized per resolved device — a per-device lock — so timings are
+    never taken concurrently on shared hardware; device-axis groups
+    pinned to distinct devices do measure in parallel."""
+
+    name = "threadpool"
+
+    def __init__(self, workers: int = 4):
+        if workers < 1:
+            raise ValueError(f"ThreadPoolBackend needs >=1 worker, got "
+                             f"{workers}")
+        self.workers = int(workers)
+        self._locks: dict = {}
+        self._locks_guard = threading.Lock()
+
+    def _measure_lock(self, key) -> threading.Lock:
+        with self._locks_guard:
+            return self._locks.setdefault(key, threading.Lock())
+
+    def execute(self, units, strict):
+        stage_intervals: list[tuple[float, float]] = []
+        si_guard = threading.Lock()
+
+        def work(u: _GroupRun) -> None:
+            s0 = time.perf_counter()
+            try:
+                u.stage()          # swallows faults unless strict
+            except Exception as e:
+                u.error = e
+                with si_guard:
+                    stage_intervals.append((s0, time.perf_counter()))
+                return
+            with si_guard:
+                stage_intervals.append((s0, time.perf_counter()))
+            with self._measure_lock(u.device_key):
+                m0 = time.perf_counter()
+                try:
+                    u.run()
+                except Exception as e:
+                    u.error = e
+                finally:
+                    u.measure_interval = (m0, time.perf_counter())
+
+        if units:
+            with ThreadPoolExecutor(max_workers=self.workers,
+                                    thread_name_prefix="plan-exec") as pool:
+                list(pool.map(work, units))
+        # deterministic error surfacing: first failed unit in plan order
+        # (under strict these are the legacy exception classes; outside
+        # strict an escaped exception is a plan bug, not a fault)
+        for u in units:
+            if u.error is not None:
+                raise u.error
+        return stage_intervals
+
+
+def _overlap_seconds(stage_intervals, measure_intervals) -> float:
+    """Total staging time that ran while some measurement was running —
+    the pipelining the ThreadPoolBackend exists to create."""
+    measure_intervals = [m for m in measure_intervals if m is not None]
+    if not stage_intervals or not measure_intervals:
+        return 0.0
+    merged: list[list[float]] = []
+    for a, b in sorted(measure_intervals):
+        if merged and a <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], b)
+        else:
+            merged.append([a, b])
+    total = 0.0
+    for s0, s1 in stage_intervals:
+        for m0, m1 in merged:
+            lo, hi = max(s0, m0), min(s1, m1)
+            if hi > lo:
+                total += hi - lo
+    return total
+
+
 def run_plan(
     factory: Callable | None,
     variants: Sequence[VariantSpec],
@@ -408,6 +640,7 @@ def run_plan(
     on_error: str = "demote",
     resilience: ResiliencePolicy | None = None,
     journal: "RunJournal | str | None" = None,
+    backend: "ExecutionBackend | None" = None,
 ) -> RunReport:
     """Execute ``plan`` under every variant; returns a :class:`RunReport`
     whose rows iterate in variant-major, plan-point order.
@@ -429,12 +662,19 @@ def run_plan(
     exception class (strict legacy behavior). ``journal`` (a path or
     :class:`~repro.suite.journal.RunJournal`) makes the run resumable:
     completed points replay, only the remainder executes.
+
+    ``backend`` picks the execution backend (default
+    :class:`SerialBackend`). :class:`ThreadPoolBackend` stages and
+    measures groups concurrently with staging overlapped into
+    measurement; the merged record set is byte-identical modulo timing
+    either way, and ``report.executor`` carries the phase accounting.
     """
     if on_error not in ("demote", "raise"):
         raise ValueError(
             f"unknown on_error {on_error!r} (expected 'demote' or 'raise')")
     cache = cache if cache is not None else GLOBAL_CACHE
     policy = resilience if resilience is not None else ResiliencePolicy()
+    exec_backend = backend if backend is not None else SerialBackend()
     strict = on_error == "raise"
     jr = None
     if journal is not None:
@@ -477,23 +717,25 @@ def run_plan(
                 g.points, g.order = live_points, live_order
                 keyed[id(g)] = live_keys
 
-    live = [g for _, gs in per_variant for g in gs if g.points]
+    # one work unit per live group, in variant-major plan order — the
+    # order SerialBackend executes in and every backend's error /
+    # merge order
+    units: list[_GroupRun] = []
+    unit_by_group: dict[int, _GroupRun] = {}
+    for v, gs in per_variant:
+        for g in gs:
+            if not g.points:
+                continue
+            u = _GroupRun(
+                variant=v, group=g, validate=validate,
+                max_check_n=max_check_n, policy=policy, strict=strict,
+                jr=jr, keys=keyed.get(id(g)),
+            )
+            units.append(u)
+            unit_by_group[id(g)] = u
 
-    # stage every live group's executables before any timing starts; in
-    # the fault-isolated mode a staging error is swallowed here and
-    # re-surfaces (classified) inside the group's own attempt, so one
-    # bad group cannot abort the barrier
-    def _stage(g: _Group):
-        def thunk():
-            try:
-                return g.driver.prepare(g.envs, parallel=False)
-            except Exception:
-                if strict:
-                    raise
-                return None
-        return thunk
-
-    precompile([_stage(g) for g in live])
+    t_run0 = time.perf_counter()
+    stage_intervals = exec_backend.execute(units, strict)
 
     for v, gs in per_variant:
         indexed: list[tuple[int, PlanRow]] = []
@@ -501,37 +743,33 @@ def run_plan(
             for g in gs:
                 indexed.extend(replayed.get(id(g), []))
         for g in gs:
-            if not g.points:
+            u = unit_by_group.get(id(g))
+            if u is None:
                 continue
-            if strict:
-                recs = _attempt_strict(g.driver, g.envs, validate,
-                                       max_check_n)
-                rows_here = []
-                for i, pt, rec in zip(g.order, g.points, recs):
-                    rec.extra["axis_point"] = pt.axis_point()
-                    rows_here.append((i, PlanRow(v.label, pt, rec)))
-            else:
-                results, failures, demotions, attempts, steps = \
-                    _run_group_isolated(g, validate, max_check_n, policy)
-                report.demotions.extend(demotions)
-                rows_here = []
-                for li, rec in sorted(results.items()):
-                    pt = g.points[li]
-                    rec.extra["axis_point"] = pt.axis_point()
-                    rows_here.append((g.order[li], PlanRow(v.label, pt, rec)))
-                for li, exc in sorted(failures.items()):
-                    fr = _failure_record(g, li, exc, attempts[li], steps)
-                    report.failures.append(fr)
-                    if jr is not None:
-                        jr.append_failure(keyed[id(g)][li], v.label,
-                                          g.points[li], fr)
-            if jr is not None:
-                for order_i, row in rows_here:
-                    li = g.order.index(order_i)
-                    jr.append_row(keyed[id(g)][li], v.label, row.point,
-                                  row.record)
-            indexed.extend(rows_here)
+            report.demotions.extend(u.demotions)
+            report.failures.extend(u.failures)
+            indexed.extend(u.rows)
         # emit in plan order regardless of how grouping reordered work
         report.rows.extend(
             row for _, row in sorted(indexed, key=lambda t: t[0]))
+
+    measure_intervals = [u.measure_interval for u in units
+                         if u.measure_interval is not None]
+    report.executor = {
+        "backend": exec_backend.name,
+        "workers": int(exec_backend.workers),
+        "groups": len(units),
+        "stage_seconds": sum(b - a for a, b in stage_intervals),
+        "measure_seconds": sum(b - a for a, b in measure_intervals),
+        "stage_wall_seconds": (
+            max(b for _, b in stage_intervals)
+            - min(a for a, _ in stage_intervals)
+        ) if stage_intervals else 0.0,
+        "first_measure_seconds": (
+            min(a for a, _ in measure_intervals) - t_run0
+        ) if measure_intervals else 0.0,
+        "staging_overlap_seconds": _overlap_seconds(stage_intervals,
+                                                    measure_intervals),
+        "wall_seconds": time.perf_counter() - t_run0,
+    }
     return report

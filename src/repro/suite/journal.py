@@ -31,6 +31,7 @@ import hashlib
 import json
 import os
 import pathlib
+import threading
 import types
 
 import numpy as np
@@ -120,6 +121,13 @@ class RunJournal:
 
     def __init__(self, path: "str | os.PathLike"):
         self.path = pathlib.Path(path)
+        # Writer lock: the plan engine's ThreadPoolBackend appends from
+        # several group workers at once. One serialized write per entry
+        # keeps every JSONL line whole (append-mode writes from separate
+        # fds may interleave mid-line once json.dumps output crosses the
+        # pipe-buffer atomicity limit) and keeps the in-memory entry map
+        # consistent with the file.
+        self._write_lock = threading.Lock()
         self._entries: dict[str, dict] = {}
         if self.path.exists():
             for line in self.path.read_text().splitlines():
@@ -168,11 +176,13 @@ class RunJournal:
     # -- appends ------------------------------------------------------------
 
     def _append(self, entry: dict) -> None:
-        self._entries[entry["key"]] = entry
-        with open(self.path, "a") as f:
-            f.write(json.dumps(entry, default=str) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+        line = json.dumps(entry, default=str) + "\n"
+        with self._write_lock:
+            self._entries[entry["key"]] = entry
+            with open(self.path, "a") as f:
+                f.write(line)
+                f.flush()
+                os.fsync(f.fileno())
 
     def append_row(self, key: str, variant: str, point, record) -> None:
         self._append({

@@ -13,7 +13,7 @@ from __future__ import annotations
 from repro.core import GLOBAL_CACHE, Record, TranslationCache
 from repro.core.errors import ResiliencePolicy
 
-from .engine import RunReport, run_plan
+from .engine import ExecutionBackend, RunReport, run_plan
 from .journal import RunJournal
 from .registry import load_builtins, workload as _lookup
 from .workload import Workload
@@ -42,10 +42,12 @@ def collect_report(
     on_error: str = "demote",
     resilience: ResiliencePolicy | None = None,
     journal: "RunJournal | str | None" = None,
+    backend: "ExecutionBackend | None" = None,
 ) -> RunReport:
     """Measure a declarative workload through the fault-isolated plan
     engine; returns the full :class:`~repro.suite.engine.RunReport`
-    (rows + failures + demotions + journal replays)."""
+    (rows + failures + demotions + journal replays + executor stats).
+    ``backend`` picks the execution backend (None = serial)."""
     if w.runner is not None:
         raise ValueError(f"workload {w.name!r} is custom; run it via run_workload")
     cache = cache if cache is not None else GLOBAL_CACHE
@@ -54,7 +56,7 @@ def collect_report(
         quick=quick, cache=cache, validate=w.validate,
         parametric=w.parametric if parametric is None else parametric,
         param_path=param_path, on_error=on_error, resilience=resilience,
-        journal=journal,
+        journal=journal, backend=backend,
     )
 
 
@@ -86,7 +88,9 @@ def collect_records(
 
 def run_workload(w: Workload, quick: bool = True, *,
                  cache: TranslationCache | None = None,
-                 journal: "RunJournal | str | None" = None) -> list[str]:
+                 journal: "RunJournal | str | None" = None,
+                 backend: "ExecutionBackend | None" = None,
+                 executor_stats: "dict | None" = None) -> list[str]:
     """Execute one workload (declarative or custom) and emit its CSV.
 
     Fault-isolated: a failing plan point is demoted/retried by the
@@ -96,12 +100,20 @@ def run_workload(w: Workload, quick: bool = True, *,
     ``FailureRecord`` list on ``.failures``) is raised *after* emission
     so batch callers (``benchmarks/run.py``) can record the failure and
     continue to the next workload.
+
+    ``backend`` picks the plan engine's execution backend (custom-runner
+    workloads ignore it — they own their execution). When the caller
+    passes an ``executor_stats`` dict, the report's per-phase executor
+    accounting is copied into it (the ledger's stage/measure split).
     """
     if w.runner is not None:
         return list(w.runner(quick))
     cache = cache if cache is not None else GLOBAL_CACHE
     s0 = cache.stats()
-    report = collect_report(w, quick, cache=cache, journal=journal)
+    report = collect_report(w, quick, cache=cache, journal=journal,
+                            backend=backend)
+    if executor_stats is not None:
+        executor_stats.update(report.executor)
     lines = [
         csv_line(f"{w.figure}/{row.variant}/{row.point.label}", row.record,
                  w.derived(row.record) if w.derived else "")

@@ -459,3 +459,148 @@ def test_run_list_tag_filter(capsys):
     listed = {ln.split()[0] for ln in out.strip().splitlines()}
     assert {"fig16_tile_sweep", "roofline", "fig05_barriers"} <= listed
     assert "spatter_uniform" not in listed
+
+
+# ---------------------------------------------------------------------------
+# PR-8: execution backends + device axis
+# ---------------------------------------------------------------------------
+
+# timing-only payload: the fields/keys allowed to differ across backends
+_TIMING_REC_FIELDS = {"seconds", "gbs", "gflops"}
+_TIMING_EXTRA_KEYS = {"timing_quality", "compile_seconds", "lower_seconds",
+                      "cache_hit"}
+
+
+def _normalized_rows(report):
+    """Record content modulo timing — everything the execution backend
+    must keep identical to serial order."""
+    out = []
+    for row in report.rows:
+        rec = row.record
+        fields = tuple(
+            (f.name, getattr(rec, f.name))
+            for f in dataclasses.fields(rec)
+            if f.name not in _TIMING_REC_FIELDS and f.name != "extra")
+        extra = tuple(sorted(
+            ((k, v) for k, v in rec.extra.items()
+             if k not in _TIMING_EXTRA_KEYS), key=str))
+        out.append((row.variant, row.point.label, fields, extra))
+    return out
+
+
+_EXEC_CFG = DriverConfig(template="unified", ntimes=2, reps=1)
+
+
+def _backend_report(backend):
+    plan = SweepPlan.product(config_axis("programs", (1, 2)),
+                             env_axis((256, 512)))
+    return suite.run_plan(
+        lambda env: triad(), [VariantSpec("t", _EXEC_CFG)], plan,
+        quick=True, cache=TranslationCache(), backend=backend)
+
+
+def test_backend_equivalence_and_executor_stats():
+    ser = _backend_report(suite.SerialBackend())
+    tp = _backend_report(suite.ThreadPoolBackend(4))
+    assert _normalized_rows(ser) == _normalized_rows(tp)
+    assert ser.executor["backend"] == "serial"
+    assert ser.executor["workers"] == 1
+    # serial stages everything before the first measurement: no overlap
+    assert ser.executor["staging_overlap_seconds"] == 0.0
+    assert tp.executor["backend"] == "threadpool"
+    assert tp.executor["workers"] == 4
+    for key in ("groups", "stage_seconds", "measure_seconds",
+                "stage_wall_seconds", "first_measure_seconds",
+                "staging_overlap_seconds", "wall_seconds"):
+        assert key in ser.executor and key in tp.executor, key
+
+
+def test_threadpool_backend_rejects_nonpositive_workers():
+    with pytest.raises(ValueError, match="worker"):
+        suite.ThreadPoolBackend(0)
+
+
+def _exec_poisoned(env, stride=2):
+    from repro.core import gather
+
+    if stride == 13:
+        raise RuntimeError("injected poison")
+    return gather(stride=stride)
+
+
+def test_threadpool_fault_isolation_per_worker():
+    plan = SweepPlan.product(pattern_axis("stride", (2, 13, 8)),
+                             env_axis((256,)))
+    report = suite.run_plan(_exec_poisoned, [VariantSpec("g", _EXEC_CFG)],
+                            plan, quick=True, cache=TranslationCache(),
+                            backend=suite.ThreadPoolBackend(3))
+    # the poisoned group fails inside its worker; the survivors' records
+    # arrive complete and in plan order
+    assert [r.point.label for r in report.rows] == ["stride2/n256",
+                                                    "stride8/n256"]
+    assert [f.label for f in report.failures] == ["stride13/n256"]
+    assert report.failures[0].stage == "lower"
+    assert report.failures[0].attempts >= 2  # the demotion ladder ran
+    assert not report.ok
+
+
+def _exec_all_poisoned(env, stride=2):
+    raise RuntimeError(f"poison {stride}")
+
+
+def test_threadpool_strict_raises_first_error_in_plan_order():
+    plan = SweepPlan.product(pattern_axis("stride", (13, 17)),
+                             env_axis((256,)))
+    with pytest.raises(RuntimeError, match="poison 13"):
+        suite.run_plan(_exec_all_poisoned, [VariantSpec("g", _EXEC_CFG)],
+                       plan, quick=True, cache=TranslationCache(),
+                       on_error="raise",
+                       backend=suite.ThreadPoolBackend(2))
+
+
+def test_device_axis_expansion_labels_and_stamp():
+    import jax
+
+    plan = SweepPlan.product(suite.device_axis((0, 1)),
+                             env_axis((256, 512)))
+    pts = plan.points(quick=True)
+    assert [p.label for p in pts] == ["dev0/n256", "dev0/n512",
+                                     "dev1/n256", "dev1/n512"]
+    assert dict(pts[0].config) == {"device": 0}
+    assert pts[0].axis_point() == {"device": 0, "n": 256}
+    # distinct device values are distinct driver groups (one executable
+    # pinned per device), while env points within a device share one
+    assert pts[0].group_key == pts[1].group_key
+    assert pts[0].group_key != pts[2].group_key
+
+    report = suite.run_plan(lambda env: triad(),
+                            [VariantSpec("t", _EXEC_CFG)], plan, quick=True,
+                            cache=TranslationCache(),
+                            backend=suite.ThreadPoolBackend(2))
+    assert report.ok
+    ndev = len(jax.devices())
+    for row in report.rows:
+        d = row.record.extra["device"]
+        axis = row.point.axis_point()["device"]
+        # the axis value survives verbatim; the resolved device wraps
+        # modulo the visible device count (dev1 -> device 0 on a
+        # 1-device host), so plans port across mesh sizes
+        assert d["axis"] == axis
+        assert d["id"] == axis % ndev
+        assert d["platform"] == jax.devices()[0].platform
+
+
+@pytest.mark.slow
+def test_backend_equivalence_every_declarative_workload():
+    """ThreadPoolBackend must reproduce SerialBackend's records (modulo
+    timing) for every registered declarative workload — the PR-8
+    acceptance contract, registry-wide."""
+    load_builtins()
+    for w in suite.workloads():
+        if w.runner is not None:
+            continue
+        ser = suite.collect_report(w, quick=True, cache=TranslationCache(),
+                                   backend=suite.SerialBackend())
+        tp = suite.collect_report(w, quick=True, cache=TranslationCache(),
+                                  backend=suite.ThreadPoolBackend(4))
+        assert _normalized_rows(ser) == _normalized_rows(tp), w.name

@@ -520,3 +520,146 @@ def test_narrowed_parametric_viability_probe_still_specializes():
     d = Driver(lambda env: pointer_chase(), cfg, cache=TranslationCache())
     recs = d.run([128, 256])
     assert [r.extra["param_path"] for r in recs] == ["specialized"] * 2
+
+
+# ---------------------------------------------------------------------------
+# PR-8: concurrent journal writes + threadpool crash-resume + collectives
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_journal_appends_no_torn_lines(tmp_path):
+    """Many threads append rows at once (the ThreadPoolBackend writer
+    pattern): every line in the file must parse as a whole JSON entry
+    and every key must land in the in-memory map."""
+    import threading
+    import types
+
+    from repro.core.measure import Record
+
+    jpath = tmp_path / "j.jsonl"
+    jr = RunJournal(jpath)
+    n_threads, per_thread = 8, 25
+    barrier = threading.Barrier(n_threads)
+
+    def rec(i):
+        return Record("triad", "unified", "identity", "jax", 256, 3072, 1,
+                      2, 1e-6, 1.0, 1.0,
+                      extra={"payload": "x" * 512, "i": i})
+
+    def worker(t):
+        barrier.wait()
+        for i in range(per_thread):
+            key = f"{t:02d}-{i:04d}"
+            pt = types.SimpleNamespace(label=f"n{t}/{i}")
+            jr.append_row(key, "v", pt, rec(i))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    lines = jpath.read_text().splitlines()
+    assert len(lines) == n_threads * per_thread
+    keys = set()
+    for line in lines:
+        e = json.loads(line)  # a torn line would raise here
+        assert e["kind"] == "row" and len(e["record"]["extra"]["payload"]) == 512
+        keys.add(e["key"])
+    assert len(keys) == n_threads * per_thread
+    assert len(jr) == n_threads * per_thread
+    # a fresh load sees the identical entry set
+    assert len(RunJournal(jpath)) == n_threads * per_thread
+
+
+def test_threadpool_crash_resume_byte_identical(tmp_path):
+    """Journaled run under ThreadPoolBackend, 'crash' (truncate), resume
+    under ThreadPoolBackend: replayed rows byte-identical to the
+    original run, remainder re-executes, final row order = plan order."""
+    from repro.suite import ThreadPoolBackend
+
+    jpath = tmp_path / "run.jsonl"
+    v = [VariantSpec("t", CFG)]
+    plan = SweepPlan.product(env_axis((256, 512, 1024)))
+    full = run_plan(lambda env: triad(), v, plan, cache=TranslationCache(),
+                    journal=str(jpath), backend=ThreadPoolBackend(3))
+    assert len(full.rows) == 3
+    lines = jpath.read_text().splitlines()
+    assert len(lines) == 3
+    jpath.write_text(lines[0] + "\n")        # crash after one entry
+    c2 = TranslationCache()
+    resumed = run_plan(lambda env: triad(), v, plan, cache=c2,
+                       journal=str(jpath), backend=ThreadPoolBackend(3))
+    assert resumed.replayed == 1
+    assert len(resumed.rows) == 3
+    assert c2.stats()["compile_misses"] > 0   # the remainder really ran
+    assert [r.point.label for r in resumed.rows] == ["n256", "n512",
+                                                     "n1024"]
+    replayed_label = json.loads(lines[0])["label"]
+    (orig,) = [r for r in full.rows if r.point.label == replayed_label]
+    (rep,) = [r for r in resumed.rows if r.point.label == replayed_label]
+    assert orig.record.json() == rep.record.json()
+    # the journal is whole again: a serial re-run is all replay
+    r3 = run_plan(lambda env: triad(), v, plan, cache=TranslationCache(),
+                  journal=str(jpath))
+    assert r3.replayed == 3
+
+
+def test_collective_wire_byte_formulas():
+    from repro.suite import expected_wire_bytes
+
+    # all_gather over k devices: (k-1)/k of the gathered k*S*4 bytes
+    assert expected_wire_bytes("all_gather", 1024, 8) == 7 / 8 * 8 * 1024 * 4
+    # all_reduce: reduce-scatter + all-gather = 2(k-1)/k of S*4 bytes
+    assert expected_wire_bytes("all_reduce", 1024, 8) == 2 * 7 / 8 * 1024 * 4
+    # degenerate 1-device mesh: no wire traffic at all
+    assert expected_wire_bytes("all_gather", 1024, 1) == 0
+    assert expected_wire_bytes("all_reduce", 1024, 1) == 0
+    with pytest.raises(ValueError, match="unknown collective"):
+        expected_wire_bytes("all_to_all", 1024, 8)
+
+
+def test_collective_ladder_skips_on_single_device(capsys):
+    """On a 1-device box (the default test process) the ladder measures
+    nothing and the runner emits the skip comment."""
+    import jax
+
+    from repro.suite import collective_runner, measure_collectives
+
+    if len(jax.devices()) != 1:  # pragma: no cover - forced-device env
+        pytest.skip("multi-device environment")
+    assert measure_collectives(quick=True) == []
+    lines = collective_runner(quick=True)
+    assert len(lines) == 1 and lines[0].startswith("# collective ladder skipped")
+
+
+@pytest.mark.slow
+def test_collective_ladder_agreement_on_forced_mesh(tmp_path):
+    """Ring accounting and analyze_collectives must agree within 10% on
+    a forced 8-device host mesh (subprocess: device count is fixed at
+    jax import)."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "import os, json\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=8'\n"
+        "from repro.suite import measure_collectives\n"
+        "print(json.dumps(measure_collectives(quick=True)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [str(__import__("pathlib").Path(__file__).resolve().parents[1]
+               / "src")])
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    assert {r["op"] for r in rows} == {"all_gather", "all_reduce"}
+    assert all(r["devices"] == 8 for r in rows)
+    for r in rows:
+        assert abs(r["agreement"] - 1.0) <= 0.10, r
+        assert r["gbs"] > 0 and r["seconds"] > 0

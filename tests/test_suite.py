@@ -175,6 +175,7 @@ _EXPECTED_PATHS = {
     "pointer_chase": {None: "specialized"},        # custom kernel
     "spatter_nonuniform": {None: "gather"},        # unified programs=4
     "mess_calibrated": {None: "specialized"},      # zip: one env point/group
+    "device_sweep": {None: "strided"},             # independent template
 }
 
 # parametric=True must raise for these (custom kernel with no
@@ -192,6 +193,7 @@ _EXPECTED_WINDOW_RANK = {
     ("fig12_jacobi1d", "indep_padded"): 1,
     ("fig14_jacobi2d", "independent"): 2,
     ("fig15_jacobi3d", "independent"): 3,
+    ("device_sweep", None): 1,
 }
 
 
