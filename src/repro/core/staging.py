@@ -726,6 +726,19 @@ class TranslationCache:
             self.validated_drops = 0
 
 
+def _device_cache_key(device: int | None) -> int | None:
+    """Cache-key form of a device-axis pin: the index wraps modulo the
+    visible device count, mirroring how ``Driver._device`` resolves it,
+    so collapsed plan indices (device 0 vs device 4 on a 4-device box)
+    share one executable instead of compiling duplicates. ``None`` (no
+    pin) stays a distinct key: an unpinned compile runs under the
+    ambient default device, which a ``jax.default_device`` scope can
+    point anywhere."""
+    if device is None:
+        return None
+    return device % len(jax.devices())
+
+
 def _global_capacity() -> int | None:
     raw = os.environ.get("REPRO_CACHE_CAPACITY", "")
     try:
@@ -753,7 +766,10 @@ def stage_lower(
     ``device`` is the caller's device-axis pin (an index into
     ``jax.devices()``); it is part of the cache key because an AOT
     executable is bound to the device it compiled on — an artifact built
-    for device 0 must never be replayed as device 3's.
+    for device 0 must never be replayed as device 3's. The key holds
+    the *wrapped* index (modulo the visible device count, exactly how
+    the driver resolves the pin), so plan indices that collapse onto
+    one physical device share one executable.
     """
     from . import codegen  # deferred: codegen imports nothing from here
 
@@ -767,7 +783,7 @@ def stage_lower(
             "lower", fingerprint_pattern(pattern),
             fingerprint_schedule(schedule), backend, pallas_mode or None,
             tuple(grid_bands) if grid_bands else None,
-            bool(force_gather), device, _env_key(env),
+            bool(force_gather), _device_cache_key(device), _env_key(env),
         )
     except (TypeError, ValueError, AttributeError):
         key = None  # unhashable pattern piece: bypass the cache
@@ -849,8 +865,8 @@ def stage_lower_parametric(
         key = (
             "plower", fingerprint_pattern(pattern),
             fingerprint_schedule(schedule), backend, pallas_mode or None,
-            params, str(param_path), chunk, bool(assume_full), device,
-            _env_key(cap_env),
+            params, str(param_path), chunk, bool(assume_full),
+            _device_cache_key(device), _env_key(cap_env),
         )
     except (TypeError, ValueError, AttributeError):
         key = None  # unhashable pattern piece: bypass the cache

@@ -66,6 +66,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
+import jax
+
 from repro.core import (
     Driver,
     GLOBAL_CACHE,
@@ -451,14 +453,25 @@ class _GroupRun:
     rows: list = dataclasses.field(default_factory=list)   # (plan idx, PlanRow)
     failures: list = dataclasses.field(default_factory=list)
     demotions: list = dataclasses.field(default_factory=list)
+    # journal lines built during run(), written by flush_journal()
+    pending_journal: list = dataclasses.field(default_factory=list)
     error: "BaseException | None" = None
     measure_interval: "tuple | None" = None
 
     @property
     def device_key(self):
-        """Measurement-serialization key: groups sharing a resolved
-        device must not time against each other; distinct devices may."""
-        return self.group.driver.cfg.device
+        """Measurement-serialization key: the id of the *physical*
+        device this group's kernels run on, not the raw ``cfg.device``
+        index. Drivers resolve pins modulo the visible device count
+        (``Driver._device``) and ``None`` executes on the process
+        default device, so dev0/dev1 on a one-device host — or a pinned
+        dev0 group next to an unpinned group — must share one lock;
+        keying on the raw index would let them time concurrently on the
+        same hardware."""
+        dev = self.group.driver._device()
+        if dev is None:
+            dev = jax.devices()[0]
+        return dev.id
 
     def stage(self) -> None:
         """Lower + compile this group's executables (cache-deduplicated
@@ -473,7 +486,11 @@ class _GroupRun:
 
     def run(self) -> None:
         """Measure the group (everything below is today's per-group loop
-        body, unchanged — demotion ladder, journal appends and all)."""
+        body, unchanged — demotion ladder and all). Journal lines are
+        only *queued* here; the backend calls :meth:`flush_journal`
+        afterwards so the journal's flush+fsync never runs under a
+        measurement lock, where a slow disk would serialize into other
+        groups' time-to-measure."""
         v, g = self.variant, self.group
         if self.strict:
             recs = _attempt_strict(g.driver, g.envs, self.validate,
@@ -494,21 +511,38 @@ class _GroupRun:
                 fr = _failure_record(g, li, exc, attempts[li], steps)
                 self.failures.append(fr)
                 if self.jr is not None:
-                    self.jr.append_failure(self.keys[li], v.label,
-                                           g.points[li], fr)
+                    self.pending_journal.append(
+                        ("failure", self.keys[li], g.points[li], fr))
         if self.jr is not None:
             for order_i, row in self.rows:
                 li = g.order.index(order_i)
-                self.jr.append_row(self.keys[li], v.label, row.point,
-                                   row.record)
+                self.pending_journal.append(
+                    ("row", self.keys[li], row.point, row.record))
+
+    def flush_journal(self) -> None:
+        """Append this unit's queued journal lines (failures first, then
+        rows — the order the inline appends used to produce). Backends
+        call this exactly once per successfully-run unit, after
+        releasing any measurement serialization."""
+        if self.jr is None:
+            return
+        v = self.variant
+        for kind, key, point, payload in self.pending_journal:
+            if kind == "row":
+                self.jr.append_row(key, v.label, point, payload)
+            else:
+                self.jr.append_failure(key, v.label, point, payload)
+        self.pending_journal.clear()
 
 
 class ExecutionBackend:
     """How live driver groups stage and measure.
 
-    ``execute(units, strict)`` must (1) call every unit's ``stage`` and
-    then ``run`` exactly once, (2) record each unit's measurement span
-    on ``unit.measure_interval``, (3) return the list of staging
+    ``execute(units, strict)`` must (1) call every unit's ``stage``,
+    then ``run``, then — once ``run`` succeeded and any measurement
+    serialization is released — ``flush_journal``, each exactly once,
+    (2) record each unit's measurement span on
+    ``unit.measure_interval``, (3) return the list of staging
     ``(start, end)`` spans it spent, and (4) surface unit errors: under
     ``strict`` the first error in unit (= plan) order propagates after
     all workers settle; outside strict any escaped exception is a plan
@@ -543,6 +577,7 @@ class SerialBackend(ExecutionBackend):
             m0 = time.perf_counter()
             u.run()
             u.measure_interval = (m0, time.perf_counter())
+            u.flush_journal()
         return stage_intervals
 
 
@@ -550,9 +585,18 @@ class ThreadPoolBackend(ExecutionBackend):
     """Overlapped staging: no global barrier. Each worker stages its
     group then immediately measures it, so group N+1's lower/compile
     (GIL-released XLA) runs while group N times. Measurement itself is
-    serialized per resolved device — a per-device lock — so timings are
-    never taken concurrently on shared hardware; device-axis groups
-    pinned to distinct devices do measure in parallel."""
+    serialized per resolved *physical* device — a per-device lock keyed
+    on the device each group actually runs on — so timings are never
+    taken concurrently on shared hardware; device-axis groups pinned to
+    distinct devices do measure in parallel.
+
+    CPU-backend caveat: on CPU-only hosts (the CI configuration) the
+    overlapped XLA compiles run on the same cores as the kernel under
+    test, so the per-device lock cannot stop compile threads from
+    adding measurement noise — the adaptive ``target_cv`` rep
+    escalation absorbs it, at the cost of extra reps. On accelerator
+    backends compiles burn host cores while kernels time on the device,
+    and the overlap is noise-free."""
 
     name = "threadpool"
 
@@ -591,6 +635,11 @@ class ThreadPoolBackend(ExecutionBackend):
                     u.error = e
                 finally:
                     u.measure_interval = (m0, time.perf_counter())
+            if u.error is None:
+                try:
+                    u.flush_journal()   # outside the measure lock
+                except Exception as e:
+                    u.error = e
 
         if units:
             with ThreadPoolExecutor(max_workers=self.workers,

@@ -590,6 +590,34 @@ def test_device_axis_expansion_labels_and_stamp():
         assert d["platform"] == jax.devices()[0].platform
 
 
+def test_measure_lock_key_resolves_physical_device():
+    """The ThreadPoolBackend measure lock keys on the *resolved*
+    physical device, not the raw ``cfg.device`` index: indices that
+    wrap onto one device (dev0/dev1 on a 1-device host) and the
+    unpinned default must share one lock, or such groups would time
+    concurrently on shared hardware."""
+    import types
+
+    import jax
+
+    from repro.suite import engine as engine_mod
+
+    def key(device):
+        drv = Driver(lambda env: triad(), DriverConfig(device=device))
+        unit = engine_mod._GroupRun(
+            variant=None, group=types.SimpleNamespace(driver=drv),
+            validate=False, max_check_n=0, policy=None, strict=False,
+            jr=None, keys=None)
+        return unit.device_key
+
+    ndev = len(jax.devices())
+    assert key(0) == key(ndev)      # wrapped index -> same hardware
+    assert key(None) == key(0)      # unpinned runs on the default device
+    assert key(1) == key(1 + ndev)
+    if ndev > 1:
+        assert key(0) != key(1)     # distinct devices keep distinct locks
+
+
 @pytest.mark.slow
 def test_backend_equivalence_every_declarative_workload():
     """ThreadPoolBackend must reproduce SerialBackend's records (modulo

@@ -332,6 +332,29 @@ def test_concurrent_same_key_staging_builds_once():
     assert s["lower_hits"] == 7
 
 
+def test_wrapped_device_index_shares_cache_entry():
+    """Device-axis indices that resolve (modulo the visible device
+    count) to the same physical device must share one cache entry —
+    a collapsed plan (dev0..devN on a smaller box) should not compile
+    duplicate identical executables."""
+    import jax
+
+    cache = TranslationCache()
+    pat = triad()
+    sch = identity()
+    ndev = len(jax.devices())
+    a = stage_lower(pat, sch, {"n": 512}, device=0, cache=cache)
+    b = stage_lower(pat, sch, {"n": 512}, device=ndev, cache=cache)
+    assert a is b
+    s = cache.stats()
+    assert s["lower_misses"] == 1
+    assert s["lower_hits"] == 1
+    # an unpinned lowering stays a distinct entry (ambient default
+    # device is not necessarily devices()[0] under default_device scopes)
+    stage_lower(pat, sch, {"n": 512}, device=None, cache=cache)
+    assert cache.stats()["lower_misses"] == 2
+
+
 def test_concurrent_mixed_keys_eviction_counters_consistent():
     """Concurrent distinct-key traffic through a capacity-2 LRU: no
     torn counter updates — hits + misses equals the request count and
