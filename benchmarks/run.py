@@ -32,7 +32,7 @@ stay identical to serial order. Custom-runner workloads own their
 execution and ignore the flag.
 
 ``--smoke`` runs every selected workload in quick mode and writes a JSON
-perf ledger (default ``BENCH_PR8.json`` at the repo root) with
+perf ledger (default ``BENCH_PR9.json`` at the repo root) with
 per-workload wall time and per-phase (stage vs measure) split, an
 ``executor`` block ({backend, workers, staging_overlap_seconds, ...})
 aggregated across workloads, the process-wide translation-cache hit rate,
@@ -51,6 +51,13 @@ disk compile cache), and two probes ``scripts/ci.sh`` gates on:
   (``compiled`` where the platform lowers pallas natively,
   ``interpret`` elsewhere) so CI can gate a calibrated backend-overhead
   ceiling per mode.
+
+The ledger also carries a ``derived`` block: for every
+application-derived workload that ran (``repro.suite.derived`` — access
+shapes mined from the compiled HLO of the repo's own models), the
+source model, the mined source op, and the architecture-independent
+feature vector (stride entropy, reuse distance, gather fraction), which
+``scripts/ci.sh`` gates for presence and non-degeneracy.
 
 The harness is fault-isolated end to end: a failing workload (or a
 failing plan *point* inside one — the engine demotes/retries and
@@ -433,7 +440,7 @@ def main(argv: list[str] | None = None) -> None:
                     help="worker threads for the plan engine's execution "
                          "backend; >1 selects ThreadPoolBackend (records "
                          "stay identical to serial order)")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR8.json"),
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR9.json"),
                     help="ledger path for --smoke")
     ap.add_argument("--journal", default="",
                     help="directory for per-workload resume journals; "
@@ -591,6 +598,19 @@ def main(argv: list[str] | None = None) -> None:
             pallas_probe = _pallas_probe()
         except Exception as e:  # noqa: BLE001 - a broken probe must gate
             pallas_probe = {"error": f"{type(e).__name__}: {e}"}
+        # provenance of the application-derived workloads that ran:
+        # mined source op + feature vector, with per-workload failure flag
+        try:
+            from repro.suite.derived import derived_report
+
+            failed_names = {f["workload"] for f in failures}
+            derived_block = {
+                name: {**info, "failed": name in failed_names}
+                for name, info in derived_report(
+                    names=set(module_seconds)).items()
+            }
+        except Exception as e:  # noqa: BLE001 - a broken block must gate
+            derived_block = {"error": f"{type(e).__name__}: {e}"}
         ledger = {
             "suite": "benchmarks.run --smoke",
             "mode": "full" if args.full else "quick",
@@ -604,6 +624,7 @@ def main(argv: list[str] | None = None) -> None:
             "translation_cache": GLOBAL_CACHE.stats(),
             "param_path_probe": probe,
             "pallas_probe": pallas_probe,
+            "derived": derived_block,
         }
         out = pathlib.Path(args.out)
         out.write_text(json.dumps(ledger, indent=2) + "\n")

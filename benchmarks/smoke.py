@@ -1,6 +1,6 @@
 """CI smoke entrypoint: one tiny config per registered workload + ledger.
 
-    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR8.json]
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_PR9.json]
 
 Thin alias for ``benchmarks.run --smoke``: runs the quick-mode plan of
 every registry workload (including the multi-axis ``mess_load_sweep``,
@@ -13,11 +13,15 @@ failing workload or plan point is recorded, the batch continues), the
 cost with the 1-compile-per-ladder assertion and per-side
 ``timing_quality`` — and the ``pallas_probe`` — pallas-backend vs
 jax-backend per-call cost on the same parametric ladders, stamped with
-the platform-resolved execution mode — to the JSON ledger, so future
-PRs can assert the harness's perf trajectory (the strided regime's
-≤ 1.5x comparability floor, the pallas backend's calibrated overhead
-ceiling) instead of guessing. CI asserts ``failures`` is empty on the
-clean run.
+the platform-resolved execution mode — and the ``derived`` block —
+per-workload provenance (source model, mined source op, feature
+vector) of the application-derived workloads synthesized from the
+models' compiled HLO (``repro.suite.derived``) — to the JSON ledger,
+so future PRs can assert the harness's perf trajectory (the strided
+regime's ≤ 1.5x comparability floor, the pallas backend's calibrated
+overhead ceiling) instead of guessing. CI asserts ``failures`` is
+empty on the clean run and that ≥2 derived workloads ran failure-free
+with non-degenerate feature vectors.
 """
 from __future__ import annotations
 

@@ -41,11 +41,16 @@
 # forced 8-device host mesh, where ring-accounting wire bytes must
 # agree with launch/hlo_analysis.analyze_collectives within 10% on
 # every (op, shard-size) point.
+# PR-9 adds the derived-workloads gate: the ledger's `derived` block
+# must show >= 2 application-derived workloads (including one
+# attention-derived and one MoE-derived) that ran failure-free with
+# non-degenerate feature vectors (stride entropy / reuse distance /
+# gather fraction all finite, not all zero) and a mined source op.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR8.json}"
+LEDGER="${1:-BENCH_PR9.json}"
 
 echo "== tier-1 pytest (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -369,5 +374,40 @@ for name, p in pp["workloads"].items():
 for scen in ("mess_load_sweep", "pointer_chase", "spatter_nonuniform",
              "mess_calibrated"):
     print(f"{scen}: {seconds[scen]:.1f}s")
+# derived-workloads gate: >= 2 application-derived workloads ran
+# failure-free with non-degenerate feature vectors + mined source ops
+import math
+derived = ledger.get("derived", {})
+if "error" in derived:
+    sys.exit(f"FAIL: derived block did not build: {derived['error']}")
+FEATURES = ("stride_entropy", "reuse_distance", "gather_fraction")
+clean = {}
+for name, entry in derived.items():
+    if entry.get("failed"):
+        continue
+    fv = entry.get("feature_vector", {})
+    vals = [fv.get(k) for k in FEATURES]
+    if not all(isinstance(v, (int, float)) and math.isfinite(v)
+               for v in vals):
+        sys.exit(f"FAIL: {name} feature vector malformed: {fv}")
+    if not any(abs(v) > 1e-9 for v in vals):
+        sys.exit(f"FAIL: {name} feature vector degenerate (all zero): {fv}")
+    if not entry.get("source_op") or not entry.get("source_model"):
+        sys.exit(f"FAIL: {name} derived entry has no mined provenance: "
+                 f"{entry}")
+    clean[name] = entry
+if len(clean) < 2:
+    sys.exit(f"FAIL: need >= 2 failure-free derived workloads, got "
+             f"{sorted(clean)}")
+models = {e["source_model"] for e in clean.values()}
+if not {"attention", "moe"} <= models:
+    sys.exit(f"FAIL: derived block must include attention- and "
+             f"MoE-derived workloads, got models {sorted(models)}")
+for name, e in sorted(clean.items()):
+    fv = e["feature_vector"]
+    print(f"{name}: {e['source_model']}/{e['source_op']} "
+          f"entropy {fv['stride_entropy']:.3f}b, reuse "
+          f"{fv['reuse_distance']:.2f}, gather {fv['gather_fraction']:.3f}")
+print(f"derived workloads OK: {len(clean)} mined from compiled HLO")
 print("OK")
 EOF2

@@ -902,12 +902,16 @@ def param_strided_window(
     """The ladder-level window policy: ``(window_spec, assume_full)``.
 
     Rank 1 (the lane band is the only windowable dynamic band): the
-    PR-4 policy, unchanged — when the smallest rung's window extent is
-    at least ``floor`` lanes, the chunk is clamped down to it, so every
-    chunk of every rung is provably full and the emitter skips masks
-    and blend reads entirely (the hot mode); ladders with tinier rungs
-    keep the default chunk and take the masked emission mode instead.
-    The spec stays a plain int.
+    PR-4 policy — when the smallest rung's window extent is at least
+    ``floor`` lanes, the chunk is clamped down to it, so every chunk of
+    every rung is provably full and the emitter skips masks and blend
+    reads entirely (the hot mode); ladders with tinier rungs take the
+    masked emission mode instead.  Masked mode gets a second clamp
+    tier: the lane chunk is bounded by ``max(floor, smallest rung
+    extent)`` rather than the capacity extent, so the per-chunk masked
+    work scales with the rung being measured (the runtime trip count
+    ``ceil(extent / chunk)`` does the rest) instead of every rung
+    paying a capacity-sized blend.  The spec stays a plain int.
 
     Rank >= 2 (outer dynamic bands the write references — stencil
     nests): the spec is a ``((band, C), ...)`` tuple. Outer window
@@ -917,8 +921,9 @@ def param_strided_window(
     band). The lane band joins the mask-free mode when the smallest
     rung's whole window — window-band chunks times vectorized static
     extents — carries at least ``floor`` points (an N-D window is big
-    even when each per-band chunk is small); otherwise it keeps the
-    capacity-extent chunk and the sign-anchored masked emission. The
+    even when each per-band chunk is small); otherwise it takes the
+    sign-anchored masked emission with the same second-tier lane clamp
+    (``max(floor, smallest rung extent)``, never the capacity). The
     ``chunk`` budget bounds the window's total dynamic-lane count,
     distributed innermost-first.
     """
@@ -934,10 +939,11 @@ def param_strided_window(
     }
     cap_ext_w = max(1, pnest.band_extents[w].eval(cap_env))
     outer = [b for b in bands[:-1] if m[b] >= 1]
+    masked_cw = int(min(chunk, cap_ext_w, max(floor, m[w])))
     if not outer:
         if m[w] >= floor:
             return int(min(chunk, m[w], cap_ext_w)), True
-        return int(min(chunk, cap_ext_w)), False
+        return masked_cw, False
     static_ext = _static_extents(pnest)
     lanes = max(0, m[w])
     for b in outer:
@@ -946,8 +952,7 @@ def param_strided_window(
         if b not in bands:
             lanes *= static_ext[b]
     full = lanes >= floor and m[w] >= 1
-    cw = int(min(chunk, m[w], cap_ext_w)) if full \
-        else int(min(chunk, cap_ext_w))
+    cw = int(min(chunk, m[w], cap_ext_w)) if full else masked_cw
     spec = [(w, max(1, cw))]
     used = max(1, cw)
     for b in reversed(outer):

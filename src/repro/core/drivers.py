@@ -785,6 +785,8 @@ class Driver:
                    if dev is not None else {}),
                 **({"pallas_mode": p.lowered.pallas_mode}
                    if cfg.backend == "pallas" else {}),
+                **({"derived": dict(pat.derived)}
+                   if pat.derived is not None else {}),
                 **({"capacity": int(p.lowered.cap_env["n"]),
                     "param_window_rank": int(
                         p.compiled.param_window_rank)}

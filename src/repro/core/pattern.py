@@ -102,6 +102,11 @@ class PatternSpec:
     # ``statement`` remains the accounting source (bytes per point).
     kernel: Callable | None = None
     oracle: Callable | None = None
+    # Provenance of application-derived patterns (``repro.suite.derived``):
+    # ``{source_model, source_op, feature_vector}``. Drivers merge it into
+    # every record's ``extra["derived"]`` so hand-written and
+    # application-derived records classify across origins.
+    derived: Mapping[str, object] | None = None
 
     def space(self, name: str) -> DataSpace:
         for s in self.spaces:

@@ -148,6 +148,7 @@ def fingerprint_pattern(pattern: PatternSpec) -> tuple:
         pattern.flops_per_point,
         _freeze(pattern.kernel),
         _freeze(pattern.oracle),
+        _freeze(pattern.derived),
     )
 
 

@@ -1,8 +1,8 @@
-"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+"""Post-SPMD HLO analysis: collective bytes, per-op traffic, roofline terms.
 
 ``cost_analysis()`` reports FLOPs/bytes with while-loop (scan) bodies
-counted ONCE, and it does not expose collective traffic at all. This
-module parses ``compiled.as_text()`` to
+counted ONCE, and it does not expose collective traffic or per-op access
+shapes at all. This module parses ``compiled.as_text()`` to
 
 1. find every collective op (all-gather / all-reduce / reduce-scatter /
    all-to-all / collective-permute) with its result shape and replica
@@ -19,6 +19,17 @@ ring-algorithm accounting:
     reduce-scatter     (k-1)   x result bytes   (operand = k x result)
     all-to-all         (k-1)/k x result bytes
     collective-permute           result bytes
+
+Async collective pairs (``-start``/``-done``) are counted once, at the
+``-start`` op; a ``-start``'s tuple result shape ``(operand, result,
+contexts...)`` contributes only the result element. Dtypes missing from
+``DTYPE_BYTES`` are never silently counted as zero bytes — they surface
+as a structured ``unknown_dtypes`` marker on the result.
+
+``analyze_memory_ops`` applies the same trip-weighted walk to *every*
+op, yielding per-opcode result-byte traffic — the raw material the
+application-derived workload pipeline (``repro.suite.derived``)
+classifies into access shapes.
 """
 from __future__ import annotations
 
@@ -28,8 +39,9 @@ from collections import defaultdict
 
 import numpy as np
 
-__all__ = ["CollectiveStats", "analyze_collectives", "parse_computations",
-           "DTYPE_BYTES"]
+__all__ = ["CollectiveStats", "OpTraffic", "ShapeBytes",
+           "analyze_collectives", "analyze_memory_ops",
+           "parse_computations", "DTYPE_BYTES"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -40,7 +52,12 @@ DTYPE_BYTES = {
 _COLL_RE = re.compile(
     r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\("
+    r"(-start)?\("
+)
+# any named op: `%x = <shape> opcode(`; shape is a tuple or dtype[dims]{...}
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"([a-z][a-z0-9\-]*)\("
 )
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
@@ -51,36 +68,96 @@ _WHILE_RE = re.compile(
 _CALLS_RE = re.compile(
     r"(?:calls=|condition=|body=|to_apply=)%?([\w.\-]+)")
 _CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+_HEADER_RE = re.compile(r"(?:ENTRY\s+)?%?([\w.\-]+)[^{]*\{")
 
 
-def _shape_bytes(shape_txt: str) -> int:
+@dataclasses.dataclass(frozen=True)
+class ShapeBytes:
+    """Byte count of an HLO shape string + the dtypes it could not
+    account (never silently counted as zero)."""
+
+    nbytes: int
+    unknown: tuple[str, ...] = ()
+
+
+def _shape_bytes(shape_txt: str) -> ShapeBytes:
     total = 0
+    unknown: list[str] = []
     for dt, dims in _SHAPE_RE.findall(shape_txt):
-        if dt not in DTYPE_BYTES:
-            continue
         n = 1
         if dims:
             for d in dims.split(","):
                 if d:
                     n *= int(d)
+        if dt not in DTYPE_BYTES:
+            if dt not in unknown:
+                unknown.append(dt)
+            continue
         total += n * DTYPE_BYTES[dt]
-    return total
+    return ShapeBytes(total, tuple(unknown))
+
+
+def _tuple_elems(shape_txt: str) -> list[str]:
+    """Split a tuple shape ``(a, b, ...)`` into its top-level element
+    shape strings (dims commas don't split). Non-tuples return [self]."""
+    txt = shape_txt.strip()
+    if not txt.startswith("("):
+        return [txt]
+    inner = txt[1:txt.rfind(")")] if ")" in txt else txt[1:]
+    elems, depth, cur = [], 0, []
+    for ch in inner:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            elems.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        elems.append("".join(cur).strip())
+    return [e for e in elems if e]
+
+
+def _result_bytes(shape_txt: str, *, is_start: bool) -> ShapeBytes:
+    """Bytes of an op's *result*. Async ``-start`` ops carry tuple
+    results ``(operand, result, contexts...)`` — count only the result
+    element, so the ``-start``/``-done`` pair is accounted exactly
+    once and context scratch (e.g. ``u32[]`` ids) never inflates it."""
+    if is_start:
+        elems = _tuple_elems(shape_txt)
+        if len(elems) >= 2:
+            return _shape_bytes(elems[1])
+        if elems:
+            return _shape_bytes(elems[0])
+    return _shape_bytes(shape_txt)
 
 
 def parse_computations(hlo: str) -> dict[str, str]:
-    """Split HLO text into named computations (entry included)."""
+    """Split HLO text into named computations (entry included).
+
+    Splitting is brace-depth driven: a header is any line matching the
+    computation-name shape whose net brace count opens a scope — newer
+    jaxlib emits headers with trailing attributes after the ``{``
+    (``execution_thread=...``), so "line ends with ``{``" is not a
+    usable signal. Layout/group braces (``f32[8]{0}``,
+    ``replica_groups={{0,1}}``) balance within a line, keeping the
+    net count correct.
+    """
     comps: dict[str, str] = {}
     cur_name, buf, depth = None, [], 0
     for line in hlo.splitlines():
         stripped = line.strip()
+        delta = stripped.count("{") - stripped.count("}")
         if cur_name is None:
-            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)[^{]*\{", stripped)
-            if m and stripped.endswith("{"):
+            m = _HEADER_RE.match(stripped)
+            if m and delta > 0:
                 cur_name = m.group(1)
                 buf = []
-                depth = 1
+                depth = delta
             continue
-        depth += stripped.count("{") - stripped.count("}")
+        depth += delta
         if depth <= 0:
             comps[cur_name] = "\n".join(buf)
             cur_name = None
@@ -95,20 +172,10 @@ def _trip_count(cond_body: str) -> int:
     return max(consts) if consts else 1
 
 
-@dataclasses.dataclass
-class CollectiveStats:
-    bytes_by_kind: dict[str, float]
-    count_by_kind: dict[str, int]
-
-    @property
-    def total_bytes(self) -> float:
-        return sum(self.bytes_by_kind.values())
-
-
-def analyze_collectives(hlo: str) -> CollectiveStats:
-    comps = parse_computations(hlo)
-
-    # while condition/body pairs and trip counts
+def _computation_multiplicity(comps: dict[str, str]) -> dict[str, float]:
+    """Trip-weighted execution multiplicity per computation: the entry
+    runs once; called computations inherit the caller's multiplicity
+    times their while-loop trip count."""
     trip: dict[str, int] = {}
     for name, body in comps.items():
         for m in _WHILE_RE.finditer(body):
@@ -117,7 +184,6 @@ def analyze_collectives(hlo: str) -> CollectiveStats:
             trip[loop_body] = max(trip.get(loop_body, 1), t)
             trip[cond] = max(trip.get(cond, 1), t)
 
-    # call multiplicity: entry has multiplier 1; called computations inherit
     entry = None
     for name in comps:
         if "entry" in name.lower() or name.startswith("main"):
@@ -141,16 +207,38 @@ def analyze_collectives(hlo: str) -> CollectiveStats:
 
     if entry:
         visit(entry, 1.0, ())
+    return mult
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+    unknown_dtypes: tuple[str, ...] = ()
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    comps = parse_computations(hlo)
+    mult = _computation_multiplicity(comps)
 
     by_kind: dict[str, float] = defaultdict(float)
     count: dict[str, int] = defaultdict(int)
+    unknown: list[str] = []
     for name, body in comps.items():
         m = mult.get(name, 0.0)
         if m == 0.0:
             continue
         for cm in _COLL_RE.finditer(body):
             shape_txt, kind = cm.group(1), cm.group(2)
-            nbytes = _shape_bytes(shape_txt)
+            sb = _result_bytes(shape_txt, is_start=bool(cm.group(3)))
+            for dt in sb.unknown:
+                if dt not in unknown:
+                    unknown.append(dt)
+            nbytes = sb.nbytes
             line_end = body.find("\n", cm.end())
             line = body[cm.start():line_end if line_end > 0 else None]
             k = _group_size(line)
@@ -166,7 +254,68 @@ def analyze_collectives(hlo: str) -> CollectiveStats:
                 eff = float(nbytes)
             by_kind[kind] += m * eff
             count[kind] += int(m)
-    return CollectiveStats(dict(by_kind), dict(count))
+    return CollectiveStats(dict(by_kind), dict(count), tuple(unknown))
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTraffic:
+    """Trip-weighted result traffic of one HLO opcode across the module."""
+
+    op: str
+    count: float            # occurrences weighted by loop trip products
+    result_bytes: float     # result bytes weighted the same way
+    example_shape: str = ""
+    unknown_dtypes: tuple[str, ...] = ()
+
+
+# opcodes that are bookkeeping, not memory access shapes
+_SKIP_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "custom-call", "call", "while", "conditional",
+})
+
+
+def analyze_memory_ops(hlo: str) -> dict[str, OpTraffic]:
+    """Per-opcode, trip-weighted result-byte traffic for the module.
+
+    The same computation-multiplicity walk ``analyze_collectives`` uses,
+    applied to every op: a gather inside a scan body with trip count 10
+    contributes 10x its result bytes. Async ``-start`` collectives count
+    their result tuple element only (pairs count once). The returned map
+    is the raw material for classifying a program's dominant access
+    shapes (``repro.suite.derived``).
+    """
+    comps = parse_computations(hlo)
+    mult = _computation_multiplicity(comps)
+
+    count: dict[str, float] = defaultdict(float)
+    nbytes: dict[str, float] = defaultdict(float)
+    example: dict[str, str] = {}
+    unknown: dict[str, list] = defaultdict(list)
+    for name, body in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for om in _OP_RE.finditer(body):
+            shape_txt, op = om.group(1), om.group(2)
+            if op in _SKIP_OPS:
+                continue
+            is_start = op.endswith("-start")
+            base = op[:-6] if is_start else op
+            if op.endswith("-done") or op.endswith("-update"):
+                continue  # the -start leg carries the accounting
+            sb = _result_bytes(shape_txt, is_start=is_start)
+            count[base] += m
+            nbytes[base] += m * sb.nbytes
+            example.setdefault(base, shape_txt)
+            for dt in sb.unknown:
+                if dt not in unknown[base]:
+                    unknown[base].append(dt)
+    return {
+        op: OpTraffic(op, count[op], nbytes[op], example.get(op, ""),
+                      tuple(unknown.get(op, ())))
+        for op in count
+    }
 
 
 def _group_size(line: str) -> int:

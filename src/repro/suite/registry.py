@@ -48,3 +48,6 @@ def all_tags() -> tuple[str, ...]:
 def load_builtins() -> None:
     """Import the built-in declarative entries (idempotent)."""
     from . import catalog as _builtin  # noqa: F401
+    from . import derived as _derived
+
+    _derived.register_derived()

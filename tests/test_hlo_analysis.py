@@ -4,7 +4,8 @@ from __future__ import annotations
 import textwrap
 
 from repro.launch.hlo_analysis import (
-    CollectiveStats, analyze_collectives, parse_computations,
+    CollectiveStats, _shape_bytes, analyze_collectives,
+    analyze_memory_ops, parse_computations,
 )
 
 HLO = textwrap.dedent("""
@@ -69,3 +70,97 @@ def test_total_bytes_positive():
     stats = analyze_collectives(HLO)
     assert stats.total_bytes > 0
     assert isinstance(stats, CollectiveStats)
+    assert stats.unknown_dtypes == ()
+
+
+# -- regression: attribute-trailing computation headers ---------------------
+# Newer jaxlib emits headers whose opening line carries attributes after
+# the `{` (so the line no longer *ends* with it); the splitter must be
+# brace-depth driven, not endswith-driven.
+
+HLO_TRAILING = textwrap.dedent("""
+    HloModule jit_step
+
+    %helper.1 (a: f32[8]{0}) -> f32[8]{0} { // scheduled
+      %a = f32[8]{0} parameter(0)
+      ROOT %m = f32[8]{0} multiply(f32[8]{0} %a, f32[8]{0} %a)
+    }
+
+    ENTRY %main.2 (p0: f32[8]{0}) -> f32[8]{0}, execution_thread="main" {
+      %p0 = f32[8]{0} parameter(0)
+      %ag = f32[32]{0} all-gather(f32[8]{0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+      ROOT %c = f32[8]{0} call(f32[8]{0} %p0), to_apply=%helper.1
+    }
+""")
+
+
+def test_parse_computations_attribute_trailing_headers():
+    comps = parse_computations(HLO_TRAILING)
+    assert any("main" in c for c in comps), comps.keys()
+    assert any("helper" in c for c in comps), comps.keys()
+    stats = analyze_collectives(HLO_TRAILING)
+    assert abs(stats.bytes_by_kind["all-gather"] - 32 * 4 * 3 / 4) < 1
+
+
+# -- regression: unknown dtypes surface structurally, never count as 0 ------
+
+def test_shape_bytes_unknown_dtype_marker():
+    sb = _shape_bytes("c64[16,16]")
+    assert sb.nbytes == 0 and sb.unknown == ("c64",)
+    sb = _shape_bytes("(f32[8], c128[4])")
+    assert sb.nbytes == 8 * 4 and sb.unknown == ("c128",)
+
+
+HLO_UNKNOWN = textwrap.dedent("""
+    HloModule jit_step
+
+    ENTRY %main (p0: c64[64]) -> c64[64] {
+      %p0 = c64[64] parameter(0)
+      ROOT %ar = c64[64] all-reduce(c64[64] %p0), replica_groups={{0,1}}
+    }
+""")
+
+
+def test_collectives_unknown_dtype_marker():
+    stats = analyze_collectives(HLO_UNKNOWN)
+    assert "c64" in stats.unknown_dtypes
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.bytes_by_kind["all-reduce"] == 0.0
+
+
+# -- regression: async -start pairs count once, result element only --------
+
+HLO_ASYNC = textwrap.dedent("""
+    HloModule jit_step
+
+    ENTRY %main (p0: f32[128]) -> f32[512] {
+      %p0 = f32[128] parameter(0)
+      %ags = (f32[128], f32[512], u32[], u32[]) all-gather-start(f32[128] %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+      ROOT %agd = f32[512] all-gather-done((f32[128], f32[512], u32[], u32[]) %ags)
+    }
+""")
+
+
+def test_async_start_counts_result_once():
+    stats = analyze_collectives(HLO_ASYNC)
+    # exactly one all-gather, costed on the 512-element *result* element
+    # of the -start tuple (not operand+result+contexts, not the -done)
+    assert stats.count_by_kind["all-gather"] == 1
+    assert abs(stats.bytes_by_kind["all-gather"] - 512 * 4 * 3 / 4) < 1
+    assert stats.unknown_dtypes == ()
+
+
+# -- analyze_memory_ops: trip-weighted per-op traffic ----------------------
+
+def test_analyze_memory_ops_trip_weighting():
+    ops = analyze_memory_ops(HLO)
+    # the while-body all-reduce runs 10 times; its result is 128*256 f32
+    assert ops["all-reduce"].count == 10
+    assert abs(ops["all-reduce"].result_bytes - 10 * 128 * 256 * 4) < 1
+    # entry-level ops run once; bookkeeping opcodes are excluded
+    assert ops["all-gather"].count == 1
+    assert "parameter" not in ops and "get-tuple-element" not in ops
+    # the async pair contributes one op, result bytes only
+    a = analyze_memory_ops(HLO_ASYNC)
+    assert a["all-gather"].count == 1
+    assert a["all-gather"].result_bytes == 512 * 4

@@ -482,10 +482,11 @@ def test_driver_clamps_chunk_for_full_ladders():
     envs = d._point_envs([1 << 10, 1 << 12], None)
     path, chunk, full = d._resolve_param_path(envs, {"n": 1 << 12})
     assert (path, chunk, full) == ("strided", 1 << 10, True)
-    # a sub-floor rung keeps the default chunk and the masked emitter
+    # a sub-floor rung takes the masked emitter with the second-tier
+    # clamp: the lane chunk is bounded by the floor, not the capacity
     envs = d._point_envs([256, 1 << 12], None)
     path, chunk, full = d._resolve_param_path(envs, {"n": 1 << 12})
-    assert path == "strided" and full is False and chunk == 1 << 12
+    assert path == "strided" and full is False and chunk == 1024
 
 
 # ---------------------------------------------------------------------------
@@ -581,6 +582,61 @@ def test_nd_windows_masked_lane_tiny_rungs():
     spec, full = param_strided_window(pnest, splan, envs, {"n": 10})
     assert isinstance(spec, tuple) and full is False
     _check_nd_windows(pat, sch, envs, {"n": 10}, want_rank=2)
+
+
+def test_masked_lane_second_clamp_tier_rank1():
+    """A masked ladder whose small rung is far below the capacity must
+    not pay capacity-extent lane windows: the chunk is clamped to
+    ``max(floor, smallest rung)`` and the runtime trip count covers the
+    larger rungs. Pinned through the driver's ladder resolution."""
+    d = Driver(lambda env: triad(),
+               DriverConfig(template="independent", programs=4, ntimes=2,
+                            reps=1, parametric="auto"),
+               cache=TranslationCache())
+    cap = {"n": 1 << 15}
+    envs = d._point_envs([8, 1 << 15], None)
+    path, chunk, full = d._resolve_param_path(envs, cap)
+    assert path == "strided" and full is False
+    assert chunk == 1024          # floor, not the 32768-lane capacity
+    # the clamped masked emission stays bit-exact against its mirror and
+    # the specialized path at the tiny rung
+    _check_all_regimes(triad(), identity(), {"n": 8}, cap, chunk)
+
+
+def test_masked_lane_second_clamp_tier_nd():
+    """N-D form of the same policy: the lane band of a masked stencil
+    ladder is clamped by ``max(floor, smallest rung extent)``, never the
+    capacity extent."""
+    pat = jacobi2d()
+    sch = identity()
+    pnest = sch.lower_symbolic(pat.domain, ("n",))
+    splan = param_strided_plan(pat, pnest)
+    envs = [{"n": 6}, {"n": 130}]
+    cap_env = {"n": 130}
+    # floor=64 scales the scenario down: the small rung's whole window
+    # is 4x4=16 points (masked), the capacity lane extent is 128, and
+    # the clamp tier must bound the lane chunk at the floor, 64
+    spec, full = param_strided_window(pnest, splan, envs, cap_env,
+                                      floor=64)
+    assert full is False
+    lane = dict(spec)[param_window_bands(pnest, splan)[-1]]
+    assert lane == 64
+    for env in envs:
+        assert param_strided_in_bounds(pat, pnest, splan, env, cap_env,
+                                       spec)
+        step = lower_jax_parametric(pat, sch, cap_env, chunk=spec,
+                                    param_path="strided", assume_full=full)
+        got = {k: jnp.asarray(v) for k, v in pat.allocate(cap_env).items()}
+        for _ in range(2):
+            got = step(got, (np.int32(env["n"]),))
+        got = {k: np.asarray(v) for k, v in got.items()}
+        mirror = windowed_oracle(pat, sch, env, cap_env,
+                                 pat.allocate(cap_env), ntimes=2,
+                                 chunk=spec, assume_full=full)
+        for k in mirror:
+            np.testing.assert_array_equal(
+                got[k], mirror[k],
+                err_msg=f"clamped lane mirror: {k} at n={env['n']}")
 
 
 def test_nd_window_policy_through_driver():

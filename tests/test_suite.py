@@ -176,11 +176,15 @@ _EXPECTED_PATHS = {
     "spatter_nonuniform": {None: "gather"},        # unified programs=4
     "mess_calibrated": {None: "specialized"},      # zip: one env point/group
     "device_sweep": {None: "strided"},             # independent template
+    "derived_attention_kv": {None: "strided"},     # independent template
+    "derived_moe_dispatch": {None: "specialized"},  # custom kernel
+    "derived_lm_embed": {None: "specialized"},     # custom kernel
+    "derived_train_update": {None: "strided"},     # independent template
 }
 
 # parametric=True must raise for these (custom kernel with no
 # variant-level parametric pin)
-_TRUE_RAISES = {"pointer_chase"}
+_TRUE_RAISES = {"pointer_chase", "derived_moe_dispatch", "derived_lm_embed"}
 
 # Window dimensionality the strided regime must resolve per (workload,
 # variant): 1-D nests window the lane band alone; the stencil nests
@@ -194,6 +198,8 @@ _EXPECTED_WINDOW_RANK = {
     ("fig14_jacobi2d", "independent"): 2,
     ("fig15_jacobi3d", "independent"): 3,
     ("device_sweep", None): 1,
+    ("derived_attention_kv", None): 1,
+    ("derived_train_update", None): 1,
 }
 
 
