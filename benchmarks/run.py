@@ -5,6 +5,7 @@
                                             [--smoke] [--list]
                                             [--backend jax|pallas]
                                             [--jobs N]
+                                            [--pattern-file CAPTURE.json]
                                             [--out BENCH.json]
 
 Every experiment is a declarative ``repro.suite`` Workload (pattern x
@@ -13,7 +14,16 @@ this module just iterates the registry and prints the paper's
 machine-parsable ``name,us_per_call,derived`` CSV contract. ``--list``
 prints the registered names (with tags), ``--only`` filters by name or
 figure prefix, ``--tag`` filters by scenario-family tag (``paper-figs``,
-``spatter``, ``mess``, ``latency``); both filters compose (AND).
+``spatter``, ``mess``, ``latency``, ``trace``); both filters compose
+(AND).
+
+``--pattern-file CAPTURE.json`` registers a trace-replay workload for a
+user-captured Spatter JSON pattern file (``repro.suite.spatter_io``) and
+runs it with the batch: each pattern entry becomes a variant riding its
+regime-appropriate config — affine traces on the strided paths,
+value-dependent ones on the bound-index kernel regime — through the
+same sweep engine as every built-in. A malformed file fails up front
+with the parser's typed reason slug, not mid-sweep.
 
 ``--backend pallas`` re-targets every declarative workload at the pallas
 backend (the ``VariantSpec.backend`` override — configs are rewritten,
@@ -57,7 +67,12 @@ application-derived workload that ran (``repro.suite.derived`` — access
 shapes mined from the compiled HLO of the repo's own models), the
 source model, the mined source op, and the architecture-independent
 feature vector (stride entropy, reuse distance, gather fraction), which
-``scripts/ci.sh`` gates for presence and non-degeneracy.
+``scripts/ci.sh`` gates for presence and non-degeneracy. Two more gated
+blocks cover the trace layer: ``trace`` (per trace workload, each
+pattern's parsed provenance and a live bit-exact replay check against
+the direct numpy replay of the JSON) and ``contended`` (the
+multi-pattern mix study: per-pattern byte-split integrity and the
+isolated-vs-contended primary-bandwidth ratio).
 
 The harness is fault-isolated end to end: a failing workload (or a
 failing plan *point* inside one — the engine demotes/retries and
@@ -427,7 +442,7 @@ def main(argv: list[str] | None = None) -> None:
                     help="comma-separated workload names or figure prefixes")
     ap.add_argument("--tag", default="",
                     help="comma-separated scenario-family tags "
-                         "(paper-figs, spatter, mess, latency)")
+                         "(paper-figs, spatter, mess, latency, trace)")
     ap.add_argument("--list", action="store_true",
                     help="print registered workload names (+tags) and exit")
     ap.add_argument("--smoke", action="store_true",
@@ -440,7 +455,10 @@ def main(argv: list[str] | None = None) -> None:
                     help="worker threads for the plan engine's execution "
                          "backend; >1 selects ThreadPoolBackend (records "
                          "stay identical to serial order)")
-    ap.add_argument("--out", default=str(ROOT / "BENCH_PR9.json"),
+    ap.add_argument("--pattern-file", default="",
+                    help="Spatter JSON pattern file to replay as a "
+                         "trace workload alongside the selected batch")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_PR10.json"),
                     help="ledger path for --smoke")
     ap.add_argument("--journal", default="",
                     help="directory for per-workload resume journals; "
@@ -451,6 +469,15 @@ def main(argv: list[str] | None = None) -> None:
     from repro import suite
 
     names, import_errors = load_registry()
+    if args.pattern_file:
+        from repro.suite.spatter_io import SpatterParseError, trace_workload
+
+        try:
+            tw = suite.register(trace_workload(args.pattern_file))
+        except SpatterParseError as e:
+            sys.exit(f"--pattern-file rejected ({e.reason}): {e}")
+        if tw.name not in names:
+            names.append(tw.name)
     only = set(args.only.split(",")) if args.only else None
     tags = set(args.tag.split(",")) if args.tag else None
 
@@ -611,6 +638,33 @@ def main(argv: list[str] | None = None) -> None:
             }
         except Exception as e:  # noqa: BLE001 - a broken block must gate
             derived_block = {"error": f"{type(e).__name__}: {e}"}
+        # provenance + live bit-exact replay check for every trace
+        # workload that ran (builtin spatter_ms1 and --pattern-file)
+        try:
+            from repro.suite.spatter_io import trace_report
+
+            failed_names = {f["workload"] for f in failures}
+            trace_block = {
+                name: {**info, "failed": name in failed_names}
+                for name, info in trace_report(
+                    names=set(module_seconds)).items()
+            }
+        except Exception as e:  # noqa: BLE001 - a broken block must gate
+            trace_block = {"error": f"{type(e).__name__}: {e}"}
+        # the contention study: re-measure the quick mix sweep and gate
+        # on the per-pattern byte split + the isolated-vs-contended gap
+        try:
+            from repro.suite.catalog import contended_probe
+            from repro.suite.runner import collect_records
+
+            if "mess_contended" in module_seconds:
+                contended_block = contended_probe([
+                    r for _, r in collect_records(
+                        suite.workload("mess_contended"), quick=True)])
+            else:
+                contended_block = {"skipped": "mess_contended not selected"}
+        except Exception as e:  # noqa: BLE001 - a broken block must gate
+            contended_block = {"error": f"{type(e).__name__}: {e}"}
         ledger = {
             "suite": "benchmarks.run --smoke",
             "mode": "full" if args.full else "quick",
@@ -625,6 +679,8 @@ def main(argv: list[str] | None = None) -> None:
             "param_path_probe": probe,
             "pallas_probe": pallas_probe,
             "derived": derived_block,
+            "trace": trace_block,
+            "contended": contended_block,
         }
         out = pathlib.Path(args.out)
         out.write_text(json.dumps(ledger, indent=2) + "\n")

@@ -46,11 +46,23 @@
 # attention-derived and one MoE-derived) that ran failure-free with
 # non-degenerate feature vectors (stride entropy / reuse distance /
 # gather fraction all finite, not all zero) and a mined source op.
+# PR-10 adds the trace-replay gates: spatter_ms1 and mess_contended
+# must run in smoke mode; the ledger's `trace` block must show every
+# trace pattern replaying BIT-exactly against the direct numpy replay
+# of its JSON (with both an affine and a value-dependent form present);
+# the `contended` block must show a nonzero per-pattern byte split on
+# every mixed record and a contended/isolated primary-bandwidth ratio
+# visibly below 1 (< 0.9); a committed Spatter capture must replay end
+# to end through `benchmarks.run --pattern-file` (and a malformed file
+# must be rejected up front with the parser's typed reason slug); and a
+# journal-resume pass over both trace workloads must replay every point
+# byte-identically — the trace/mix-aware pattern fingerprints are
+# rebuild-stable, so a resumed sweep trusts its journal.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-LEDGER="${1:-BENCH_PR9.json}"
+LEDGER="${1:-BENCH_PR10.json}"
 
 echo "== tier-1 pytest (fast lane) =="
 python -m pytest -x -q -m "not slow"
@@ -228,6 +240,79 @@ for r in rows:
 print("collective ladder OK: ring accounting matches analyze_collectives")
 EOF2
 
+echo "== trace replay e2e (--pattern-file) =="
+python -m benchmarks.run --pattern-file benchmarks/patterns/spatter_ms1.json \
+    --only trace_spatter_ms1 | tee /tmp/trace_e2e.csv
+python - <<'EOF2'
+import sys
+
+rows = [ln for ln in open("/tmp/trace_e2e.csv") if ln.startswith("trace/")]
+if len(rows) < 4:
+    sys.exit(f"FAIL: --pattern-file replay emitted {len(rows)} rows (< 4)")
+forms = {ln.split("form=")[1].split(";")[0] for ln in rows if "form=" in ln}
+if forms != {"ms1", "uniform"}:
+    sys.exit(f"FAIL: expected ms1+uniform trace rows, got forms {forms}")
+from repro.suite.spatter_io import load_spatter, replay_exact
+for sp in load_spatter("benchmarks/patterns/spatter_ms1.json"):
+    if not replay_exact(sp, n=256):
+        sys.exit(f"FAIL: committed capture entry {sp.entry} ({sp.form}) "
+                 "is not bit-exact against its numpy replay")
+print(f"--pattern-file e2e OK: {len(rows)} rows, forms {sorted(forms)}, "
+      "bit-exact")
+EOF2
+
+echo "== trace replay rejection (malformed --pattern-file) =="
+echo '[{"pattern": [3, -1]}]' > /tmp/bad_spatter.json
+if python -m benchmarks.run --pattern-file /tmp/bad_spatter.json \
+        >/tmp/bad_spatter.out 2>&1; then
+    echo "FAIL: malformed pattern file was accepted"; exit 1
+fi
+grep -q "negative_index" /tmp/bad_spatter.out || {
+    echo "FAIL: rejection lost the typed reason slug:"; \
+    cat /tmp/bad_spatter.out; exit 1; }
+echo "malformed capture rejected with typed reason (negative_index)"
+
+echo "== journal resume gate (trace/mix fingerprints replay byte-identically) =="
+python - <<'EOF2'
+import pathlib, sys, tempfile
+
+from repro.suite import load_builtins, workload
+from repro.suite.runner import collect_report
+
+load_builtins()
+tmp = pathlib.Path(tempfile.mkdtemp(prefix="ci_journal_"))
+for name in ("spatter_ms1", "mess_contended"):
+    w = workload(name)
+    j = str(tmp / f"{name}.jsonl")
+    r1 = collect_report(w, quick=True, journal=j)
+    r1.raise_if_failed()
+    if r1.replayed:
+        sys.exit(f"FAIL: {name} first pass replayed {r1.replayed} points "
+                 "from an empty journal")
+    # second pass rebuilds every factory (fresh closures, fresh specs):
+    # if the trace/mix-aware fingerprints were not rebuild-stable the
+    # journal keys would miss and points would re-measure
+    r2 = collect_report(w, quick=True, journal=j)
+    r2.raise_if_failed()
+    if not r2.rows or r2.replayed != len(r2.rows):
+        sys.exit(f"FAIL: {name} resume replayed {r2.replayed}/"
+                 f"{len(r2.rows)} points — fingerprints not rebuild-stable")
+    rec1 = {(row.variant, row.point.label): row.record for row in r1.rows}
+    for row in r2.rows:
+        a = rec1[(row.variant, row.point.label)]
+        if a != row.record:
+            sys.exit(f"FAIL: {name}/{row.point.label} replayed record "
+                     "differs from the measured one")
+    stamps = [row.record.extra for row in r2.rows]
+    if name == "spatter_ms1" and not all("trace" in e for e in stamps):
+        sys.exit("FAIL: replayed spatter_ms1 records lost extra.trace")
+    if name == "mess_contended" and not all("mix" in e for e in stamps):
+        sys.exit("FAIL: replayed mess_contended records lost extra.mix")
+    print(f"{name}: {r2.replayed}/{len(r2.rows)} points replayed "
+          "byte-identically")
+print("journal resume OK")
+EOF2
+
 echo "== benchmarks.run --smoke (--jobs 4, threadpool backend) =="
 python -m benchmarks.run --smoke --jobs 4 --out "$LEDGER"
 
@@ -245,7 +330,8 @@ if failures:
 seconds = ledger["module_seconds"]
 missing = [s for s in ("mess_load_sweep", "pointer_chase",
                        "spatter_nonuniform", "mess_calibrated",
-                       "device_sweep", "collective_ladder")
+                       "device_sweep", "collective_ladder",
+                       "spatter_ms1", "mess_contended")
            if s not in seconds]
 if missing:
     sys.exit(f"FAIL: multi-axis scenarios did not run: {missing}")
@@ -409,5 +495,53 @@ for name, e in sorted(clean.items()):
           f"entropy {fv['stride_entropy']:.3f}b, reuse "
           f"{fv['reuse_distance']:.2f}, gather {fv['gather_fraction']:.3f}")
 print(f"derived workloads OK: {len(clean)} mined from compiled HLO")
+# trace gate: every trace pattern must replay bit-exactly against the
+# direct numpy replay of its JSON, with both regimes represented
+trace = ledger.get("trace", {})
+if "error" in trace:
+    sys.exit(f"FAIL: trace block did not build: {trace['error']}")
+if "spatter_ms1" not in trace:
+    sys.exit(f"FAIL: trace block has no spatter_ms1 entry: {sorted(trace)}")
+affine_seen, kernel_seen = False, False
+for name, entry in trace.items():
+    if entry.get("failed"):
+        sys.exit(f"FAIL: trace workload {name} failed in the smoke run")
+    pats = entry.get("patterns", [])
+    if not pats:
+        sys.exit(f"FAIL: trace workload {name} reports no patterns")
+    for p in pats:
+        if not p.get("bitexact"):
+            sys.exit(f"FAIL: {name} pattern {p.get('entry')} "
+                     f"({p.get('form')}) is not bit-exact vs numpy replay")
+        if not p.get("pattern_hash"):
+            sys.exit(f"FAIL: {name} pattern {p.get('entry')} has no "
+                     "provenance hash")
+        affine_seen |= bool(p.get("affine"))
+        kernel_seen |= not p.get("affine")
+    print(f"{name}: {len(pats)} pattern(s) bit-exact "
+          f"({entry.get('source')})")
+if not (affine_seen and kernel_seen):
+    sys.exit("FAIL: trace block must cover both the affine and the "
+             f"value-dependent regime (affine={affine_seen}, "
+             f"kernel={kernel_seen})")
+# contended gate: mixed records carry a nonzero per-pattern byte split
+# and the primary's bandwidth under load sits visibly below isolated
+cont = ledger.get("contended", {})
+if "error" in cont or "skipped" in cont:
+    sys.exit(f"FAIL: contended block did not run: {cont}")
+if not cont.get("split_ok"):
+    sys.exit(f"FAIL: contended records lack a nonzero >=2-way "
+             f"per-pattern byte split: {cont}")
+ratio = cont.get("ratio")
+if not isinstance(ratio, (int, float)):
+    sys.exit(f"FAIL: contended block has no isolated/contended pairing: "
+             f"{cont}")
+if ratio >= 0.9:
+    sys.exit(f"FAIL: contended primary bandwidth ratio {ratio:.3f} >= 0.9 "
+             "— the contention curve is not visibly distinct from the "
+             "isolated baseline")
+print(f"contended OK: {cont['records']} mixed records, per-pattern split "
+      f"intact, primary under load at {ratio:.3f}x isolated "
+      f"({cont['contended_gbs']} vs {cont['isolated_gbs']} GB/s)")
 print("OK")
 EOF2

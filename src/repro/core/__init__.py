@@ -37,6 +37,8 @@ from .pattern import (
     jacobi1d,
     jacobi2d,
     jacobi3d,
+    mix_patterns,
+    mix_space,
     nstream,
     pointer_chase,
     scatter,
@@ -94,6 +96,7 @@ __all__ = [
     "triad", "stream_copy", "stream_scale", "stream_sum", "nstream",
     "jacobi1d", "jacobi2d", "jacobi3d",
     "gather", "scatter", "gather_scatter", "pointer_chase",
+    "mix_patterns", "mix_space",
     "lower_jax", "lower_jax_parametric", "lower_pallas", "serial_oracle",
     "plan_nest", "NestPlan", "ParamStridedPlan", "param_strided_plan",
     "windowed_oracle",

@@ -82,7 +82,7 @@ from jax.experimental import pallas as pl
 
 from .domain import Affine
 from .errors import LowerFailure
-from .pattern import Access, PatternSpec
+from .pattern import Access, PatternSpec, mix_space
 from .schedule import (
     LoweredInstance,
     LoweredNest,
@@ -94,7 +94,9 @@ from .schedule import (
 
 __all__ = [
     "serial_oracle",
+    "replay_component",
     "lower_jax",
+    "lower_mix",
     "lower_jax_parametric",
     "lower_pallas",
     "lower_pallas_parametric",
@@ -268,6 +270,53 @@ def serial_oracle(
             widx = tuple(Affine.of(ix).eval(scope) for ix in stmt.write.index)
             arrays[stmt.write.space][widx] = res
     return arrays
+
+
+def replay_component(comp: PatternSpec, arrays: dict[str, np.ndarray],
+                     env: Mapping[str, int], ntimes: int = 1) -> dict:
+    """Numpy ground truth for ONE mix component: its own oracle when it
+    carries one (value-dependent components), else the serial oracle
+    over its identity nest. Mix components execute under the identity
+    schedule inside the fused step, so the identity nest is exactly what
+    :func:`lower_mix` runs."""
+    from .schedule import identity
+
+    if comp.oracle is not None:
+        return comp.oracle(comp, arrays, env, ntimes)
+    nest = identity().lower(comp.domain, env)
+    return serial_oracle(comp, nest, arrays, env, ntimes=ntimes)
+
+
+def lower_mix(pattern: PatternSpec, components: tuple) -> Callable:
+    """Build the fused step of a :func:`~repro.core.pattern.mix_patterns`
+    spec: every component's own step (affine statements lower through
+    :func:`lower_jax`; custom-kernel components contribute their kernel)
+    runs once per sweep against its ``m{k}_``-namespaced slice of the
+    array dict, inside ONE jitted executable — the access streams share
+    the compiled program, so the fused ``ntimes`` repetition loop
+    alternates the components' sweeps through the memory system.
+
+    ``components`` is the concretized ``(label, spec, env)`` tuple the
+    mix kernel closed over (each component's env is baked — mixes always
+    specialize, like every custom-kernel pattern).
+    """
+    from .schedule import identity
+
+    steps = tuple(
+        (k, comp, lower_jax(comp, identity(), cenv))
+        for k, (_label, comp, cenv) in enumerate(components)
+    )
+
+    def step(arrays):
+        arrays = dict(arrays)
+        for k, comp, st in steps:
+            sub = {s.name: arrays[mix_space(k, s.name)] for s in comp.spaces}
+            sub = st(sub)
+            for s in comp.spaces:
+                arrays[mix_space(k, s.name)] = sub[s.name]
+        return arrays
+
+    return step
 
 
 def _oracle_plan(pattern: PatternSpec, nest: LoweredNest,

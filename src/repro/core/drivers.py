@@ -749,6 +749,15 @@ class Driver:
         pts = pat.domain.point_count(env)
         bpp = pat.bytes_per_point()
         total_bytes = bpp * pts * cfg.ntimes
+        mix_extra: dict = {}
+        if pat.mix is not None:
+            # multi-pattern mixes: the statement accounts the primary
+            # component only; total traffic is every component's bytes,
+            # and the per-component split rides into extra["mix"]
+            comps = [dict(c) for c in pat.mix["components"]]
+            total_bytes = sum(c["bytes"] for c in comps) * cfg.ntimes
+            mix_extra = {"mix": {"primary": pat.mix["primary"],
+                                 "components": comps}}
         ws_bytes = sum(
             int(np.prod(s.concrete_shape(env)))
             * np.dtype(s.dtype).itemsize
@@ -787,6 +796,9 @@ class Driver:
                    if cfg.backend == "pallas" else {}),
                 **({"derived": dict(pat.derived)}
                    if pat.derived is not None else {}),
+                **({"trace": dict(pat.trace)}
+                   if pat.trace is not None else {}),
+                **mix_extra,
                 **({"capacity": int(p.lowered.cap_env["n"]),
                     "param_window_rank": int(
                         p.compiled.param_window_rank)}

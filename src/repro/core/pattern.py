@@ -31,6 +31,8 @@ __all__ = [
     "Access",
     "Statement",
     "PatternSpec",
+    "mix_patterns",
+    "mix_space",
     "triad",
     "stream_copy",
     "stream_scale",
@@ -107,6 +109,17 @@ class PatternSpec:
     # every record's ``extra["derived"]`` so hand-written and
     # application-derived records classify across origins.
     derived: Mapping[str, object] | None = None
+    # Provenance of trace-driven patterns (``repro.suite.spatter_io``):
+    # ``{source, pattern_hash, form}``. Drivers merge it into every
+    # record's ``extra["trace"]`` so replayed traces stay attributable to
+    # the JSON file (and pattern) they came from.
+    trace: Mapping[str, object] | None = None
+    # Multi-pattern mix accounting (``mix_patterns``): ``{primary,
+    # components: ({label, pattern, points, bytes, fraction}, ...)}``
+    # where ``bytes`` is per sweep. When set, drivers total the
+    # components' bytes (the statement accounts the primary only) and
+    # stamp the split into ``extra["mix"]``.
+    mix: Mapping[str, object] | None = None
 
     def space(self, name: str) -> DataSpace:
         for s in self.spaces:
@@ -309,6 +322,150 @@ def gather_scatter(stride: int = 8) -> PatternSpec:
         stmt,
         domain(("i", 0, "n")),
         flops_per_point=0,
+    )
+
+
+# -- concurrent multi-pattern mixes (the Mess contention primitive) ----------
+#
+# Mess (arXiv 2405.10170) argues that *contended* curves — a measured
+# kernel sharing the memory system with generator traffic — predict
+# application behavior where isolated kernels do not. ``mix_patterns``
+# composes >= 2 PatternSpecs into ONE executable: each component keeps
+# its own (namespaced) data spaces, every fused sweep runs every
+# component's step, and the whole mix is timed as a unit, so the access
+# streams contend for the same caches and memory channels for the full
+# measurement. Per-component byte accounting rides ``PatternSpec.mix``
+# into every record's ``extra["mix"]``.
+
+
+def mix_space(k: int, name: str) -> str:
+    """The namespaced array name of component ``k``'s space ``name``."""
+    return f"m{k}_{name}"
+
+
+def _concrete_component(spec: PatternSpec, env: Mapping[str, int]) -> PatternSpec:
+    """Bake a component's symbolic shapes/bounds to ints under its own
+    env, so components with *different* working sets coexist under the
+    mix's single driver env."""
+    from .domain import Dim
+
+    try:
+        spaces = tuple(
+            dataclasses.replace(s, shape=s.concrete_shape(env))
+            for s in spec.spaces
+        )
+        dims = tuple(
+            Dim.of(d.name, d.lo.eval(env), d.hi.eval(env))
+            for d in spec.domain.dims
+        )
+    except KeyError as e:
+        raise ValueError(
+            f"mix component {spec.name!r} is not rectangular under "
+            f"{dict(env)!r} (unbound symbol {e}); mixes need "
+            "parameter-bound rectangular domains"
+        ) from None
+    return dataclasses.replace(spec, spaces=spaces, domain=IterDomain(dims))
+
+
+def _mix_kernel(components: tuple) -> Callable:
+    def kernel(pattern, env):
+        from .codegen import lower_mix
+
+        return lower_mix(pattern, components)
+
+    return kernel
+
+
+def _mix_oracle(components: tuple) -> Callable:
+    def oracle(pattern, arrays, env, ntimes):
+        from .codegen import replay_component
+
+        out = {k: np.array(v) for k, v in arrays.items()}
+        for k, (_label, comp, cenv) in enumerate(components):
+            sub = {s.name: out[mix_space(k, s.name)] for s in comp.spaces}
+            sub = replay_component(comp, sub, cenv, int(ntimes))
+            for s in comp.spaces:
+                out[mix_space(k, s.name)] = np.asarray(sub[s.name])
+        return out
+
+    return oracle
+
+
+def mix_patterns(
+    components: Sequence[tuple],
+    name: str = "mix",
+    primary: str | None = None,
+    trace: Mapping[str, object] | None = None,
+) -> PatternSpec:
+    """Compose patterns into one executable contending for memory.
+
+    ``components`` is a sequence of ``(label, PatternSpec, env)`` tuples;
+    each component is concretized under its *own* env (so a traffic
+    generator can run a different working set than the measured kernel)
+    and its spaces are renamed ``m{k}_<space>`` to keep the namespaces
+    disjoint. The composed spec carries a custom kernel that runs every
+    component's lowered step once per sweep (components alternate inside
+    the fused ``ntimes`` loop — fine-grained temporal interleaving) and a
+    numpy oracle replaying each component independently (disjoint spaces
+    make the replay order immaterial).
+
+    ``primary`` names the measured component (default: the first); its
+    statement/domain provide the mix's nominal statement, and drivers
+    report both the aggregate GB/s (all components' bytes over the
+    shared wall time) and the per-component byte split
+    (``extra["mix"]``) from which primary-bandwidth-under-load derives.
+    Custom kernels must run ``template="unified"``/``programs=1``.
+    """
+    comps = tuple(
+        (str(label), _concrete_component(spec, dict(env)), dict(env))
+        for label, spec, env in components
+    )
+    if not comps:
+        raise ValueError("mix_patterns needs at least one component")
+    labels = [label for label, _, _ in comps]
+    if len(set(labels)) != len(labels):
+        raise ValueError(f"duplicate component labels: {labels}")
+    primary = primary if primary is not None else labels[0]
+    if primary not in labels:
+        raise ValueError(f"primary {primary!r} not among {labels}")
+    entries = []
+    for label, comp, cenv in comps:
+        pts = comp.domain.point_count(cenv)
+        entries.append({
+            "label": label,
+            "pattern": comp.name,
+            "points": int(pts),
+            "bytes": int(comp.bytes_per_point() * pts),
+        })
+    total = sum(e["bytes"] for e in entries)
+    for e in entries:
+        e["fraction"] = (e["bytes"] / total) if total else 0.0
+    pk = labels.index(primary)
+    prim = comps[pk][1]
+    spaces = tuple(
+        dataclasses.replace(s, name=mix_space(k, s.name))
+        for k, (_, comp, _) in enumerate(comps)
+        for s in comp.spaces
+    )
+    stmt = Statement(
+        reads=tuple(
+            Access(mix_space(pk, a.space), a.index)
+            for a in prim.statement.reads
+        ),
+        write=Access(mix_space(pk, prim.statement.write.space),
+                     prim.statement.write.index),
+        combine=prim.statement.combine,
+    )
+    return PatternSpec(
+        name=name,
+        spaces=spaces,
+        statement=stmt,
+        domain=prim.domain,
+        flops_per_point=prim.flops_per_point,
+        kernel=_mix_kernel(comps),
+        oracle=_mix_oracle(comps),
+        trace=trace,
+        mix={"primary": primary, "components": tuple(entries)},
     )
 
 

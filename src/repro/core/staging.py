@@ -112,6 +112,11 @@ def _freeze(obj: Any) -> Any:
         return tuple(_freeze(x) for x in obj)
     if isinstance(obj, dict):
         return tuple(sorted((str(k), _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, PatternSpec):
+        # specs captured in closures (mix components) must freeze
+        # *structurally* — the frozen-dataclass hash below would compare
+        # their lambdas by identity, splitting equal factory rebuilds
+        return fingerprint_pattern(obj)
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
         try:
             hash(obj)
@@ -149,6 +154,8 @@ def fingerprint_pattern(pattern: PatternSpec) -> tuple:
         _freeze(pattern.kernel),
         _freeze(pattern.oracle),
         _freeze(pattern.derived),
+        _freeze(pattern.trace),
+        _freeze(pattern.mix),
     )
 
 

@@ -62,6 +62,14 @@ from .engine import (
     run_plan,
 )
 from .journal import RunJournal, stable_fingerprint
+from .spatter_io import (
+    SpatterParseError,
+    SpatterPattern,
+    load_spatter,
+    parse_spatter,
+    replay_exact,
+    trace_workload,
+)
 from .runner import (
     collect_records,
     collect_report,
@@ -83,6 +91,8 @@ __all__ = [
     "PlanRow", "RunReport", "run_plan",
     "ExecutionBackend", "SerialBackend", "ThreadPoolBackend",
     "RunJournal", "stable_fingerprint",
+    "SpatterParseError", "SpatterPattern", "parse_spatter", "load_spatter",
+    "replay_exact", "trace_workload",
     "run_workload", "run_module", "collect_records", "collect_report",
     "csv_line", "emit",
     "collective_runner", "collective_sizes", "expected_wire_bytes",

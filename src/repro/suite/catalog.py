@@ -33,6 +33,7 @@ from repro.core import (
     jacobi2d,
     jacobi3d,
     latency_ns,
+    mix_patterns,
     nstream,
     pointer_chase,
     scatter,
@@ -464,6 +465,102 @@ register(Workload(
         pattern_axis("stride", (1, 4, 16, 64), (1, 2, 4, 8, 16, 32, 64, 128)),
         env_axis((1 << 10, 1 << 14), (1 << 10, 1 << 12, 1 << 14, 1 << 16)),
     ),
+))
+
+
+# -- mess_contended: multi-pattern mixes contending for the memory system ----
+# Mess's contention methodology (arXiv 2405.10170): the pattern under
+# study runs while traffic generators load the same memory system, and
+# the interesting number is the *primary's* achieved bandwidth as the
+# background load rises. ``mix_patterns`` composes a streaming triad
+# (the primary) with a random-ish strided gather (the generator) into
+# ONE executable — the components interleave inside the fused sweep
+# loop, contending for the same bandwidth — and the ``ratio``
+# pattern-axis scales the generator's footprint from 0 (isolated
+# baseline, same machinery) upward. Records carry the per-pattern byte
+# split in ``extra["mix"]``; the derived column prices the primary
+# under load.
+
+def _contended_mix(env, ratio: int = 1):
+    n = int(env["n"])
+    comps = [("triad", triad(), {"n": n})]
+    if ratio > 0:
+        comps.append(("gather", gather(stride=8),
+                      {"n": max(1, (ratio * n) // 4)}))
+    return mix_patterns(comps, name=f"contended_r{ratio}", primary="triad")
+
+
+def _contended_derived(rec: Record) -> str:
+    mix = rec.extra.get("mix")
+    if not mix:
+        return f"{rec.gbs:.3f}GB/s"
+    comps = {c["label"]: c for c in mix["components"]}
+    prim = comps[mix["primary"]]
+    primary_gbs = prim["bytes"] * rec.ntimes / rec.seconds / 1e9
+    return (f"primary={mix['primary']};primary_gbs={primary_gbs:.3f};"
+            f"total_gbs={rec.gbs:.3f};parts={len(comps)}")
+
+
+def contended_probe(records) -> dict:
+    """Ledger summary of the contention study: isolated (ratio=0) vs
+    most-contended primary bandwidth at matching working sets, plus the
+    per-pattern byte-split integrity check CI gates on."""
+    def primary_gbs(rec):
+        comps = {c["label"]: c for c in rec.extra["mix"]["components"]}
+        prim = comps[rec.extra["mix"]["primary"]]
+        return prim["bytes"] * rec.ntimes / rec.seconds / 1e9
+
+    mixed = [r for r in records if r.extra.get("mix")]
+    split_ok = all(
+        len(r.extra["mix"]["components"]) >= 2
+        and all(c["bytes"] > 0 for c in r.extra["mix"]["components"])
+        for r in mixed if len(r.extra["mix"]["components"]) >= 2)
+    by_n: dict[int, dict[str, float]] = {}
+    for r in mixed:
+        slot = by_n.setdefault(r.n, {})
+        parts = len(r.extra["mix"]["components"])
+        if parts == 1:
+            slot["isolated"] = primary_gbs(r)
+        else:
+            load = sum(c["bytes"] for c in r.extra["mix"]["components"])
+            if load >= slot.get("_load", 0):
+                slot["_load"] = load
+                slot["contended"] = primary_gbs(r)
+    paired = {n: s for n, s in by_n.items()
+              if "isolated" in s and "contended" in s and s["isolated"] > 0}
+    # headline pair = the largest working set: contention is a
+    # memory-system effect, and cache-resident rungs time as noise
+    worst = paired[max(paired)] if paired else None
+    return {
+        "records": len(mixed),
+        "split_ok": bool(split_ok and any(
+            len(r.extra["mix"]["components"]) >= 2 for r in mixed)),
+        "isolated_gbs": round(worst["isolated"], 3) if worst else 0.0,
+        "contended_gbs": round(worst["contended"], 3) if worst else 0.0,
+        "ratio": (round(worst["contended"] / worst["isolated"], 4)
+                  if worst else None),
+    }
+
+
+register(Workload(
+    name="mess_contended",
+    figure="mess",
+    title="contended multi-pattern mix: triad under rising gather load",
+    tags=("mess", "trace"),
+    pattern=_contended_mix,
+    variants=(
+        VariantSpec("mix", DriverConfig(
+            template="unified", programs=1, ntimes=4, reps=3,
+            target_cv=0.2, max_reps=12, validate_n=64)),
+    ),
+    plan=SweepPlan.product(
+        pattern_axis("ratio", (0, 2, 4), (0, 1, 2, 4)),
+        # the top rung must leave cache: contention is a memory-system
+        # effect, and cache-resident mixes time as pure noise
+        env_axis((1 << 14, 1 << 20), (1 << 12, 1 << 16, 1 << 20)),
+    ),
+    parametric=False,          # mix kernel bakes component envs into the step
+    derived=_contended_derived,
 ))
 
 

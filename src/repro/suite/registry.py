@@ -49,5 +49,7 @@ def load_builtins() -> None:
     """Import the built-in declarative entries (idempotent)."""
     from . import catalog as _builtin  # noqa: F401
     from . import derived as _derived
+    from . import spatter_io as _spatter
 
     _derived.register_derived()
+    _spatter.register_trace()

@@ -1,0 +1,580 @@
+"""Trace-driven Spatter pattern replay (arXiv 1811.03743).
+
+Spatter captures application gather/scatter behaviour as JSON pattern
+files; AdaptMemBench's thesis is that such captured patterns should
+*replay through the same drivers* as the synthetic suite. This module is
+the bridge: it parses the three Spatter pattern forms —
+
+``UNIFORM:<len>:<stride>``
+    constant-stride runs (Spatter's ``-p UNIFORM:8:4``),
+``MS1:<len>:<breaks>:<gaps>``
+    mostly-stride-1 runs with gap jumps at break positions
+    (``MS1:16:4,8,12:32``), and
+explicit JSON index lists
+    (``"pattern": [0, 8, 2, 8, 33]``),
+
+into :class:`SpatterPattern` records, then lowers each onto the cheapest
+viable regime: patterns whose full replay trace ``I[k] = indices[k % L]
++ delta * (k // L)`` is affine in ``k`` become ordinary strided
+:class:`PatternSpec`s (riding the parametric / Pallas fast paths), while
+value-dependent traces ride the ``PatternSpec.kernel`` hook with a bound
+index space and a numpy index-replay oracle — the same escape hatch the
+pointer chase uses. Every produced spec carries ``trace`` provenance
+(``{source, pattern_hash, form}``) which the drivers stamp into each
+record's ``extra["trace"]``, so a measurement stays attributable to the
+JSON file (and the exact index sequence) it came from.
+
+Malformed files fail with :class:`SpatterParseError` carrying a stable
+``reason`` slug — a typed rejection, never a stack trace from deep
+inside numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import (
+    Access,
+    Affine,
+    DataSpace,
+    DriverConfig,
+    PatternSpec,
+    Record,
+    Statement,
+    domain,
+)
+
+from .axes import SweepPlan, env_axis
+from .journal import stable_fingerprint
+from .registry import register
+from .workload import VariantSpec, Workload
+
+__all__ = [
+    "MAX_PATTERN_LEN",
+    "SpatterParseError",
+    "SpatterPattern",
+    "parse_spatter",
+    "load_spatter",
+    "replay_exact",
+    "trace_workload",
+    "trace_report",
+    "register_trace",
+]
+
+# Refuse pathological captures before allocating anything: one pattern
+# entry may not exceed 2^20 indices.
+MAX_PATTERN_LEN = 1 << 20
+
+_KERNELS = ("gather", "scatter")
+
+
+class SpatterParseError(ValueError):
+    """A rejected Spatter JSON file.
+
+    ``reason`` is a stable slug (``invalid_json``, ``bad_entry``,
+    ``unknown_kernel``, ``bad_pattern``, ``bad_ms1``,
+    ``negative_index``, ``empty_pattern``, ``oversized``) so callers and
+    tests can branch on the failure class without string-matching the
+    human message.
+    """
+
+    def __init__(self, reason: str, message: str, source: str = "<string>",
+                 entry: int | None = None):
+        where = source if entry is None else f"{source}[{entry}]"
+        super().__init__(f"{where}: {message} [{reason}]")
+        self.reason = reason
+        self.source = source
+        self.entry = entry
+
+
+def _want_int(val: object, what: str, source: str, entry: int | None,
+              reason: str = "bad_pattern") -> int:
+    if isinstance(val, bool) or not isinstance(val, int):
+        if isinstance(val, str):
+            try:
+                return int(val, 10)
+            except ValueError:
+                pass
+        raise SpatterParseError(
+            reason, f"{what} must be an integer, got {val!r}", source, entry)
+    return int(val)
+
+
+def _ints_field(text: str, what: str, source: str, entry: int | None,
+                reason: str = "bad_pattern") -> list[int]:
+    return [_want_int(p.strip(), what, source, entry, reason)
+            for p in text.split(",") if p.strip() != ""]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatterPattern:
+    """One parsed Spatter pattern entry, replayable through the suite."""
+
+    source: str                  # file path or caller-supplied tag
+    entry: int                   # position in the JSON file
+    kernel: str                  # "gather" | "scatter"
+    form: str                    # "uniform" | "ms1" | "index"
+    indices: tuple[int, ...]     # one period of the index pattern
+    delta: int                   # per-period base advance (Spatter -d)
+    count: int = 1               # informational (Spatter -l)
+
+    @property
+    def length(self) -> int:
+        return len(self.indices)
+
+    @property
+    def affine_stride(self) -> tuple[int, int] | None:
+        """``(stride, offset)`` when the *full replay trace* is affine.
+
+        The trace ``I[k] = indices[k % L] + delta * (k // L)`` collapses
+        to ``offset + k * stride`` iff the within-period diffs are one
+        constant ``d >= 1`` AND the period-wrap diff
+        ``indices[0] + delta - indices[-1]`` equals the same ``d``.
+        """
+        idx = self.indices
+        if len(idx) == 1:
+            d = self.delta
+            return (d, idx[0]) if d >= 1 else None
+        diffs = {idx[j + 1] - idx[j] for j in range(len(idx) - 1)}
+        if len(diffs) != 1:
+            return None
+        d = diffs.pop()
+        if d < 1 or idx[0] + self.delta - idx[-1] != d:
+            return None
+        return (d, idx[0])
+
+    @property
+    def pattern_hash(self) -> str:
+        """Process-stable content hash of the replayed index semantics."""
+        return stable_fingerprint({
+            "kernel": self.kernel, "form": self.form,
+            "indices": self.indices, "delta": self.delta,
+        })
+
+    @property
+    def trace_stamp(self) -> dict[str, str]:
+        """The provenance dict stamped into ``extra["trace"]``."""
+        return {"source": self.source, "pattern_hash": self.pattern_hash,
+                "form": self.form}
+
+    def replay_indices(self, n: int) -> np.ndarray:
+        """The exact index trace of one ``n``-point sweep, wrapped into a
+        target space of ``n`` elements (the value-dependent regime)."""
+        k = np.arange(int(n), dtype=np.int64)
+        idx = np.asarray(self.indices, dtype=np.int64)
+        L = len(idx)
+        return ((idx[k % L] + self.delta * (k // L)) % int(n)).astype(np.int64)
+
+    def pattern_spec(self) -> PatternSpec:
+        """Lower onto the cheapest viable regime: an ordinary strided
+        spec when the trace is affine, else a bound-index kernel spec
+        with a numpy replay oracle."""
+        name = f"trace_{self.kernel}_{self.form}_{self.pattern_hash[:8]}"
+        aff = self.affine_stride
+        if aff is not None:
+            return _affine_spec(self.kernel, *aff, name=name,
+                                trace=self.trace_stamp)
+        return _replay_spec(self, name=name, trace=self.trace_stamp)
+
+
+def _affine_spec(kind: str, stride: int, offset: int, *, name: str,
+                 trace: Mapping[str, str]) -> PatternSpec:
+    """Strided gather/scatter with a base offset: the affine regime."""
+    i = Affine.of("i")
+    sub = i * stride + offset if offset else i * stride
+    # S must cover offset + (n-1)*stride; n*stride + (offset-stride+1)
+    # is exact and stays affine in n.
+    tail = offset - stride + 1
+    sshape = Affine.of("n") * stride + tail if tail else Affine.of("n") * stride
+    if kind == "gather":
+        stmt = Statement(
+            reads=(Access("S", (sub,)),),
+            write=Access("D", (i,)),
+            combine=lambda vals, env: vals[0],
+        )
+        spaces = (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("S", (sshape,), "float32",
+                      lambda i: (i % 23).astype(np.float32)),
+        )
+    else:
+        stmt = Statement(
+            reads=(Access("D", (i,)),),
+            write=Access("S", (sub,)),
+            combine=lambda vals, env: vals[0],
+        )
+        spaces = (
+            DataSpace("D", ("n",), "float32",
+                      lambda i: (i % 19).astype(np.float32)),
+            DataSpace("S", (sshape,), "float32", 0.0),
+        )
+    return PatternSpec(name, spaces, stmt, domain(("i", 0, "n")),
+                       flops_per_point=0, trace=dict(trace))
+
+
+def _trace_kernel(kind: str):
+    def kernel(pattern: PatternSpec, env: Mapping[str, int]):
+        def step(arrays):
+            arrays = dict(arrays)
+            if kind == "gather":
+                arrays["D"] = arrays["S"][arrays["I"]]
+            else:
+                arrays["S"] = arrays["S"].at[arrays["I"]].add(arrays["D"])
+            return arrays
+        return step
+    return kernel
+
+
+def _trace_oracle(kind: str):
+    def oracle(pattern: PatternSpec, arrays: Mapping[str, np.ndarray],
+               env: Mapping[str, int], ntimes: int) -> dict:
+        out = {k: np.array(v) for k, v in arrays.items()}
+        for _ in range(int(ntimes)):
+            if kind == "gather":
+                out["D"] = out["S"][out["I"]]
+            else:
+                np.add.at(out["S"], out["I"], out["D"])
+        return out
+    return oracle
+
+
+def _replay_spec(sp: SpatterPattern, *, name: str,
+                 trace: Mapping[str, str]) -> PatternSpec:
+    """Value-dependent regime: the replayed index trace is bound into an
+    ``I`` space at allocation time; a custom kernel performs the
+    indirection (``D = S[I]`` / ``S[I] += D``) and the oracle replays it
+    in numpy. The statement is the nominal 12 B/point accounting (index
+    read + payload read + payload write)."""
+    idx = np.asarray(sp.indices, dtype=np.int64)
+    L = len(idx)
+    delta = int(sp.delta)
+
+    def init_indices(i: np.ndarray) -> np.ndarray:
+        return ((idx[i % L] + delta * (i // L)) % len(i)).astype(np.int32)
+
+    if sp.kernel == "gather":
+        stmt = Statement(
+            reads=(Access("S", ("i",)), Access("I", ("i",))),
+            write=Access("D", ("i",)),
+            combine=lambda vals, env: vals[0],
+        )
+        payload = (
+            DataSpace("D", ("n",), "float32", 0.0),
+            DataSpace("S", ("n",), "float32",
+                      lambda i: (i % 23).astype(np.float32)),
+        )
+    else:
+        stmt = Statement(
+            reads=(Access("D", ("i",)), Access("I", ("i",))),
+            write=Access("S", ("i",)),
+            combine=lambda vals, env: vals[0],
+        )
+        payload = (
+            DataSpace("D", ("n",), "float32",
+                      lambda i: (i % 19).astype(np.float32)),
+            DataSpace("S", ("n",), "float32", 0.0),
+        )
+    spaces = payload + (DataSpace("I", ("n",), "int32", init_indices),)
+    return PatternSpec(name, spaces, stmt, domain(("i", 0, "n")),
+                       flops_per_point=0,
+                       kernel=_trace_kernel(sp.kernel),
+                       oracle=_trace_oracle(sp.kernel),
+                       trace=dict(trace))
+
+
+# -- the parser --------------------------------------------------------------
+
+def _parse_pattern_string(pat: str, source: str, entry: int
+                          ) -> tuple[str, list[int]]:
+    parts = pat.split(":")
+    head = parts[0].strip().upper()
+    if head == "UNIFORM":
+        if len(parts) != 3:
+            raise SpatterParseError(
+                "bad_pattern", f"UNIFORM takes 2 fields, got {pat!r}",
+                source, entry)
+        length = _want_int(parts[1].strip(), "UNIFORM length", source, entry)
+        stride = _want_int(parts[2].strip(), "UNIFORM stride", source, entry)
+        if stride < 0:
+            raise SpatterParseError(
+                "negative_index", f"negative stride {stride}", source, entry)
+        if length < 1:
+            raise SpatterParseError(
+                "empty_pattern", f"UNIFORM length {length} < 1", source, entry)
+        if length > MAX_PATTERN_LEN:
+            raise SpatterParseError(
+                "oversized", f"UNIFORM length {length} exceeds "
+                f"MAX_PATTERN_LEN={MAX_PATTERN_LEN}", source, entry)
+        return "uniform", [j * stride for j in range(length)]
+    if head == "MS1":
+        if len(parts) != 4:
+            raise SpatterParseError(
+                "bad_ms1", f"MS1 takes 3 fields, got {pat!r}", source, entry)
+        length = _want_int(parts[1].strip(), "MS1 length", source, entry,
+                           "bad_ms1")
+        breaks = _ints_field(parts[2], "MS1 break", source, entry, "bad_ms1")
+        gaps = _ints_field(parts[3], "MS1 gap", source, entry, "bad_ms1")
+        if length < 1:
+            raise SpatterParseError(
+                "empty_pattern", f"MS1 length {length} < 1", source, entry)
+        if length > MAX_PATTERN_LEN:
+            raise SpatterParseError(
+                "oversized", f"MS1 length {length} exceeds "
+                f"MAX_PATTERN_LEN={MAX_PATTERN_LEN}", source, entry)
+        if not breaks or not gaps:
+            raise SpatterParseError(
+                "bad_ms1", "MS1 needs at least one break and one gap",
+                source, entry)
+        if len(gaps) == 1:
+            gaps = gaps * len(breaks)
+        if len(gaps) != len(breaks):
+            raise SpatterParseError(
+                "bad_ms1",
+                f"{len(breaks)} breaks but {len(gaps)} gaps", source, entry)
+        if breaks != sorted(set(breaks)) or breaks[0] < 1 \
+                or breaks[-1] >= length:
+            raise SpatterParseError(
+                "bad_ms1",
+                f"breaks must be strictly increasing in [1, {length - 1}], "
+                f"got {breaks}", source, entry)
+        gap_at = dict(zip(breaks, gaps))
+        out = [0]
+        for j in range(1, length):
+            out.append(out[-1] + gap_at.get(j, 1))
+        return "ms1", out
+    raise SpatterParseError(
+        "bad_pattern", f"unrecognized pattern string {pat!r} "
+        "(expected UNIFORM:<len>:<stride>, MS1:<len>:<breaks>:<gaps>, "
+        "or an index list)", source, entry)
+
+
+def _parse_entry(obj: object, entry: int, source: str) -> SpatterPattern:
+    if not isinstance(obj, Mapping):
+        raise SpatterParseError(
+            "bad_entry", f"entry must be an object, got {type(obj).__name__}",
+            source, entry)
+    kernel = str(obj.get("kernel", "gather")).strip().lower()
+    if kernel not in _KERNELS:
+        raise SpatterParseError(
+            "unknown_kernel", f"kernel {obj.get('kernel')!r} not in "
+            f"{_KERNELS}", source, entry)
+    pat = obj.get("pattern")
+    if pat is None:
+        raise SpatterParseError(
+            "bad_entry", "entry has no 'pattern' field", source, entry)
+    if isinstance(pat, str):
+        form, indices = _parse_pattern_string(pat, source, entry)
+    elif isinstance(pat, Sequence):
+        form = "index"
+        indices = [_want_int(v, "pattern index", source, entry) for v in pat]
+    else:
+        raise SpatterParseError(
+            "bad_pattern", f"pattern must be a string or list, got "
+            f"{type(pat).__name__}", source, entry)
+    if not indices:
+        raise SpatterParseError(
+            "empty_pattern", "pattern has no indices", source, entry)
+    if len(indices) > MAX_PATTERN_LEN:
+        raise SpatterParseError(
+            "oversized", f"pattern length {len(indices)} exceeds "
+            f"MAX_PATTERN_LEN={MAX_PATTERN_LEN}", source, entry)
+    neg = [v for v in indices if v < 0]
+    if neg:
+        raise SpatterParseError(
+            "negative_index", f"negative indices {neg[:4]}", source, entry)
+    if "delta" in obj:
+        delta = _want_int(obj["delta"], "delta", source, entry, "bad_entry")
+        if delta < 0:
+            raise SpatterParseError(
+                "negative_index", f"negative delta {delta}", source, entry)
+    elif form == "uniform":
+        # the natural seamless continuation of a constant-stride run
+        delta = indices[-1] - indices[0] + (indices[1] - indices[0]
+                                            if len(indices) > 1 else 1)
+    else:
+        delta = max(indices) + 1
+    count = _want_int(obj.get("count", 1), "count", source, entry, "bad_entry")
+    return SpatterPattern(source=source, entry=entry, kernel=kernel,
+                          form=form, indices=tuple(indices), delta=delta,
+                          count=max(1, count))
+
+
+def parse_spatter(text: str, source: str = "<string>"
+                  ) -> tuple[SpatterPattern, ...]:
+    """Parse Spatter JSON text into :class:`SpatterPattern` records.
+
+    Accepts the standard top-level list of entries (or a single bare
+    entry object). Raises :class:`SpatterParseError` with a stable
+    ``reason`` slug on any malformed input.
+    """
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise SpatterParseError(
+            "invalid_json", f"not valid JSON: {e}", source) from None
+    if isinstance(doc, Mapping):
+        doc = [doc]
+    if not isinstance(doc, list):
+        raise SpatterParseError(
+            "bad_entry", f"top level must be a list of pattern entries, "
+            f"got {type(doc).__name__}", source)
+    if not doc:
+        raise SpatterParseError(
+            "empty_pattern", "file contains no pattern entries", source)
+    return tuple(_parse_entry(obj, k, source) for k, obj in enumerate(doc))
+
+
+def load_spatter(path: str | Path) -> tuple[SpatterPattern, ...]:
+    """Parse a Spatter JSON pattern file from disk."""
+    p = Path(path)
+    try:
+        text = p.read_text()
+    except OSError as e:
+        raise SpatterParseError(
+            "bad_entry", f"cannot read pattern file: {e}", str(p)) from None
+    return parse_spatter(text, source=str(p))
+
+
+def replay_exact(sp: SpatterPattern, n: int = 256) -> bool:
+    """Bit-exact check: allocate the spec's spaces, run its own oracle
+    for one sweep, and compare the moved payload against a direct numpy
+    replay of the JSON semantics. Exact equality — pure data movement
+    (and ordered accumulation) must not perturb a single bit."""
+    spec = sp.pattern_spec()
+    env = {"n": int(n)}
+    arrays = spec.allocate(env)
+    if spec.oracle is not None:
+        done = spec.oracle(spec, arrays, env, 1)
+        trace = sp.replay_indices(n)
+        if sp.kernel == "gather":
+            want = np.asarray(arrays["S"])[trace]
+            return bool(np.array_equal(np.asarray(done["D"]), want))
+        want = np.array(arrays["S"])
+        np.add.at(want, trace, np.asarray(arrays["D"]))
+        return bool(np.array_equal(np.asarray(done["S"]), want))
+    # affine regime: replay the strided statement directly
+    from repro.core import identity, serial_oracle
+    stride, offset = sp.affine_stride
+    done = serial_oracle(spec, identity().lower(spec.domain, env), arrays,
+                         env, ntimes=1)
+    k = np.arange(int(n), dtype=np.int64)
+    if sp.kernel == "gather":
+        want = np.asarray(arrays["S"])[k * stride + offset]
+        return bool(np.array_equal(np.asarray(done["D"]), want))
+    want = np.array(arrays["S"])
+    want[k * stride + offset] = np.asarray(arrays["D"])
+    return bool(np.array_equal(np.asarray(done["S"]), want))
+
+
+# -- the registry face -------------------------------------------------------
+
+# every trace workload registered in this process (the builtin plus any
+# --pattern-file registrations), for the smoke ledger's trace block
+_REGISTERED_TRACES: dict[str, tuple[SpatterPattern, ...]] = {}
+
+def _trace_derived(rec: Record) -> str:
+    t = rec.extra.get("trace", {})
+    return (f"form={t.get('form', '?')};hash={t.get('pattern_hash', '')[:8]};"
+            f"{rec.gbs:.3f}GB/s")
+
+
+def _trace_config(sp: SpatterPattern) -> DriverConfig:
+    """Custom-kernel specs need the unified single-program template;
+    affine ones take the ordinary multi-program strided config."""
+    if sp.affine_stride is None:
+        return DriverConfig(template="unified", programs=1, ntimes=4,
+                            reps=2, validate_n=256)
+    return DriverConfig(template="unified", programs=4, ntimes=8, reps=2)
+
+
+def _trace_variants(pats: Sequence[SpatterPattern],
+                    labels: Sequence[str] | None = None
+                    ) -> tuple[VariantSpec, ...]:
+    out = []
+    for k, sp in enumerate(pats):
+        lbl = labels[k] if labels else f"p{k}_{sp.kernel}_{sp.form}"
+        out.append(VariantSpec(lbl, _trace_config(sp),
+                               pattern=lambda env, sp=sp: sp.pattern_spec()))
+    return tuple(out)
+
+
+def trace_workload(path: str | Path, name: str | None = None) -> Workload:
+    """A replay workload for a user-captured Spatter JSON file — the
+    ``benchmarks.run --pattern-file`` path. One variant per pattern
+    entry; each rides its regime-appropriate config and the shared
+    sweep engine."""
+    pats = load_spatter(path)
+    wname = name or f"trace_{Path(path).stem}"
+    _REGISTERED_TRACES[wname] = pats
+    return Workload(
+        name=wname,
+        figure="trace",
+        title=f"trace replay of {Path(path).name} "
+              f"({len(pats)} pattern{'s' if len(pats) != 1 else ''})",
+        tags=("spatter", "trace"),
+        variants=_trace_variants(pats),
+        plan=SweepPlan.product(
+            env_axis((1 << 10, 1 << 14), (1 << 10, 1 << 14, 1 << 17))),
+        derived=_trace_derived,
+    )
+
+
+# The committed built-in capture: an MS1 mixed-stride gather (three gap
+# jumps per 16-index period — value-dependent) next to the same file's
+# UNIFORM:8:4 entry (affine — rides the strided regime). Identical JSON
+# is committed at benchmarks/patterns/spatter_ms1.json for the CLI path.
+_BUILTIN_MS1 = """\
+[
+  {"kernel": "Gather", "pattern": "MS1:16:4,8,12:32", "count": 1024},
+  {"kernel": "Gather", "pattern": "UNIFORM:8:4", "count": 1024}
+]
+"""
+
+
+def trace_report(names: set[str] | None = None) -> dict:
+    """Ledger block for the smoke run: per trace workload, the parsed
+    provenance of every pattern entry plus a *live* bit-exact replay
+    check (``replay_exact`` against the direct numpy replay of the
+    JSON semantics) — the integrity gate ``scripts/ci.sh`` enforces."""
+    out: dict = {}
+    for wname, pats in _REGISTERED_TRACES.items():
+        if names is not None and wname not in names:
+            continue
+        out[wname] = {
+            "source": pats[0].source if pats else None,
+            "patterns": [
+                {"entry": sp.entry, "kernel": sp.kernel, "form": sp.form,
+                 "length": sp.length, "delta": sp.delta,
+                 "affine": sp.affine_stride is not None,
+                 "pattern_hash": sp.pattern_hash,
+                 "bitexact": replay_exact(sp, n=256)}
+                for sp in pats
+            ],
+        }
+    return out
+
+
+def register_trace() -> None:
+    """Register the built-in ``spatter_ms1`` trace-replay workload."""
+    ms1, uniform = parse_spatter(_BUILTIN_MS1, source="builtin:spatter_ms1")
+    _REGISTERED_TRACES["spatter_ms1"] = (ms1, uniform)
+    register(Workload(
+        name="spatter_ms1",
+        figure="trace",
+        title="trace-driven Spatter replay: MS1 mixed-stride vs UNIFORM",
+        tags=("spatter", "trace"),
+        variants=(
+            VariantSpec("ms1", _trace_config(ms1),
+                        pattern=lambda env, sp=ms1: sp.pattern_spec()),
+            VariantSpec("uniform", _trace_config(uniform),
+                        pattern=lambda env, sp=uniform: sp.pattern_spec()),
+        ),
+        plan=SweepPlan.product(
+            env_axis((1 << 10, 1 << 14, 1 << 17),
+                     (1 << 10, 1 << 14, 1 << 17, 1 << 20))),
+        derived=_trace_derived,
+    ))

@@ -448,11 +448,16 @@ def test_run_list_tag_filter(capsys):
     main(["--list", "--tag", "spatter"])
     out = capsys.readouterr().out
     listed = {ln.split()[0] for ln in out.strip().splitlines()}
-    assert listed == {"spatter_uniform", "spatter_nonuniform"}
+    assert listed == {"spatter_uniform", "spatter_nonuniform", "spatter_ms1"}
     main(["--list", "--tag", "latency,mess"])
     out = capsys.readouterr().out
     listed = {ln.split()[0] for ln in out.strip().splitlines()}
-    assert listed == {"mess_load_sweep", "pointer_chase", "mess_calibrated"}
+    assert listed == {"mess_load_sweep", "pointer_chase", "mess_calibrated",
+                      "mess_contended"}
+    main(["--list", "--tag", "trace"])
+    out = capsys.readouterr().out
+    listed = {ln.split()[0] for ln in out.strip().splitlines()}
+    assert listed == {"spatter_ms1", "mess_contended"}
     # the custom paper-figure runners belong to the family too
     main(["--list", "--tag", "paper-figs"])
     out = capsys.readouterr().out

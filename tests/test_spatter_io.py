@@ -1,0 +1,385 @@
+"""Trace-driven Spatter replay + multi-pattern mixes: the conformance
+layer for PR 10's trace subsystem.
+
+Three test families:
+
+* **Golden fixtures** — the committed JSON captures under
+  ``tests/fixtures/spatter/`` parse to exactly the documented index
+  semantics, land on the regime the affine detector promises, and
+  replay **bit-exactly** against a direct numpy replay of the JSON.
+  Malformed files are rejected with a typed :class:`SpatterParseError`
+  (stable ``reason`` slug), never a stack trace from inside numpy.
+* **Property tests** — random Spatter patterns (uniform / MS1 / index
+  list, via hypothesis or the deterministic stub) round-trip through
+  parse -> spec -> replay with index-trace and byte-count equality
+  against an independent reconstruction from the raw JSON fields.
+* **Mix accounting** — ``mix_patterns`` composes components into one
+  executable whose records carry the per-pattern byte split, whose
+  fingerprints are stable across factory rebuilds (journal/cache
+  identity), and whose validation replays every component's oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Driver,
+    DriverConfig,
+    TranslationCache,
+    gather,
+    identity,
+    lower_jax,
+    mix_patterns,
+    mix_space,
+    pointer_chase,
+    triad,
+)
+from repro.core.domain import Affine, domain
+from repro.core.staging import fingerprint_pattern
+from repro.suite.spatter_io import (
+    MAX_PATTERN_LEN,
+    SpatterParseError,
+    load_spatter,
+    parse_spatter,
+    replay_exact,
+    trace_workload,
+)
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "spatter"
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: parse -> exact index semantics -> regime placement
+# ---------------------------------------------------------------------------
+
+def test_uniform_fixture_parses_to_affine_strides():
+    pats = load_spatter(FIXTURES / "uniform.json")
+    assert [p.kernel for p in pats] == ["gather", "scatter"]
+    assert all(p.form == "uniform" for p in pats)
+    g, s = pats
+    assert g.indices == tuple(4 * j for j in range(8))
+    assert g.delta == 32            # seamless continuation: L * stride
+    assert g.affine_stride == (4, 0)
+    assert s.indices == tuple(2 * j for j in range(16))
+    assert s.delta == 32            # explicit in the file
+    assert s.affine_stride == (2, 0)
+    # affine traces ride the ordinary strided regime: no custom kernel
+    for p in pats:
+        spec = p.pattern_spec()
+        assert spec.kernel is None and spec.oracle is None
+        assert spec.trace == p.trace_stamp
+
+
+def test_ms1_fixture_parses_to_gap_jumps():
+    pats = load_spatter(FIXTURES / "ms1.json")
+    m16, m8 = pats
+    # MS1:16:4,8,12:32 — stride-1 runs of 4, +32 jump at each break
+    assert m16.indices == (0, 1, 2, 3, 35, 36, 37, 38,
+                           70, 71, 72, 73, 105, 106, 107, 108)
+    assert m16.delta == 109         # default: max index + 1
+    assert m16.affine_stride is None
+    # MS1:8:4:64 with explicit delta
+    assert m8.indices == (0, 1, 2, 3, 67, 68, 69, 70)
+    assert m8.delta == 128
+    # value-dependent traces ride the bound-index kernel regime
+    for p in pats:
+        spec = p.pattern_spec()
+        assert spec.kernel is not None and spec.oracle is not None
+        assert {s.name for s in spec.spaces} == {"D", "S", "I"}
+
+
+def test_index_list_fixture_round_trips_verbatim():
+    pats = load_spatter(FIXTURES / "index_list.json")
+    g, s = pats
+    assert g.form == "index" and g.kernel == "gather"
+    assert g.indices == (0, 8, 2, 8, 33, 1, 5, 13)
+    assert g.delta == 34            # default: max index + 1
+    assert s.kernel == "scatter" and s.delta == 16
+    assert g.affine_stride is None and s.affine_stride is None
+
+
+def test_fixture_patterns_replay_bit_exactly():
+    """The acceptance property: every committed fixture pattern's spec
+    moves exactly the bytes a direct numpy replay of the JSON moves."""
+    for name in ("uniform.json", "ms1.json", "index_list.json"):
+        for sp in load_spatter(FIXTURES / name):
+            assert replay_exact(sp, n=256), (name, sp.entry)
+
+
+def test_compiled_ms1_gather_is_bit_exact_against_numpy_replay():
+    """End-to-end through the staged executable (not just the oracle):
+    one compiled sweep of the MS1 gather equals S[trace] bit-for-bit —
+    trace replay is pure data movement."""
+    import jax.numpy as jnp
+
+    sp = load_spatter(FIXTURES / "ms1.json")[0]
+    spec = sp.pattern_spec()
+    env = {"n": 512}
+    arrays = spec.allocate(env)
+    step = lower_jax(spec, identity(), env)
+    out = step({k: jnp.asarray(v) for k, v in arrays.items()})
+    want = np.asarray(arrays["S"])[sp.replay_indices(512)]
+    assert np.array_equal(np.asarray(out["D"]), want)
+
+
+# ---------------------------------------------------------------------------
+# structured rejection: typed reasons, not stack traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("text,reason", [
+    ("{not json", "invalid_json"),
+    ("42", "bad_entry"),
+    ("[]", "empty_pattern"),
+    ("[42]", "bad_entry"),
+    ('[{"kernel": "Gather"}]', "bad_entry"),
+    ('[{"kernel": "MultiScatter", "pattern": [1]}]', "unknown_kernel"),
+    ('[{"pattern": "FANCY:8:1"}]', "bad_pattern"),
+    ('[{"pattern": "UNIFORM:8"}]', "bad_pattern"),
+    ('[{"pattern": "UNIFORM:8:x"}]', "bad_pattern"),
+    ('[{"pattern": 3.5}]', "bad_pattern"),
+    ('[{"pattern": [1, 2.5]}]', "bad_pattern"),
+    ('[{"pattern": "UNIFORM:0:4"}]', "empty_pattern"),
+    ('[{"pattern": []}]', "empty_pattern"),
+    ('[{"pattern": "MS1:8:4"}]', "bad_ms1"),
+    ('[{"pattern": "MS1:8:0:32"}]', "bad_ms1"),
+    ('[{"pattern": "MS1:8:4,2:32"}]', "bad_ms1"),
+    ('[{"pattern": "MS1:8:4,6:32,32,32"}]', "bad_ms1"),
+    ('[{"pattern": "UNIFORM:4:-2"}]', "negative_index"),
+    ('[{"pattern": [3, -1]}]', "negative_index"),
+    ('[{"pattern": [1, 2], "delta": -4}]', "negative_index"),
+    (f'[{{"pattern": "UNIFORM:{MAX_PATTERN_LEN + 1}:1"}}]', "oversized"),
+])
+def test_malformed_files_reject_with_typed_reason(text, reason):
+    with pytest.raises(SpatterParseError) as ei:
+        parse_spatter(text, source="inline")
+    assert ei.value.reason == reason
+    assert "inline" in str(ei.value)
+
+
+def test_oversized_index_list_rejects():
+    text = json.dumps([{"pattern": list(range(MAX_PATTERN_LEN + 1))}])
+    with pytest.raises(SpatterParseError) as ei:
+        parse_spatter(text)
+    assert ei.value.reason == "oversized"
+
+
+def test_unreadable_file_rejects_typed():
+    with pytest.raises(SpatterParseError) as ei:
+        load_spatter(FIXTURES / "does_not_exist.json")
+    assert ei.value.reason == "bad_entry"
+
+
+# ---------------------------------------------------------------------------
+# property tests: parse -> replay equals a direct replay of the JSON
+# ---------------------------------------------------------------------------
+
+@st.composite
+def spatter_entry(draw):
+    """A random Spatter JSON entry plus the independently-computed
+    expected index period."""
+    form = draw(st.sampled_from(["uniform", "ms1", "index"]))
+    kernel = draw(st.sampled_from(["Gather", "Scatter"]))
+    entry: dict = {"kernel": kernel}
+    if form == "uniform":
+        L = draw(st.integers(1, 12))
+        stride = draw(st.integers(0, 9))
+        entry["pattern"] = f"UNIFORM:{L}:{stride}"
+        expect = [j * stride for j in range(L)]
+        default_delta = (expect[-1] - expect[0]
+                         + (stride if L > 1 else 1))
+    elif form == "ms1":
+        L = draw(st.integers(2, 16))
+        breaks = sorted({draw(st.integers(1, L - 1))
+                         for _ in range(draw(st.integers(1, 3)))})
+        gaps = [draw(st.integers(1, 64)) for _ in breaks]
+        entry["pattern"] = (f"MS1:{L}:{','.join(map(str, breaks))}:"
+                            f"{','.join(map(str, gaps))}")
+        gap_at = dict(zip(breaks, gaps))
+        expect = [0]
+        for j in range(1, L):
+            expect.append(expect[-1] + gap_at.get(j, 1))
+        default_delta = max(expect) + 1
+    else:
+        expect = [draw(st.integers(0, 500))
+                  for _ in range(draw(st.integers(1, 24)))]
+        entry["pattern"] = list(expect)
+        default_delta = max(expect) + 1
+    if draw(st.booleans()):
+        entry["delta"] = draw(st.integers(0, 512))
+        delta = entry["delta"]
+    else:
+        delta = default_delta
+    return entry, expect, delta
+
+
+@settings(max_examples=40, deadline=None)
+@given(spatter_entry(), st.sampled_from([17, 64, 256]))
+def test_parsed_replay_matches_direct_numpy_replay(case, n):
+    entry, expect, delta = case
+    sp = parse_spatter(json.dumps([entry]), source="prop")[0]
+    assert sp.indices == tuple(expect)
+    assert sp.delta == delta
+    # index-trace equality: the module's replay against an independent
+    # vectorized reconstruction from the raw JSON fields
+    idx = np.asarray(expect, dtype=np.int64)
+    k = np.arange(n, dtype=np.int64)
+    direct = (idx[k % len(idx)] + delta * (k // len(idx))) % n
+    assert np.array_equal(sp.replay_indices(n), direct)
+    # byte-count equality: the spec accounts exactly the bytes one
+    # sweep of the replay moves (affine: payload read+write; bound
+    # index: index read + payload read + write, 4 B each)
+    spec = sp.pattern_spec()
+    env = {"n": n}
+    pts = spec.domain.point_count(env)
+    assert pts == n
+    bpp = spec.bytes_per_point()
+    assert bpp == (8 if sp.affine_stride is not None else 12)
+    assert bpp * pts == bpp * n
+    # and the moved payload is bit-identical to the direct replay
+    assert replay_exact(sp, n=n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(spatter_entry())
+def test_pattern_hash_tracks_semantics_not_source(case):
+    entry, _expect, _delta = case
+    a = parse_spatter(json.dumps([entry]), source="fileA")[0]
+    b = parse_spatter(json.dumps([entry]), source="fileB")[0]
+    assert a.pattern_hash == b.pattern_hash
+    assert a.trace_stamp["source"] != b.trace_stamp["source"]
+    flipped = dict(entry)
+    flipped["kernel"] = ("Scatter" if a.kernel == "gather" else "Gather")
+    c = parse_spatter(json.dumps([flipped]), source="fileA")[0]
+    assert c.pattern_hash != a.pattern_hash
+
+
+# ---------------------------------------------------------------------------
+# trace provenance on records and in fingerprints
+# ---------------------------------------------------------------------------
+
+def test_records_carry_trace_provenance():
+    sp = load_spatter(FIXTURES / "ms1.json")[0]
+    d = Driver(lambda env: sp.pattern_spec(),
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, validate_n=64),
+               cache=TranslationCache())
+    (rec,) = d.run([256])
+    assert rec.extra["trace"] == sp.trace_stamp
+    assert rec.extra["trace"]["form"] == "ms1"
+    assert rec.extra["trace"]["pattern_hash"] == sp.pattern_hash
+
+
+def test_fingerprint_distinguishes_trace_and_is_rebuild_stable():
+    pats = load_spatter(FIXTURES / "ms1.json")
+    f0 = fingerprint_pattern(pats[0].pattern_spec())
+    f0b = fingerprint_pattern(
+        load_spatter(FIXTURES / "ms1.json")[0].pattern_spec())
+    assert f0 == f0b                     # journal/cache identity holds
+    assert f0 != fingerprint_pattern(pats[1].pattern_spec())
+    # same structure, different provenance -> different fingerprint
+    spec = pats[0].pattern_spec()
+    moved = dataclasses.replace(
+        spec, trace={**spec.trace, "source": "elsewhere.json"})
+    assert fingerprint_pattern(moved) != f0
+
+
+def test_trace_workload_runs_fixture_through_sweep_engine():
+    from repro.suite.runner import collect_records
+
+    w = trace_workload(FIXTURES / "ms1.json", name="trace_test_ms1")
+    recs = collect_records(w, quick=True)
+    assert len(recs) == 2 * 2            # 2 patterns x 2 quick env points
+    for lbl, rec in recs:
+        assert lbl.startswith("trace/")
+        assert rec.extra["trace"]["form"] == "ms1"
+        assert rec.gbs > 0
+
+
+# ---------------------------------------------------------------------------
+# multi-pattern mixes: composition, accounting, validation
+# ---------------------------------------------------------------------------
+
+def _demo_mix(n=256, gn=64):
+    return mix_patterns(
+        (("triad", triad(), {"n": n}), ("gather", gather(stride=8), {"n": gn})),
+        name="mixdemo")
+
+
+def test_mix_metadata_accounts_component_bytes():
+    m = _demo_mix()
+    assert m.mix["primary"] == "triad"
+    comps = {c["label"]: c for c in m.mix["components"]}
+    assert comps["triad"]["points"] == 256
+    assert comps["triad"]["bytes"] == 256 * triad().bytes_per_point()
+    assert comps["gather"]["bytes"] == 64 * gather(stride=8).bytes_per_point()
+    assert sum(c["fraction"] for c in m.mix["components"]) == pytest.approx(1)
+    # component spaces are namespaced and disjoint
+    names = {s.name for s in m.spaces}
+    assert mix_space(0, "A") in names and mix_space(1, "D") in names
+
+
+def test_mix_records_carry_per_pattern_byte_split():
+    d = Driver(lambda env: _demo_mix(env["n"], env["n"] // 4),
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, validate_n=64),
+               cache=TranslationCache())
+    (rec,) = d.run([{"n": 256}])
+    mix = rec.extra["mix"]
+    assert mix["primary"] == "triad"
+    assert len(mix["components"]) == 2
+    assert all(c["bytes"] > 0 for c in mix["components"])
+    total = sum(c["bytes"] for c in mix["components"]) * rec.ntimes
+    assert rec.gbs * rec.seconds * 1e9 == pytest.approx(total)
+
+
+def test_mix_validates_every_component_against_its_oracle():
+    # includes a custom-kernel component: the chase's own oracle replays
+    # inside the mix oracle
+    m = mix_patterns(
+        (("triad", triad(), {"n": 128}),
+         ("chase", pointer_chase(), {"n": 64})),
+        name="mix_with_kernel")
+    d = Driver(lambda env: m,
+               DriverConfig(template="unified", programs=1, ntimes=2,
+                            reps=1, validate_n=64),
+               cache=TranslationCache())
+    d.validate({"n": 128})               # raises ValidateFailure on drift
+
+
+def test_mix_fingerprint_stable_across_rebuilds_and_ratio_sensitive():
+    f1 = fingerprint_pattern(_demo_mix())
+    f2 = fingerprint_pattern(_demo_mix())
+    assert f1 == f2
+    assert f1 != fingerprint_pattern(_demo_mix(gn=128))
+
+
+def test_mix_rejects_bad_compositions():
+    with pytest.raises(ValueError, match="at least one"):
+        mix_patterns(())
+    with pytest.raises(ValueError, match="duplicate"):
+        mix_patterns((("a", triad(), {"n": 64}), ("a", triad(), {"n": 64})))
+    with pytest.raises(ValueError, match="primary"):
+        mix_patterns((("a", triad(), {"n": 64}),), primary="b")
+    tri = dataclasses.replace(
+        triad(), domain=domain(("i", 0, "n"), ("j", 0, Affine.of("i"))))
+    with pytest.raises(ValueError, match="rectangular"):
+        mix_patterns((("tri", tri, {"n": 64}),))
+
+
+def test_contended_workload_isolated_vs_loaded_split():
+    from repro.suite import load_builtins, workload
+    from repro.suite.runner import collect_records
+
+    load_builtins()
+    recs = collect_records(workload("mess_contended"), quick=True)
+    parts = {len(r.extra["mix"]["components"]) for _, r in recs}
+    assert parts == {1, 2}               # isolated baseline + contended
+    for _, r in recs:
+        for c in r.extra["mix"]["components"]:
+            assert c["bytes"] > 0

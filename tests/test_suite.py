@@ -175,16 +175,20 @@ _EXPECTED_PATHS = {
     "pointer_chase": {None: "specialized"},        # custom kernel
     "spatter_nonuniform": {None: "gather"},        # unified programs=4
     "mess_calibrated": {None: "specialized"},      # zip: one env point/group
+    "mess_contended": {None: "specialized"},       # mix kernel
     "device_sweep": {None: "strided"},             # independent template
     "derived_attention_kv": {None: "strided"},     # independent template
     "derived_moe_dispatch": {None: "specialized"},  # custom kernel
     "derived_lm_embed": {None: "specialized"},     # custom kernel
     "derived_train_update": {None: "strided"},     # independent template
+    "spatter_ms1": {"ms1": "specialized",          # bound-index kernel
+                    "uniform": "gather"},          # affine trace, programs=4
 }
 
 # parametric=True must raise for these (custom kernel with no
 # variant-level parametric pin)
-_TRUE_RAISES = {"pointer_chase", "derived_moe_dispatch", "derived_lm_embed"}
+_TRUE_RAISES = {"pointer_chase", "derived_moe_dispatch", "derived_lm_embed",
+                "spatter_ms1", "mess_contended"}
 
 # Window dimensionality the strided regime must resolve per (workload,
 # variant): 1-D nests window the lane band alone; the stencil nests
